@@ -1,0 +1,51 @@
+"""Benchmark driver: one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * fig1 groups  — per-algorithm wall time; derived = time-to-1e-4 rel err
+  * ablations    — per-variant wall time; derived = final rel err
+  * lm_step      — per-arch train-step time; derived = decode-step time
+
+Full JSON artifacts land in ``results/bench/``.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=8,
+                    help="instance divisor vs paper size (1 = paper size)")
+    ap.add_argument("--max-iters", type=int, default=400)
+    ap.add_argument("--skip-lm", action="store_true")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+
+    from benchmarks import fig1
+    rows = fig1.main(scale=args.scale, max_iters=args.max_iters)
+    for r in rows:
+        t4 = r.get("t_1e-04")
+        derived = f"t(1e-4)={t4}s" if t4 is not None else \
+            f"rel_final={r['rel_err_final']:.2e}"
+        print(f"{r['group']}/{r['algo']}/seed{r['seed']},"
+              f"{r['wall_s'] * 1e6 / max(1, r['iters']):.0f},{derived}")
+
+    from benchmarks import ablations
+    out = ablations.main()
+    for section, rows in out.items():
+        for r in rows:
+            rel = r.get("rel_err")
+            print(f"ablate_{section}/{r['variant'].replace(' ', '_')},"
+                  f"{r['wall_s'] * 1e6 / max(1, r['iters']):.0f},"
+                  f"rel={'n/a' if rel is None else f'{rel:.2e}'}")
+
+    if not args.skip_lm:
+        from benchmarks import lm_step
+        for r in lm_step.main():
+            print(f"lm_step/{r['arch']},{r['train_us']},"
+                  f"decode_us={r['decode_us']}")
+
+
+if __name__ == "__main__":
+    main()

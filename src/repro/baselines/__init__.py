@@ -1,0 +1,4 @@
+from repro.baselines import admm, fista, gauss_seidel, grock
+from repro.baselines.fista import BaselineResult
+
+__all__ = ["admm", "fista", "gauss_seidel", "grock", "BaselineResult"]

@@ -1,0 +1,72 @@
+"""ADMM for Lasso [31, 32] (paper §4 benchmark (ii)).
+
+Splitting  min ‖Ax−b‖² + c‖z‖₁  s.t. x = z, scaled-dual form:
+
+  x ← (2AᵀA + ρI)⁻¹ (2Aᵀb + ρ(z − u))
+  z ← soft(x + u, c/ρ)
+  u ← u + x − z
+
+The x-update solve is done once-factorized via the Woodbury identity on the
+thin side (m ≪ n in all paper instances):
+
+  (ρI + 2AᵀA)⁻¹ v = (1/ρ)·(v − Aᵀ (ρ/2·I + AAᵀ)⁻¹ A v)
+
+with a cached Cholesky factorization of the m×m Gram matrix — the standard
+production trick; the factorization time is charged to the history clock
+(same methodology as FISTA's init cost in Fig. 1).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import cho_factor, cho_solve
+
+from repro.baselines.fista import BaselineResult
+from repro.core.prox import soft_threshold
+from repro.problems.base import Problem
+
+
+def solve(problem: Problem, rho: float = 10.0, x0=None,
+          max_iters: int = 2000, tol: float = 1e-6) -> BaselineResult:
+    t_start = time.perf_counter()
+    A = problem.data.get("A")
+    b = problem.data.get("b")
+    if A is None:
+        raise ValueError("ADMM baseline requires quadratic data A, b")
+    m, n = A.shape
+    c = problem.g_weight
+    if x0 is None:
+        x0 = jnp.zeros((n,), jnp.float32)
+
+    Atb2 = 2.0 * (A.T @ b)
+    gram = A @ A.T + 0.5 * rho * jnp.eye(m, dtype=A.dtype)
+    chol = cho_factor(gram)
+
+    def x_update(v):
+        return (v - A.T @ cho_solve(chol, A @ v)) / rho
+
+    @jax.jit
+    def step(x, z, u):
+        x_new = x_update(Atb2 + rho * (z - u))
+        z_new = soft_threshold(x_new + u, c / rho)
+        u_new = u + x_new - z_new
+        v = problem.v(z_new)
+        stat = jnp.max(jnp.abs(x_new - z_new))  # primal residual ∞-norm
+        return x_new, z_new, u_new, v, stat
+
+    x = z = u = x0
+    hist = {"V": [], "time": [], "stat": []}
+    converged = False
+    it = 0
+    for it in range(max_iters):
+        x, z, u, v, stat = step(x, z, u)
+        hist["V"].append(float(v))
+        hist["stat"].append(float(stat))
+        hist["time"].append(time.perf_counter() - t_start)
+        if float(stat) <= tol:
+            converged = True
+            break
+    return BaselineResult(x=z, iters=it + 1, converged=converged,
+                          history=hist)

@@ -1,0 +1,152 @@
+"""Checkpointing: atomic, async-capable, elastic-restore.
+
+Format: one directory per step —
+
+    <dir>/step_000123/
+        manifest.json       # leaf paths, shapes, dtypes, step, wall time
+        <leaf-id>.npy       # one file per pytree leaf (host numpy)
+    <dir>/LATEST            # atomically-renamed pointer file
+
+Design points for the 1000-node posture (documented here, exercised at
+host scale in tests):
+
+* **Atomicity** — writes land in ``step_X.tmp`` and are renamed only after
+  the manifest fsync; a crash mid-write can never produce a half-valid
+  checkpoint that restore would pick up.
+* **Async** — ``save_async`` snapshots device arrays to host (the only
+  blocking part) and hands file I/O to a writer thread; training continues
+  during serialization.
+* **Elastic restore** — leaves are stored as *full* (unsharded) arrays, so
+  a checkpoint taken on one topology restores onto any other mesh: restore
+  takes target shardings and ``device_put``s each leaf accordingly.  This is
+  the standard resize-by-full-gather strategy; at extreme scale one would
+  swap the npy container for a sharded-file format without touching the
+  interface.
+* **Retention** — ``keep`` most recent checkpoints are retained, older ones
+  reaped after a successful write (never before).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+import jax
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _leaf_names(n: int):
+    return [f"leaf_{i:05d}" for i in range(n)]
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------- #
+    def save(self, step: int, tree) -> Path:
+        """Blocking atomic save."""
+        host = [np.asarray(x) for x in _flatten(tree)[0]]
+        return self._write(step, host)
+
+    def save_async(self, step: int, tree) -> None:
+        """Snapshot to host now; write in a background thread."""
+        self.wait()
+        host = [np.asarray(x) for x in _flatten(tree)[0]]  # device→host sync
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host), daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_leaves) -> Path:
+        final = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        names = _leaf_names(len(host_leaves))
+        for name, arr in zip(names, host_leaves):
+            np.save(tmp / f"{name}.npy", arr)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "leaves": [{"name": n, "shape": list(a.shape),
+                        "dtype": str(a.dtype)}
+                       for n, a in zip(names, host_leaves)],
+        }
+        with open(tmp / "manifest.json", "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)                       # atomic publish
+        latest_tmp = self.dir / "LATEST.tmp"
+        latest_tmp.write_text(final.name)
+        latest_tmp.rename(self.dir / "LATEST")  # atomic pointer swap
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        ckpts = sorted(self.dir.glob("step_????????"))
+        for old in ckpts[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(old, ignore_errors=True)
+
+    # ------------------------------------------------------------- #
+    def latest_step(self) -> int | None:
+        ptr = self.dir / "LATEST"
+        if not ptr.exists():
+            return None
+        name = ptr.read_text().strip()
+        if not (self.dir / name / "manifest.json").exists():
+            # pointer ahead of a reaped/corrupt dir: fall back to scan
+            ckpts = sorted(self.dir.glob("step_????????"))
+            if not ckpts:
+                return None
+            name = ckpts[-1].name
+        return int(name.split("_")[1])
+
+    def restore(self, tree_like, step: int | None = None,
+                shardings=None):
+        """Restore into the structure of ``tree_like``.
+
+        ``shardings``: optional matching pytree of NamedShardings — the
+        elastic path: full arrays are resharded onto the *current* mesh,
+        which may differ from the one that wrote the checkpoint.
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        path = self.dir / f"step_{step:08d}"
+        leaves, treedef = _flatten(tree_like)
+        names = _leaf_names(len(leaves))
+        sh_leaves = (_flatten(shardings)[0] if shardings is not None
+                     else [None] * len(leaves))
+        out = []
+        for name, ref, sh in zip(names, leaves, sh_leaves):
+            arr = np.load(path / f"{name}.npy")
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise ValueError(
+                    f"checkpoint leaf {name} shape {arr.shape} != "
+                    f"expected {ref.shape}")
+            if sh is not None:
+                out.append(jax.device_put(arr, sh))
+            else:
+                out.append(jax.device_put(arr))
+        return jax.tree_util.tree_unflatten(treedef, out), step

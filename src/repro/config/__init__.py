@@ -1,0 +1,17 @@
+from repro.config.base import (
+    MeshConfig,
+    ModelConfig,
+    ShapeConfig,
+    SHAPES,
+    SolverConfig,
+    TrainConfig,
+)
+
+__all__ = [
+    "MeshConfig",
+    "ModelConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "SolverConfig",
+    "TrainConfig",
+]

@@ -1,0 +1,244 @@
+"""Configuration dataclasses for the FlexJAX framework.
+
+Everything in the framework is driven by three frozen dataclasses:
+
+* :class:`ModelConfig`   — architecture hyperparameters (one per ``--arch`` id).
+* :class:`ShapeConfig`   — an (input-shape × step-kind) workload cell.
+* :class:`TrainConfig`   — optimizer / loop / fault-tolerance settings.
+
+Configs are plain data: no jax imports happen here, so importing a config never
+touches device state (required for the 512-device dry-run bootstrap order).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters.
+
+    ``family`` selects the block stack:
+      - ``dense``   : pre-norm GQA decoder (llama-style).
+      - ``moe``     : dense attention + token-choice top-k MoE FFN.
+      - ``ssm``     : attention-free Mamba2 (SSD) stack.
+      - ``hybrid``  : Mamba2 backbone + shared attention block every
+                      ``attn_every`` layers (Zamba2-style).
+      - ``encdec``  : encoder-decoder with cross-attention (Seamless backbone;
+                      modality frontend is a stub that supplies precomputed
+                      frame embeddings).
+      - ``vlm``     : decoder with M-RoPE (Qwen2-VL backbone; vision frontend
+                      stubbed as precomputed patch embeddings).
+    """
+
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # --- SSM (mamba2 / zamba2) ---
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    ssm_conv_width: int = 4
+
+    # --- MoE ---
+    num_experts: int = 0
+    moe_top_k: int = 0
+    capacity_factor: float = 1.25
+    # d_ff above is the *per-expert* hidden width for MoE families.
+
+    # --- hybrid (zamba2) ---
+    attn_every: int = 0  # insert the shared attention block every k layers
+
+    # --- encoder-decoder (seamless) ---
+    enc_layers: int = 0
+
+    # --- positional encoding ---
+    rope_theta: float = 10_000.0
+    use_mrope: bool = False  # Qwen2-VL M-RoPE (3 position streams)
+
+    # --- misc ---
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    # Sliding-window / local attention width (0 = full causal). Used by the
+    # beyond-paper perf work; full configs default to the published attention.
+    attn_window: int = 0
+    source: str = ""  # provenance string "[arXiv:... ; tier]"
+
+    # ------------------------------------------------------------------ #
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """May run the 512k-context decode cell (SSM / hybrid only)."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.family == "encdec"
+
+    @property
+    def d_inner(self) -> int:
+        """Mamba2 inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim if self.ssm_headdim else 0
+
+    def replace(self, **kw: Any) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # Parameter count estimate (used by roofline MODEL_FLOPS = 6·N·D).
+    def param_count(self, active_only: bool = False) -> int:
+        d, v = self.d_model, self.vocab_size
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        per_attn = d * (self.num_heads * self.head_dim) \
+            + 2 * d * (self.num_kv_heads * self.head_dim) \
+            + (self.num_heads * self.head_dim) * d
+        per_dense_mlp = 3 * d * self.d_ff
+        n = emb
+        if self.family in ("dense", "vlm"):
+            n += self.num_layers * (per_attn + per_dense_mlp)
+        elif self.family == "moe":
+            e = self.moe_top_k if active_only else self.num_experts
+            n += self.num_layers * (per_attn + e * 3 * d * self.d_ff)
+        elif self.family == "ssm":
+            din = self.d_inner
+            per = d * (2 * din + 2 * self.ssm_state * 0)  # in_proj (z,x)
+            per += d * din  # out_proj
+            per += din * 2 * self.ssm_state  # B,C projections (per head group)
+            per += din * 1  # dt proj
+            n += self.num_layers * per
+        elif self.family == "hybrid":
+            din = self.d_inner
+            per = d * 2 * din + d * din + din * 2 * self.ssm_state + din
+            n += self.num_layers * per
+            n_attn_blocks = 1  # shared weights
+            n += n_attn_blocks * (per_attn + per_dense_mlp)
+        elif self.family == "encdec":
+            n += self.enc_layers * (per_attn + per_dense_mlp)
+            n += self.num_layers * (2 * per_attn + per_dense_mlp)  # self+cross
+        return n
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One workload cell: which step function is lowered and its shapes.
+
+    ``kind``:
+      - ``train``   : ``train_step`` over (global_batch, seq_len) tokens.
+      - ``prefill`` : ``prefill_step`` — forward pass building a KV cache.
+      - ``decode``  : ``serve_step`` — ONE new token against a KV cache of
+                      ``seq_len`` (the assignment's decode_*/long_* semantics).
+    """
+
+    name: str
+    kind: str
+    seq_len: int
+    global_batch: int
+
+    @property
+    def tokens(self) -> int:
+        """Tokens *processed* per step (decode processes batch×1)."""
+        if self.kind == "decode":
+            return self.global_batch
+        return self.global_batch * self.seq_len
+
+
+# The four assigned shapes (identical across the LM pool).
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524_288, 1),
+}
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Optimizer + training-loop settings."""
+
+    optimizer: str = "flexa"  # "flexa" | "adamw"
+    # --- FLEXA (Algorithm 1) ---
+    flexa_rho: float = 0.5          # greedy selection factor ρ ∈ (0, 1]
+    flexa_gamma0: float = 0.9       # γ⁰ for Eq. (4)
+    flexa_theta: float = 1e-5       # θ  for Eq. (4)
+    flexa_tau0: float = 1.0         # initial proximal weight τᵢ
+    flexa_l1: float = 0.0           # c in G(x)=c‖x‖₁ (0 ⇒ G≡0)
+    flexa_diag_q: bool = False      # diagonal Qᵢ curvature (beyond-paper)
+    flexa_tau_adapt: bool = True    # double/halve rule from §4
+    flexa_select: str = "greedy"    # "greedy" | "all" (full Jacobi)
+    # --- AdamW baseline ---
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    weight_decay: float = 0.1
+    # --- loop ---
+    steps: int = 100
+    log_every: int = 10
+    seed: int = 0
+    microbatch: int = 0             # 0 ⇒ no gradient accumulation
+    remat: bool = True
+    # --- fault tolerance ---
+    ckpt_dir: str = ""
+    ckpt_every: int = 50
+    ckpt_keep: int = 3
+    ckpt_async: bool = True
+    resume: bool = True
+    # --- distributed optimization tricks ---
+    grad_compression: str = "none"  # "none" | "topk" | "int8"
+    grad_topk_frac: float = 0.1
+    pipeline: bool = False          # GPipe over the data axis (dense/vlm)
+    pp_microbatches: int = 16
+    # Activation-sharding strategy for train steps:
+    #   "tp"    — TP+SP over `model` (default; best for small per-device
+    #             batch quotas and inference);
+    #   "zero3" — batch over BOTH axes, weights gathered per layer
+    #             (ZeRO-3); wins when per-device activations ≪ weights,
+    #             i.e. large global batch + deep dense models.
+    strategy: str = "tp"
+
+
+@dataclass(frozen=True)
+class SolverConfig:
+    """Settings for the paper-faithful convex solver (Algorithm 1)."""
+
+    rho: float = 0.5
+    gamma0: float = 0.9
+    theta: float = 1e-5
+    tau0: float = 0.0               # 0 ⇒ paper default tr(AᵀA)/2n
+    tau_adapt: bool = True
+    tau_grow: float = 2.0
+    tau_shrink: float = 0.5
+    tau_patience: int = 10
+    surrogate: str = "exact_block"  # "linear" | "exact_block" | "newton_cg"
+    inexact_alpha1: float = 0.0     # εᵏ schedule (0 ⇒ exact subproblems)
+    inexact_alpha2: float = 1.0
+    max_iters: int = 2_000
+    tol: float = 1e-6               # stop when ‖x̂(x)−x‖∞ ≤ tol
+    jacobi: bool = False            # True ⇒ Sᵏ = 𝒩 (full parallel Jacobi)
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: tuple = (16, 16)
+    axes: tuple = ("data", "model")
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n

@@ -1,0 +1,68 @@
+"""Architecture registry: maps ``--arch`` ids to configs.
+
+Every assigned architecture is selectable by its public id (exactly as listed
+in the assignment), plus the paper's own Lasso problem configurations.
+"""
+from __future__ import annotations
+
+from repro.config.base import ModelConfig, ShapeConfig, SHAPES
+
+from repro.configs import (
+    deepseek_67b,
+    mamba2_1p3b,
+    moonshot_v1_16b_a3b,
+    phi3_medium_14b,
+    qwen2_vl_72b,
+    qwen3_moe_30b_a3b,
+    seamless_m4t_large_v2,
+    stablelm_3b,
+    yi_6b,
+    zamba2_1p2b,
+)
+
+_MODULES = {
+    "zamba2-1.2b": zamba2_1p2b,
+    "mamba2-1.3b": mamba2_1p3b,
+    "phi3-medium-14b": phi3_medium_14b,
+    "yi-6b": yi_6b,
+    "deepseek-67b": deepseek_67b,
+    "stablelm-3b": stablelm_3b,
+    "moonshot-v1-16b-a3b": moonshot_v1_16b_a3b,
+    "qwen3-moe-30b-a3b": qwen3_moe_30b_a3b,
+    "seamless-m4t-large-v2": seamless_m4t_large_v2,
+    "qwen2-vl-72b": qwen2_vl_72b,
+}
+
+ARCHS: dict[str, ModelConfig] = {k: m.CONFIG for k, m in _MODULES.items()}
+
+
+def get_config(arch: str) -> ModelConfig:
+    try:
+        return ARCHS[arch]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {arch!r}; available: {sorted(ARCHS)}") from None
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    return _MODULES[arch].reduced()
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether (arch × shape) is a runnable cell per the assignment rules."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, (
+            "long_500k requires sub-quadratic attention; "
+            f"{cfg.name} is pure full-attention (family={cfg.family}) — "
+            "skipped per assignment, see DESIGN.md §4")
+    return True, ""
+
+
+def iter_cells(include_skipped: bool = False):
+    """Yield (arch_id, ModelConfig, ShapeConfig, applicable, reason)."""
+    for arch_id, cfg in ARCHS.items():
+        for shape in SHAPES.values():
+            ok, why = cell_applicable(cfg, shape)
+            if ok or include_skipped:
+                yield arch_id, cfg, shape, ok, why

@@ -1,0 +1,32 @@
+"""seamless-m4t-large-v2 — encoder-decoder multimodal backbone.
+
+[arXiv:2308.11596; hf]  24L d_model=1024 16H (GQA kv=16) d_ff=8192
+vocab=256206.
+
+Per the assignment, only the transformer BACKBONE is modeled: the speech
+frontend is a stub — ``input_specs()`` supplies precomputed frame embeddings
+``(batch, enc_len, d_model)`` for the encoder, and the decoder operates on
+token ids with cross-attention to the encoder states.
+"""
+from repro.config.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    num_layers=24,       # decoder layers
+    enc_layers=24,       # encoder layers
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=8_192,
+    vocab_size=256_206,
+    source="[arXiv:2308.11596; hf]",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        num_layers=2, enc_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        head_dim=16, d_ff=128, vocab_size=256,
+    )

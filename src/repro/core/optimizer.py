@@ -1,0 +1,208 @@
+"""FLEXA as a large-model training optimizer (the paper's Algorithm 1 with
+parameter *tensors* as blocks).
+
+Mapping (DESIGN.md §3):
+
+* block xᵢ            = one parameter tensor (pytree leaf);
+* F                   = training loss (nonconvex — covered by Theorem 1);
+* P_i                 = linearization (choice (5)), optionally with a diagonal
+                        Qᵢ curvature estimate (grad² EMA, beyond-paper but
+                        admissible under A6);
+* G                   = c‖·‖₁ over selected tensors (sparsity-promoting
+                        training) or 0;
+* best response       = x̂ᵢ = prox_{g/dᵢ}(xᵢ − ∇ᵢF/dᵢ),  dᵢ = τᵢ·qᵢ;
+* Eᵢ                  = ‖x̂ᵢ − xᵢ‖₂  (the paper's Lasso choice, per tensor);
+* Sᵏ                  = greedy ρ-rule over tensors (or 𝒩 for full Jacobi);
+* γᵏ                  = Eq. (4) diminishing rule;
+* τ                   = §4 double/halve controller driven by the loss.
+
+State is O(#tensors) scalars + (optionally) one EMA pytree — compare Adam's
+2× full-parameter state.  At deepseek-67b scale that is ~800 scalars of
+controller state vs 134 GB of Adam moments: the paper's framework is
+naturally memory-lean, which matters for the 16 GB/chip budget.
+
+The per-tensor prox/update chain is delegated to
+``repro.kernels.ops.flexa_prox_update`` (fused Pallas kernel on TPU, jnp
+reference elsewhere).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import TrainConfig
+from repro.core import stepsize
+from repro.kernels import ops as kops
+
+
+class FlexaOptState(NamedTuple):
+    gamma: jnp.ndarray          # scalar γᵏ
+    tau: jnp.ndarray            # (n_blocks,) per-tensor τᵢ
+    v_prev: jnp.ndarray         # previous loss (τ controller)
+    consec_dec: jnp.ndarray
+    n_tau_changes: jnp.ndarray
+    step: jnp.ndarray
+    q_ema: Any                  # grad² EMA pytree (or None)
+
+
+MAX_TAU_CHANGES = 60
+
+
+def _l1_mask(path: tuple) -> bool:
+    """ℓ1 regularization applies to weight matrices, not embeddings/norms.
+
+    Embedding sparsity hurts token coverage and norm scales must stay dense;
+    this mirrors standard weight-decay masking practice.
+    """
+    name = "/".join(str(p) for p in path).lower()
+    return not any(s in name for s in ("embed", "norm", "scale", "bias"))
+
+
+def flexa_optimizer(cfg: TrainConfig):
+    """Returns (init_fn, update_fn).
+
+    ``update_fn(grads, state, params, loss)`` -> (new_params, new_state,
+    metrics).  The loss argument drives the §4 τ-controller; it is the same
+    scalar the training loop already computes — no extra collective.
+    """
+
+    def init(params) -> FlexaOptState:
+        leaves = jax.tree_util.tree_leaves(params)
+        n_blocks = len(leaves)
+        q_ema = None
+        if cfg.flexa_diag_q:
+            q_ema = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return FlexaOptState(
+            gamma=jnp.asarray(cfg.flexa_gamma0, jnp.float32),
+            tau=jnp.full((n_blocks,), cfg.flexa_tau0, jnp.float32),
+            v_prev=jnp.asarray(jnp.inf, jnp.float32),
+            consec_dec=jnp.asarray(0, jnp.int32),
+            n_tau_changes=jnp.asarray(0, jnp.int32),
+            step=jnp.asarray(0, jnp.int32),
+            q_ema=q_ema,
+        )
+
+    def update(grads, state: FlexaOptState, params, loss):
+        flat_params, treedef = jax.tree_util.tree_flatten_with_path(params)
+        paths = [p for p, _ in flat_params]
+        leaves_p = [v for _, v in flat_params]
+        leaves_g = jax.tree_util.tree_leaves(grads)
+
+        # Optional diagonal Qᵢ (A6-compliant: q ≥ q_min > 0 uniformly).
+        if cfg.flexa_diag_q:
+            leaves_q_ema = jax.tree_util.tree_leaves(state.q_ema)
+            new_q_ema = [0.99 * q + 0.01 * (g.astype(jnp.float32) ** 2)
+                         for q, g in zip(leaves_q_ema, leaves_g)]
+            bias = 1.0 - 0.99 ** (state.step.astype(jnp.float32) + 1.0)
+            leaves_q = [jnp.sqrt(q / bias) + 1e-8 for q in new_q_ema]
+        else:
+            new_q_ema = None
+            leaves_q = [None] * len(leaves_p)
+
+        # Per-tensor best response + error bound Eᵢ (fused kernel).
+        zs, Es = [], []
+        for i, (path, x, g, q) in enumerate(
+                zip(paths, leaves_p, leaves_g, leaves_q)):
+            tau_i = state.tau[i]
+            d = tau_i if q is None else tau_i * q
+            c = cfg.flexa_l1 if (cfg.flexa_l1 > 0 and _l1_mask(path)) else 0.0
+            z, e2 = kops.flexa_best_response(x, g, d, c)
+            zs.append(z)
+            Es.append(e2)
+        E = jnp.sqrt(jnp.stack(Es))                  # ‖x̂ᵢ−xᵢ‖₂ per tensor
+        M = jnp.max(E)
+
+        if cfg.flexa_select == "all":
+            mask = jnp.ones_like(E)
+        else:
+            mask = (E >= cfg.flexa_rho * M).astype(E.dtype)
+
+        gamma = state.gamma
+        new_leaves = [
+            (x + gamma * mask[i] * (z - x.astype(z.dtype))).astype(x.dtype)
+            for i, (x, z) in enumerate(zip(leaves_p, zs))]
+        new_params = jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+        # §4 τ-controller on the training loss (finite-change budget).
+        can = state.n_tau_changes < MAX_TAU_CHANGES
+        adapt = bool(cfg.flexa_tau_adapt)
+        loss = loss.astype(jnp.float32)
+        increased = (loss > state.v_prev) & can & adapt
+        consec = jnp.where(loss > state.v_prev, 0, state.consec_dec + 1)
+        halve = (consec >= 10) & can & adapt
+        tau = jnp.where(increased, state.tau * 2.0, state.tau)
+        tau = jnp.where(halve, tau * 0.5, tau)
+        consec = jnp.where(halve, 0, consec)
+        nch = state.n_tau_changes + increased.astype(jnp.int32) \
+            + halve.astype(jnp.int32)
+
+        new_state = FlexaOptState(
+            gamma=stepsize.gamma_next(gamma, cfg.flexa_theta),
+            tau=tau, v_prev=loss, consec_dec=consec, n_tau_changes=nch,
+            step=state.step + 1,
+            q_ema=(jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(params), new_q_ema)
+                if new_q_ema is not None else None),
+        )
+        metrics = {"flexa/E_max": M, "flexa/sel_frac": jnp.mean(mask),
+                   "flexa/gamma": gamma, "flexa/tau_mean": jnp.mean(tau)}
+        return new_params, new_state, metrics
+
+    return init, update
+
+
+# --------------------------------------------------------------------- #
+# AdamW baseline (the non-paper optimizer the examples compare against). #
+# --------------------------------------------------------------------- #
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    step: jnp.ndarray
+
+
+def adamw_optimizer(cfg: TrainConfig):
+    b1, b2 = cfg.betas
+    eps = 1e-8
+
+    def init(params) -> AdamWState:
+        z = jax.tree_util.tree_map(
+            lambda x: jnp.zeros_like(x, dtype=jnp.float32), params)
+        return AdamWState(mu=z, nu=jax.tree_util.tree_map(jnp.copy, z),
+                          step=jnp.asarray(0, jnp.int32))
+
+    def update(grads, state: AdamWState, params, loss):
+        del loss
+        t = state.step + 1
+        tf = t.astype(jnp.float32)
+
+        def upd(x, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / (1 - b1 ** tf)
+            vhat = v / (1 - b2 ** tf)
+            step = cfg.lr * (mhat / (jnp.sqrt(vhat) + eps)
+                             + cfg.weight_decay * x.astype(jnp.float32))
+            return (x.astype(jnp.float32) - step).astype(x.dtype), m, v
+
+        out = jax.tree_util.tree_map(upd, params, grads, state.mu, state.nu)
+        # out is a pytree of (x, m, v) tuples; split it.
+        new_params = jax.tree_util.tree_map(
+            lambda o: o[0], out, is_leaf=lambda o: isinstance(o, tuple))
+        mu = jax.tree_util.tree_map(
+            lambda o: o[1], out, is_leaf=lambda o: isinstance(o, tuple))
+        nu = jax.tree_util.tree_map(
+            lambda o: o[2], out, is_leaf=lambda o: isinstance(o, tuple))
+        return new_params, AdamWState(mu=mu, nu=nu, step=t), {}
+
+    return init, update
+
+
+def get_optimizer(cfg: TrainConfig):
+    if cfg.optimizer == "flexa":
+        return flexa_optimizer(cfg)
+    if cfg.optimizer == "adamw":
+        return adamw_optimizer(cfg)
+    raise ValueError(f"unknown optimizer {cfg.optimizer!r}")

@@ -1,0 +1,204 @@
+"""Distributed FLEXA for Lasso-type quadratics (shard_map SPMD).
+
+This mirrors the paper's MPI implementation (§4: 16/32 processes, column
+partition of A) on a JAX device mesh:
+
+* the variable vector ``x`` and the *columns* of ``A`` are sharded over a
+  mesh axis (the per-process blocks of the paper);
+* the only dense collective is the ``psum`` building the shared residual
+  ``r = Ax − b``  (the paper's all-reduce over Infiniband → here ICI);
+* the greedy selection rule needs one scalar ``pmax`` of the local error
+  bounds — the "no centralized coordination" property of §4;
+* best responses (soft-threshold per block), the τ-controller and the γ
+  schedule run shard-locally and identically on every device.
+
+Beyond the naive translation, the residual is *carried* between iterations
+(``r ← r + A·Δx``), so each iteration costs exactly one matvec + one
+transposed matvec — matching what a tuned implementation (and certainly the
+paper's C++/GSL one) does, instead of recomputing ``F`` from scratch.
+
+The same code runs on a single device (mesh of size 1): benchmarks and tests
+use it unmodified.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.base import SolverConfig
+from repro.core.flexa import MAX_TAU_CHANGES
+from repro.core.prox import soft_threshold
+from repro.core import stepsize
+
+
+class PFlexaState(NamedTuple):
+    x: jnp.ndarray          # local shard of the variable (n_local,)
+    r: jnp.ndarray          # replicated residual Ax − b (m,)
+    gamma: jnp.ndarray
+    tau_scale: jnp.ndarray
+    v_prev: jnp.ndarray
+    consec_dec: jnp.ndarray
+    n_tau_changes: jnp.ndarray
+    k: jnp.ndarray
+    stat: jnp.ndarray
+
+
+@dataclass
+class PFlexaResult:
+    x: Any
+    iters: int
+    converged: bool
+    history: dict = field(default_factory=dict)
+
+
+def _pad_cols(A: np.ndarray, p: int) -> tuple[np.ndarray, int]:
+    m, n = A.shape
+    pad = (-n) % p
+    if pad:
+        A = np.concatenate([A, np.zeros((m, pad), A.dtype)], axis=1)
+    return A, pad
+
+
+def make_sharded_step(mesh: Mesh, axis: str, c: float, cfg: SolverConfig,
+                      tau0: float):
+    """Build the shard_map'ed Algorithm-1 iteration for Lasso."""
+
+    def local_step(A_loc, colsq_loc, b, state: PFlexaState):
+        x, r = state.x, state.r
+        tau = tau0 * state.tau_scale
+        g_loc = 2.0 * (A_loc.T @ r)                      # ∇ᵢF, local columns
+        d_loc = tau + 2.0 * colsq_loc                    # surrogate (6)
+        z_loc = soft_threshold(x - g_loc / d_loc, c / d_loc)
+
+        E_loc = jnp.abs(z_loc - x)                       # Eᵢ = |x̂ᵢ − xᵢ|
+        M = jax.lax.pmax(jnp.max(E_loc), axis)           # one scalar collective
+        if cfg.jacobi:
+            mask = jnp.ones_like(E_loc)
+        else:
+            mask = (E_loc >= cfg.rho * M).astype(E_loc.dtype)
+
+        dx_loc = state.gamma * mask * (z_loc - x)
+        x_new = x + dx_loc
+        # Residual carry: r ← r + A·Δx (one matvec + one psum).
+        r_new = r + jax.lax.psum(A_loc @ dx_loc, axis)
+
+        # Objective at the new point (no extra matvec thanks to the carry).
+        g_abs = jax.lax.psum(jnp.sum(jnp.abs(x_new)), axis)
+        v_new = jnp.dot(r_new, r_new) + c * g_abs
+
+        can_change = state.n_tau_changes < MAX_TAU_CHANGES
+        adapt = bool(cfg.tau_adapt)
+        increased = (v_new > state.v_prev) & can_change & adapt
+        consec = jnp.where(v_new > state.v_prev, 0, state.consec_dec + 1)
+        halve = (consec >= cfg.tau_patience) & can_change & adapt
+        tau_scale = jnp.where(increased, state.tau_scale * cfg.tau_grow,
+                              state.tau_scale)
+        tau_scale = jnp.where(halve, tau_scale * cfg.tau_shrink, tau_scale)
+        consec = jnp.where(halve, 0, consec)
+        n_changes = state.n_tau_changes + increased.astype(jnp.int32) \
+            + halve.astype(jnp.int32)
+
+        stat = jax.lax.pmax(jnp.max(jnp.abs(z_loc - x)), axis)
+        new_state = PFlexaState(
+            x=x_new, r=r_new,
+            gamma=stepsize.gamma_next(state.gamma, cfg.theta),
+            tau_scale=tau_scale, v_prev=v_new, consec_dec=consec,
+            n_tau_changes=n_changes, k=state.k + 1, stat=stat)
+        sel = jax.lax.pmean(jnp.mean(mask), axis)
+        info = {"V": v_new, "stat": stat, "E_max": M, "sel_frac": sel,
+                "gamma": state.gamma, "tau_scale": tau_scale}
+        return new_state, info
+
+    state_specs = PFlexaState(
+        x=P(axis), r=P(), gamma=P(), tau_scale=P(), v_prev=P(),
+        consec_dec=P(), n_tau_changes=P(), k=P(), stat=P())
+    info_specs = {k: P() for k in
+                  ("V", "stat", "E_max", "sel_frac", "gamma", "tau_scale")}
+
+    sharded = jax.shard_map(
+        local_step, mesh=mesh,
+        in_specs=(P(None, axis), P(axis), P(), state_specs),
+        out_specs=(state_specs, info_specs),
+        check_vma=False,
+    )
+    return jax.jit(sharded)
+
+
+def solve(A, b, c: float, cfg: SolverConfig | None = None,
+          mesh: Mesh | None = None, axis: str = "model",
+          x0=None) -> PFlexaResult:
+    """Distributed FLEXA solve of  min ‖Ax−b‖² + c‖x‖₁.
+
+    ``mesh`` defaults to a 1-D mesh over all visible devices; on a single
+    CPU device this degrades gracefully to the serial algorithm (identical
+    iterates — tested).
+    """
+    cfg = cfg or SolverConfig()
+    if mesh is None:
+        mesh = jax.make_mesh((len(jax.devices()),), (axis,))
+    p = int(np.prod(mesh.devices.shape))
+
+    A_np = np.asarray(A, np.float32)
+    A_np, pad = _pad_cols(A_np, p)
+    m, n_pad = A_np.shape
+    n = n_pad - pad
+
+    col_sharding = NamedSharding(mesh, P(axis))
+    mat_sharding = NamedSharding(mesh, P(None, axis))
+    rep = NamedSharding(mesh, P())
+
+    A_dev = jax.device_put(jnp.asarray(A_np), mat_sharding)
+    b_dev = jax.device_put(jnp.asarray(b, jnp.float32), rep)
+    colsq = jnp.sum(A_dev * A_dev, axis=0)
+
+    if cfg.tau0 > 0:
+        tau0 = cfg.tau0
+    else:
+        tau0 = float(jnp.sum(colsq) / (2.0 * n))          # tr(AᵀA)/2n (§4)
+
+    if x0 is None:
+        x0 = jnp.zeros((n_pad,), jnp.float32)
+    else:
+        x0 = jnp.concatenate([jnp.asarray(x0, jnp.float32),
+                              jnp.zeros((pad,), jnp.float32)])
+    x0 = jax.device_put(x0, col_sharding)
+    r0 = A_dev @ x0 - b_dev
+    v0 = jnp.dot(r0, r0) + c * jnp.sum(jnp.abs(x0))
+
+    state = PFlexaState(
+        x=x0, r=r0,
+        gamma=jnp.asarray(cfg.gamma0, jnp.float32),
+        tau_scale=jnp.asarray(1.0, jnp.float32),
+        v_prev=jnp.asarray(v0, jnp.float32),
+        consec_dec=jnp.asarray(0, jnp.int32),
+        n_tau_changes=jnp.asarray(0, jnp.int32),
+        k=jnp.asarray(0, jnp.int32),
+        stat=jnp.asarray(jnp.inf, jnp.float32),
+    )
+    step = make_sharded_step(mesh, axis, float(c), cfg, tau0)
+
+    hist: dict[str, list] = {k: [] for k in
+                             ("V", "stat", "sel_frac", "gamma", "time")}
+    t0 = time.perf_counter()
+    converged = False
+    for _ in range(cfg.max_iters):
+        state, info = step(A_dev, colsq, b_dev, state)
+        stat = float(info["stat"])
+        hist["V"].append(float(info["V"]))
+        hist["stat"].append(stat)
+        hist["sel_frac"].append(float(info["sel_frac"]))
+        hist["gamma"].append(float(info["gamma"]))
+        hist["time"].append(time.perf_counter() - t0)
+        if stat <= cfg.tol:
+            converged = True
+            break
+    x_full = np.asarray(state.x)[:n]
+    return PFlexaResult(x=jnp.asarray(x_full), iters=int(state.k),
+                        converged=converged, history=hist)

@@ -1,0 +1,32 @@
+"""Proximal operators and projections used by FLEXA best responses.
+
+All operators are elementwise/blockwise jnp functions — safe under jit,
+shard_map and Pallas reference paths.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def soft_threshold(v: jnp.ndarray, t) -> jnp.ndarray:
+    """prox of ``t·‖·‖₁`` at ``v`` (t may be a scalar or broadcastable array)."""
+    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - t, 0.0)
+
+
+def group_soft_threshold(v: jnp.ndarray, t) -> jnp.ndarray:
+    """prox of ``t·‖·‖₂`` applied to the *last* axis of ``v`` (block shrink).
+
+    ``v`` has shape (..., block); the whole block is scaled toward zero:
+    ``prox(v) = max(0, 1 − t/‖v‖₂) · v``.
+    """
+    nrm = jnp.linalg.norm(v, axis=-1, keepdims=True)
+    scale = jnp.maximum(0.0, 1.0 - t / jnp.maximum(nrm, 1e-30))
+    return scale * v
+
+
+def project_box(v: jnp.ndarray, lo, hi) -> jnp.ndarray:
+    return jnp.clip(v, lo, hi)
+
+
+def project_nonneg(v: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(v, 0.0)

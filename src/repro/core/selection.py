@@ -1,0 +1,46 @@
+"""Block-selection rules (Step S.3 of Algorithm 1).
+
+The convergence condition is mild: Sᵏ must contain at least one block with
+``Eᵢ(xᵏ) ≥ ρ·maxⱼ Eⱼ(xᵏ)``.  The paper's experiments use the natural greedy
+rule that takes *all* such blocks (ρ = 0.5); ρ → 0⁺ with all blocks gives the
+full Jacobi scheme; taking exactly the argmax gives Gauss-Southwell.
+
+All rules return a {0,1} mask over blocks — masks (not gathers) keep the
+update SPMD-friendly: every shard evaluates its own blocks, the only global
+quantity is the scalar ``max Eᵢ`` (a ``pmax`` in the distributed path).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def greedy_mask(E: jnp.ndarray, rho: float, M=None) -> jnp.ndarray:
+    """All blocks within factor ρ of the max error bound.
+
+    ``M`` may be supplied externally (already-psum'ed global max) so the rule
+    stays correct under shard_map where ``E`` holds only local blocks.
+    """
+    if M is None:
+        M = jnp.max(E)
+    return (E >= rho * M).astype(E.dtype)
+
+
+def full_mask(E: jnp.ndarray) -> jnp.ndarray:
+    """Sᵏ = 𝒩 — the fully parallel Jacobi scheme."""
+    return jnp.ones_like(E)
+
+
+def southwell_mask(E: jnp.ndarray) -> jnp.ndarray:
+    """Exactly one block: the argmax (Gauss-Southwell)."""
+    return (jnp.arange(E.shape[0]) == jnp.argmax(E)).astype(E.dtype)
+
+
+def topk_mask(E: jnp.ndarray, k: int) -> jnp.ndarray:
+    """The k largest blocks (Grock-style parallelism cap, for baselines)."""
+    if k >= E.shape[0]:
+        return jnp.ones_like(E)
+    thresh = jnp.sort(E)[-k]
+    mask = (E >= thresh).astype(E.dtype)
+    # Break ties deterministically so exactly k entries are selected.
+    excess = jnp.cumsum(mask) - k
+    return jnp.where((mask > 0) & (excess > 0), 0.0, mask)

@@ -1,0 +1,35 @@
+"""Step-size rules for Algorithm 1 (Theorem 1 conditions i–iv).
+
+The paper's practical rule is Eq. (4):  γᵏ = γᵏ⁻¹ (1 − θ γᵏ⁻¹), γ⁰ ∈ (0, 1],
+θ ∈ (0, 1).  It satisfies γᵏ→0, Σγᵏ=∞, Σ(γᵏ)²<∞ (it behaves like 1/(θk)),
+and needs no centralized coordination — every worker can update it locally.
+
+A constant step size and a serial Armijo line search also converge (see the
+paper's §4 discussion / [28]); the constant rule is provided for ablations,
+Armijo is intentionally *not* on the parallel path (the paper rejects it as
+"not in line with our parallel approach").
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gamma_next(gamma, theta):
+    """Eq. (4): one update of the diminishing step size."""
+    return gamma * (1.0 - theta * gamma)
+
+
+def gamma_schedule(gamma0: float, theta: float, k: int):
+    """Closed-loop evaluation of Eq. (4) for k steps (testing helper)."""
+    g = gamma0
+    out = []
+    for _ in range(k):
+        out.append(g)
+        g = g * (1.0 - theta * g)
+    return jnp.asarray(out)
+
+
+def epsilon_schedule(gamma, grad_block_norm, alpha1, alpha2):
+    """Theorem 1(v): εᵢᵏ ≤ γᵏ α₁ min{α₂, 1/‖∇ᵢF(xᵏ)‖}."""
+    return gamma * alpha1 * jnp.minimum(
+        alpha2, 1.0 / jnp.maximum(grad_block_norm, 1e-30))

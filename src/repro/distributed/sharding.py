@@ -1,0 +1,179 @@
+"""Sharding rule engine: maps model parameters/activations/caches to
+PartitionSpecs for the production mesh.
+
+Layout summary (DESIGN.md §5):
+
+* batch/tokens      → data axes (``("pod", "data")`` multi-pod, ``("data",)``
+  single-pod) — DP;
+* weight matrices   → 2-D sharded: the "feature" dim over ``model`` (TP) and
+  the other dim over ``data`` (FSDP / ZeRO-3; XLA all-gathers at use inside
+  the layer scan and reduce-scatters gradients);
+* attention heads   → ``model`` (query heads; kv heads replicated when they
+  don't divide — GSPMD pads otherwise);
+* MoE experts       → ``model`` (EP) + FSDP on the expert d_model dim;
+* KV caches         → *sequence* dim over ``model`` (SP) — kv-head counts
+  (4–32) don't divide a 16-way axis, sequences do; decode attention then
+  lowers to a flash-decode partial-softmax with a small combine collective;
+* SSM/conv states   → batch over data axes, heads over ``model``;
+* optimizer state   → FLEXA: O(#tensors) scalars, replicated (trivially).
+
+``spec_for_param`` is rule-based on path + shape so it covers every family
+without per-arch tables.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class Dist:
+    mesh: Mesh
+    dp_axes: tuple = ("data",)
+    tp_axis: str = "model"
+
+    @property
+    def dp(self):
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+    @property
+    def dp_size(self) -> int:
+        n = 1
+        for a in self.dp_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp_axis]
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def make_dist(mesh: Mesh) -> Dist:
+    names = mesh.axis_names
+    if "pod" in names:
+        return Dist(mesh=mesh, dp_axes=("pod", "data"))
+    return Dist(mesh=mesh, dp_axes=("data",))
+
+
+# --------------------------------------------------------------------- #
+# Parameter rules                                                       #
+# --------------------------------------------------------------------- #
+def spec_for_param(path: str, shape: tuple, dist: Dist,
+                   cfg: ModelConfig, pipeline: bool = False) -> P:
+    """PartitionSpec for one parameter tensor.
+
+    ``path`` is the '/'-joined tree path (lowercase); leading stacked-layer
+    dims (length == num_layers groups) are detected by the callers passing
+    the *unstacked* logical shape; stacked dims are left unsharded (None).
+    """
+    fsdp, tp = "data", dist.tp_axis
+    name = path.lower()
+
+    def stacked(spec_tail: tuple) -> P:
+        # prepend None for any leading stacked-layer dims; under pipeline
+        # parallelism the layer dim is the stage dim (sharded over `data`,
+        # which therefore leaves the FSDP role — drop it from the tail).
+        extra = len(shape) - len(spec_tail)
+        if pipeline and extra > 0:
+            tail = tuple(None if s == fsdp else s for s in spec_tail)
+            return P("data", *([None] * (extra - 1)), *tail)
+        return P(*([None] * extra), *spec_tail)
+
+    # 1-D tensors (norm scales, biases, per-head scalars): replicate.
+    if len(shape) == 0 or min(shape) == 0:
+        return P()
+    tail_ndim = len(shape)
+    # --- embeddings / heads: (V, D) — vocab REPLICATED, d_model over model.
+    # Vocab-replicated tables make the embed lookup collective-free (gather
+    # over a sharded dim forces GSPMD to allgather the table — measured GBs
+    # per device) and pair with sequence-sharded logits for the loss.
+    if "embed" in name or "lm_head" in name:
+        return stacked((None, tp))
+    # --- MoE experts: (E, D, F) / (E, F, D) — EP over model + FSDP dim 1
+    if any(k in name for k in ("/w1", "/w3", "/w2")) and "moe" in name:
+        return stacked((tp, fsdp, None))
+    if "router" in name:
+        return stacked((fsdp, None))
+    # --- attention projections: (D, H·dh) out dim over model, in over data
+    if any(k in name for k in ("wq", "wk", "wv")):
+        return stacked((fsdp, tp))
+    if "wo" in name:
+        return stacked((tp, fsdp))
+    # --- dense mlp: w1/w3 (D, F): F over model; w2 (F, D): F over model
+    if "/w1" in name or "/w3" in name:
+        return stacked((fsdp, tp))
+    if "/w2" in name:
+        return stacked((tp, fsdp))
+    # --- ssm projections: (D, ·) big in_proj/out_proj over model on the
+    #     wide dim, FSDP on d_model
+    if "w_in" in name:
+        return stacked((fsdp, tp))
+    if "w_out" in name:
+        return stacked((tp, fsdp))
+    if "conv_w" in name or "conv_b" in name:
+        return stacked((None,) * (2 if len(shape) >= 2 else 1))
+    # --- fallback: replicate small tensors, FSDP-shard big 2-D ones
+    if tail_ndim >= 2 and shape[-1] >= 1024 and shape[-2] >= 1024:
+        return stacked((fsdp, tp))
+    return P(*([None] * len(shape)))
+
+
+def param_shardings(params_shape, dist: Dist, cfg: ModelConfig,
+                    pipeline: bool = False):
+    """Pytree of NamedShardings matching a params ShapeDtypeStruct tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        pp = pipeline and name.startswith("layers")
+        spec = spec_for_param(name, leaf.shape, dist, cfg, pipeline=pp)
+        out.append(dist.sharding(spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# --------------------------------------------------------------------- #
+# Activation / input / cache rules                                      #
+# --------------------------------------------------------------------- #
+def batch_specs(cfg: ModelConfig, dist: Dist, kind: str) -> dict:
+    """PartitionSpecs for the step-function input batch."""
+    dp, tp = dist.dp, dist.tp_axis
+    if kind == "train":
+        specs = {"tokens": P(dp, None), "labels": P(dp, None)}
+    elif kind == "prefill":
+        specs = {"tokens": P(dp, None)}
+    else:  # decode
+        specs = {"token": P(dp, None)}
+    if cfg.use_mrope:
+        specs["positions"] = P(dp, None, None)
+    if cfg.is_encoder_decoder:
+        specs["enc_embeds"] = P(dp, None, None)
+    return specs
+
+
+def cache_spec(cfg: ModelConfig, dist: Dist, batch: int) -> dict:
+    """PartitionSpecs for the decode cache (family-dependent)."""
+    dp, tp = dist.dp, dist.tp_axis
+    # Batch=1 long-context cells can't shard batch over dp: replicate batch,
+    # shard the sequence dim instead.
+    bspec = dp if batch >= dist.dp_size else None
+    if cfg.family == "ssm":
+        return {"conv": P(None, bspec, None, tp),
+                "ssm": P(None, bspec, tp, None, None)}
+    att = P(None, bspec, None, tp, None)   # (L, B, Hkv, S→model, dh)
+    if cfg.family == "hybrid":
+        return {"conv": P(None, bspec, None, tp),
+                "ssm": P(None, bspec, tp, None, None),
+                "attn_k": att, "attn_v": att}
+    if cfg.is_encoder_decoder:
+        return {"self_k": att, "self_v": att,
+                "cross_k": att, "cross_v": att}
+    return {"k": att, "v": att}

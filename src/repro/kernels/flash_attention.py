@@ -1,0 +1,122 @@
+"""Causal GQA flash attention — Pallas TPU kernel.
+
+Classic online-softmax tiling adapted to the TPU memory hierarchy:
+
+* grid = (batch, q_heads, Sq/bq, Skv/bk); the kv dimension is innermost and
+  *sequential* ("arbitrary"), carrying the running (m, ℓ, acc) statistics in
+  VMEM scratch — this is the TPU-native replacement for the GPU kernel's
+  shared-memory accumulator;
+* blocks are (bq × d) / (bk × d) VMEM tiles; d is the full head dim (128 in
+  all assigned archs — already MXU-aligned), bq/bk default 256/512 so the
+  (bq × bk) logit tile and both operand tiles fit VMEM with double buffering;
+* GQA is expressed in the k/v index_map (query head h reads kv head
+  h // (Hq/Hkv)) — no repeated KV materialization in HBM;
+* the causal mask is applied in-register per tile; fully-masked tiles are
+  skipped via ``pl.when`` (no FLOPs, though their blocks are still
+  prefetched — acceptable: at bq=bk the skipped fraction is ~half).
+
+Query positions are aligned to the *end* of the KV sequence (offset =
+Skv − Sq), so the same kernel serves square prefill and chunked prefill
+against an existing cache.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, sq: int, skv: int, bq: int, bk: int,
+                  causal: bool):
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    offset = skv - sq
+    q_start = iq * bq + offset          # absolute kv-position of first query
+    k_start = ik * bk
+
+    # Tile participates iff some kv position ≤ some query position.
+    needed = (not causal) or (k_start <= q_start + bq - 1)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+        m_prev = m_ref[...][:, :1]                   # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)              # (bq, 1)
+        p = jnp.exp(s - m_new)                       # (bq, bk)
+        l_new = l_ref[...][:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_ref[...][:, :1]
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale=None,
+                    block_q: int = 256, block_k: int = 512,
+                    interpret: bool = False):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D).  Returns (B, Hq, Sq, D)."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0
+    rep = Hq // Hkv
+    if scale is None:
+        scale = float(1.0 / (D ** 0.5))
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    grid = (B, Hq, pl.cdiv(Sq, bq), pl.cdiv(Skv, bk))
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, sq=Sq, skv=Skv, bq=bq, bk=bk,
+        causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, iq, ik, rep=rep: (b, h // rep, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, iq, ik, rep=rep: (b, h // rep, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),   # running max m
+            pltpu.VMEM((bq, 128), jnp.float32),   # running sum ℓ
+            pltpu.VMEM((bq, D), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,112 @@
+"""Kernel dispatch layer: Pallas on TPU, jnp reference elsewhere.
+
+Every op has one public entry point with a single semantic contract (the
+``ref.py`` oracle).  Backend selection:
+
+* TPU backend            → compiled Pallas kernel;
+* ``REPRO_KERNELS=interpret`` env or ``force="interpret"`` → Pallas in
+  interpret mode (used by the correctness sweeps — executes the kernel body
+  on CPU);
+* otherwise (CPU/GPU)    → the jnp reference (fast-enough, XLA-fused).
+
+The 2-D reshaping/padding for the FLEXA elementwise kernels lives here so
+kernels stay shape-simple.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import flexa_prox as _fp
+from repro.kernels import ref
+from repro.kernels import ssd_scan as _ssd
+
+
+def _mode(force=None) -> str:
+    if force is not None:
+        return force
+    env = os.environ.get("REPRO_KERNELS", "")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _to_2d(t: jnp.ndarray, cols: int = 512):
+    """Flatten + zero-pad a tensor to (rows, cols) for elementwise kernels."""
+    flat = t.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % cols
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(-1, cols), n
+
+
+# ------------------------------------------------------------------ #
+def flexa_best_response(x, g, d, c, *, force=None):
+    """z = soft(x − g/d, c/d), e2 = Σ(z−x)².  Any-shape tensors."""
+    mode = _mode(force)
+    if mode == "ref":
+        return ref.flexa_best_response_ref(x, g, d, c)
+    interp = mode == "interpret"
+    scalar_d = jnp.ndim(d) == 0
+    x2, n = _to_2d(x)
+    g2, _ = _to_2d(g)
+    d2 = d if scalar_d else _to_2d(jnp.broadcast_to(d, x.shape))[0]
+    # Padded entries: x=g=0 ⇒ z=0, e2 contribution 0.  (d pad must be ≥ 0:
+    # broadcast pads with zeros ⇒ guard with +1 on pad rows via maximum.)
+    if not scalar_d:
+        d2 = jnp.maximum(d2, 1e-30)
+    z2, e2 = _fp.best_response(x2, g2, d2, c, interpret=interp)
+    z = z2.reshape(-1)[:n].reshape(x.shape)
+    return z, e2
+
+
+def flexa_apply(x, g, d, c, gamma_mask, *, force=None):
+    """x ← x + γ·m·(x̂ − x) fused; returns updated tensor with x.dtype."""
+    mode = _mode(force)
+    if mode == "ref":
+        return ref.flexa_apply_ref(x, g, d, c, gamma_mask)
+    interp = mode == "interpret"
+    scalar_d = jnp.ndim(d) == 0
+    x2, n = _to_2d(x)
+    g2, _ = _to_2d(g)
+    d2 = d if scalar_d else jnp.maximum(
+        _to_2d(jnp.broadcast_to(d, x.shape))[0], 1e-30)
+    o2 = _fp.apply_update(x2, g2, d2, c, gamma_mask, interpret=interp)
+    return o2.reshape(-1)[:n].reshape(x.shape)
+
+
+def flash_attention(q, k, v, *, causal=True, scale=None, force=None,
+                    block_q: int = 256, block_k: int = 512):
+    mode = _mode(force)
+    if mode == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+    return _fa.flash_attention(
+        q, k, v, causal=causal, scale=scale, block_q=block_q,
+        block_k=block_k, interpret=(mode == "interpret"))
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 64, force=None):
+    # Pad S to a chunk multiple.  dt=0 padding is algebraically inert:
+    # decay exp(0·A)=1 keeps the state, update dt·(B⊗x)=0 adds nothing.
+    S = x.shape[1]
+    pad = (-S) % chunk
+    if pad:
+        padw = lambda t: jnp.pad(t, [(0, 0), (0, pad)] +
+                                 [(0, 0)] * (t.ndim - 2))
+        x, dt, B, C = padw(x), padw(dt), padw(B), padw(C)
+    mode = _mode(force)
+    if mode == "ref":
+        y, h = ref.ssd_scan_ref(x, dt, A, B, C, chunk=chunk)
+    else:
+        y, h = _ssd.ssd_scan(x, dt, A, B, C, chunk=chunk,
+                             interpret=(mode == "interpret"))
+    return (y[:, :S] if pad else y), h
+
+
+def ssd_decode(x_t, dt_t, A, B_t, C_t, h):
+    """Single-token SSD step — always the jnp path (it is a few GEMVs)."""
+    return ref.ssd_decode_ref(x_t, dt_t, A, B_t, C_t, h)

@@ -1,0 +1,117 @@
+"""Mamba2 SSD chunked scan — Pallas TPU kernel.
+
+The SSD ("state-space duality") insight is that the selective-state
+recurrence factors into *matmuls* over chunks plus a tiny inter-chunk
+recurrence — exactly the shape the TPU MXU wants (the hardware adaptation:
+the GPU kernel's warp-level scan becomes chunk-local dense algebra here).
+
+Grid = (batch, heads, n_chunks) with the chunk dimension innermost and
+sequential ("arbitrary"); the (N × P) state lives in VMEM scratch and is
+carried across chunk steps, reset at chunk 0 of each (b, h) program.
+
+Per chunk of length L (all in fp32 in VMEM):
+    s       = cumsum(dt·A)                       (L,)
+    G       = C·Bᵀ                               (L, L)   MXU
+    W       = G ⊙ tril(exp(sᵢ−sⱼ)) ⊙ dtⱼ         (L, L)
+    y_intra = W·X                                (L, P)   MXU
+    y_inter = exp(s) ⊙ (C·h_prev)                (L, P)   MXU
+    h       = exp(s_L)·h_prev + (exp(s_L−s)⊙dt⊙B)ᵀ·X     MXU
+
+The jnp oracle is ``ref.ssd_scan_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_out_ref,
+                h_ref, *, L: int):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (L, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (L,)
+    A = a_ref[0]                                     # scalar (this head)
+    Bm = b_ref[0].astype(jnp.float32)                # (L, N)
+    Cm = c_ref[0].astype(jnp.float32)                # (L, N)
+
+    la = dt * A                                      # (L,)
+    s = jnp.cumsum(la)                               # (L,)
+    s_last = s[L - 1]
+
+    # Intra-chunk quadratic term.
+    G = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (L, L)
+    st = s[:, None]
+    su = s[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    M = jnp.where(jj <= ii, jnp.exp(st - su), 0.0)
+    W = G * M * dt[None, :]
+    y = jax.lax.dot_general(W, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (L, P)
+
+    # Inter-chunk contribution from the carried state.
+    h_prev = h_ref[...]                              # (N, P)
+    y += jnp.exp(s)[:, None] * jax.lax.dot_general(
+        Cm, h_prev, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # State update.
+    wB = (jnp.exp(s_last - s) * dt)[:, None] * Bm    # (L, N)
+    h_new = jnp.exp(s_last) * h_prev + jax.lax.dot_general(
+        wB, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (N, P)
+    h_ref[...] = h_new
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _emit_state():
+        h_out_ref[0, 0] = h_new.astype(h_out_ref.dtype)
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 64, interpret: bool = False):
+    """Pallas SSD scan.  Shapes as in ``ref.ssd_scan_ref``:
+
+    x: (Bt, S, H, P); dt: (Bt, S, H); A: (H,); B, C: (Bt, S, N).
+    Returns (y: (Bt, S, H, P), h_final: (Bt, H, N, P) fp32).
+    """
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    grid = (Bt, H, nc)
+
+    kernel = functools.partial(_ssd_kernel, L=chunk)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bt, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return y, h

@@ -1,0 +1,260 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks the device count at init).
+
+"""Multi-pod dry-run: AOT lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces, without allocating a single model byte:
+
+* proof the sharding config is coherent (compile succeeds on 256- and
+  512-device meshes),
+* ``compiled.memory_analysis()``  — per-device bytes (fits 16 GB/chip?),
+* ``compiled.cost_analysis()``    — FLOPs / bytes for the roofline,
+* parsed collective bytes (all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute) from the post-SPMD HLO text,
+
+written as one JSON per cell under ``results/dryrun/``.
+
+Usage:
+    python -m repro.launch.dryrun --arch yi-6b --shape train_4k [--multipod]
+    python -m repro.launch.dryrun --all [--multipod] [--jobs-file f.txt]
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+                "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+                "u64": 8}
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|"
+                       r"u64)\[([0-9,]*)\]")
+
+
+def _shape_bytes(m: re.Match) -> int:
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-opcode operand-byte totals from post-SPMD HLO."""
+    out = {c: {"count": 0, "operand_bytes": 0, "result_bytes": 0}
+           for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        for c in COLLECTIVES:
+            token = f" {c}("
+            # also match fused/async starts like all-gather-start(
+            token_s = f" {c}-start("
+            idx = ls.find(token)
+            if idx < 0:
+                idx = ls.find(token_s)
+            if idx < 0:
+                continue
+            shapes = list(_SHAPE_RE.finditer(ls))
+            if not shapes:
+                continue
+            # result shape(s) appear before the opcode, operands after it.
+            op_pos = idx
+            res_b = sum(_shape_bytes(m) for m in shapes
+                        if m.start() < op_pos)
+            opd_b = sum(_shape_bytes(m) for m in shapes
+                        if m.start() > op_pos)
+            out[c]["count"] += 1
+            out[c]["operand_bytes"] += opd_b
+            out[c]["result_bytes"] += res_b
+            break
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multipod: bool,
+             optimizer: str = "flexa", unroll: int = 1,
+             pin_microbatch: int = 0, pipeline: bool = False,
+             strategy: str = "tp", ssm_chunk: int = 0) -> dict:
+    # Scan-unroll factor for HLO-FLOPs disaggregation (see launch/roofline):
+    # XLA cost analysis counts a while-loop body once; compiling the same
+    # cell at two unroll factors lets the roofline reconstruct exact totals.
+    os.environ["REPRO_SCAN_UNROLL"] = str(unroll)
+    import jax
+    from repro.config.base import SHAPES, TrainConfig
+    from repro.configs.registry import cell_applicable, get_config
+    from repro.distributed.sharding import make_dist
+    from repro.launch import steps as ST
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    if ssm_chunk:
+        cfg = cfg.replace(ssm_chunk=ssm_chunk)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multipod else "16x16",
+        "kind": shape.kind, "optimizer": optimizer, "unroll": unroll,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multipod)
+    dist = make_dist(mesh)
+    rec["pipeline"] = pipeline
+
+    # v5e budget: 16 GB HBM/chip.  Train cells self-tune their microbatch
+    # (gradient accumulation) until the compiled per-device footprint fits.
+    HBM_BUDGET = 15.0e9
+    mb = pin_microbatch if pin_microbatch else 1
+    while True:
+        tcfg = TrainConfig(optimizer=optimizer, microbatch=mb,
+                           pipeline=pipeline, pp_microbatches=32,
+                           strategy=strategy)
+        t0 = time.time()
+        lowered = ST.lower_cell(cfg, shape, dist, tcfg)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = {}
+        try:
+            ma = compiled.memory_analysis()
+            for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                      "output_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes"):
+                if hasattr(ma, k):
+                    mem[k] = int(getattr(ma, k))
+        except Exception as e:  # CPU backend may not implement it
+            mem["error"] = repr(e)
+
+        live = mem.get("temp_size_in_bytes", 0) \
+            + mem.get("argument_size_in_bytes", 0)
+        if (pin_microbatch or pipeline or shape.kind != "train"
+                or live <= HBM_BUDGET or mb >= 8
+                or shape.global_batch // (mb * 2) < dist.dp_size):
+            break
+        mb *= 2
+        print(f"    temp+args {live/1e9:.1f} GB > budget — retry "
+              f"microbatch={mb}", flush=True)
+    rec["microbatch"] = mb
+
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        for k, v in dict(ca).items():
+            if k in ("flops", "bytes accessed", "optimal_seconds") or \
+                    k.startswith("bytes accessed"):
+                cost[k] = float(v)
+    except Exception as e:
+        cost["error"] = repr(e)
+
+    coll = parse_collectives(compiled.as_text())
+
+    rec.update(
+        status="ok",
+        n_devices=mesh.devices.size,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory=mem,
+        cost=cost,
+        collectives=coll,
+        model_params=cfg.param_count(),
+        model_params_active=cfg.param_count(active_only=True),
+        tokens_per_step=shape.tokens,
+    )
+    return rec
+
+
+def _cell_filename(arch, shape, multipod, optimizer, unroll=1,
+                   pipeline=False, strategy="tp", ssm_chunk=0):
+    mesh = "2x16x16" if multipod else "16x16"
+    opt = f"_{optimizer}" if optimizer != "flexa" else ""
+    u = f"_u{unroll}" if unroll != 1 else ""
+    pp = "_pp" if pipeline else ""
+    st = f"_{strategy}" if strategy != "tp" else ""
+    sc = f"_sc{ssm_chunk}" if ssm_chunk else ""
+    return f"{arch}__{shape}__{mesh}{opt}{u}{pp}{st}{sc}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every cell (subprocess isolation per cell)")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--optimizer", default="flexa")
+    ap.add_argument("--unroll", type=int, default=1)
+    ap.add_argument("--microbatch", type=int, default=0,
+                    help="pin the gradient-accumulation factor")
+    ap.add_argument("--pp", action="store_true",
+                    help="pipeline parallelism over the data axis")
+    ap.add_argument("--strategy", default="tp", choices=("tp", "zero3"))
+    ap.add_argument("--ssm-chunk", type=int, default=0)
+    ap.add_argument("--force", action="store_true",
+                    help="re-run cells that already have results")
+    args = ap.parse_args()
+    RESULTS.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        from repro.config.base import SHAPES
+        from repro.configs.registry import ARCHS
+        meshes = [False, True] if args.both_meshes else [args.multipod]
+        jobs = [(a, s, mp) for a in ARCHS for s in SHAPES for mp in meshes]
+        t_start = time.time()
+        for i, (a, s, mp) in enumerate(jobs):
+            out = RESULTS / _cell_filename(a, s, mp, args.optimizer,
+                                           args.unroll)
+            if out.exists() and not args.force:
+                print(f"[{i+1}/{len(jobs)}] {out.name} exists — skip",
+                      flush=True)
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", a, "--shape", s, "--optimizer", args.optimizer,
+                   "--unroll", str(args.unroll)]
+            if mp:
+                cmd.append("--multipod")
+            print(f"[{i+1}/{len(jobs)}] {a} × {s} × "
+                  f"{'2x16x16' if mp else '16x16'} "
+                  f"(t={time.time()-t_start:.0f}s)", flush=True)
+            r = subprocess.run(cmd, capture_output=True, text=True)
+            if r.returncode != 0:
+                rec = {"arch": a, "shape": s,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "status": "error",
+                       "error": (r.stderr or r.stdout)[-4000:]}
+                out.write_text(json.dumps(rec, indent=2))
+                print(f"    FAILED: {(r.stderr or '')[-400:]}", flush=True)
+        return
+
+    rec = run_cell(args.arch, args.shape, args.multipod, args.optimizer,
+                   args.unroll, args.microbatch, args.pp, args.strategy,
+                   args.ssm_chunk)
+    out = RESULTS / _cell_filename(args.arch, args.shape, args.multipod,
+                                   args.optimizer, args.unroll, args.pp,
+                                   args.strategy, args.ssm_chunk)
+    out.write_text(json.dumps(rec, indent=2))
+    print(json.dumps({k: rec[k] for k in
+                      ("arch", "shape", "mesh", "status") if k in rec}))
+    if rec.get("status") == "ok":
+        print(f"  lower={rec['lower_s']}s compile={rec['compile_s']}s")
+        print(f"  memory={rec['memory']}")
+        print(f"  cost={rec['cost']}")
+
+
+if __name__ == "__main__":
+    main()

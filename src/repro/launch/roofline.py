@@ -1,0 +1,218 @@
+"""Roofline analysis from the compiled dry-run artifacts.
+
+Reconstruction (see dryrun.py): XLA's cost analysis counts a while-loop
+body once, so every single-pod cell is compiled at two (flat stacks) or
+three (nested hybrid stacks) scan-unroll factors:
+
+  flat   :  f(U) = o + U·b            ⇒  total = f(1) + (L−1)·(f(2)−f(1))
+  hybrid :  f(U) = c0 + c1·U + c2·U²  ⇒  total = c0 + G·(c1−c2) + L·c2
+            (outer groups G = L//k carry the shared attention block `a`
+             with c1 = a + m_rem, c2 = m — see DESIGN.md)
+
+Train cells with gradient accumulation multiply the per-microbatch total by
+``mb`` (the optimizer's elementwise flops are off by a factor mb — ≤0.01%
+of the total, noted here once).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+
+  compute    = HLO_FLOPs / peak            (per device)
+  memory     = HLO_bytes / HBM_bw          (per device)
+  collective = Σ link-bytes / ICI_bw       (per device; per-opcode model:
+               all-reduce 2×operand, all-gather result−operand,
+               reduce-scatter operand−result, all-to-all/permute operand)
+
+MODEL_FLOPS: 6·N·D for training (N = params, active-only for MoE; D =
+tokens), 2·N·D for inference cells (no backward — deviation from the 6·N·D
+convention is intentional and flagged in the table).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results"
+DRYRUN = RESULTS / "dryrun"
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256
+
+
+def _load(arch, shape, unroll):
+    u = f"_u{unroll}" if unroll != 1 else ""
+    f = DRYRUN / f"{arch}__{shape}__16x16{u}.json"
+    if not f.exists():
+        return None
+    rec = json.loads(f.read_text())
+    return rec if rec.get("status") == "ok" else None
+
+
+AXIS_N = 16  # dominant collective group width on the 16×16 mesh
+
+
+def _coll_link_bytes(coll: dict) -> float:
+    """Per-device link-byte model from the parsed per-opcode RESULT bytes.
+
+    Post-optimization HLO prints operand references without shapes, so only
+    result shapes are reliable.  Ring-algorithm models at group width n=16:
+      all-reduce      2·(n−1)/n·result ≈ 2·result
+      all-gather      (n−1)/n·result   ≈ result
+      reduce-scatter  (n−1)·result     (input is n× the result shard)
+      all-to-all / collective-permute  ≈ result
+    """
+    b = 0.0
+    for op, st in coll.items():
+        res = st["result_bytes"]
+        if op == "all-reduce":
+            b += 2.0 * (AXIS_N - 1) / AXIS_N * res
+        elif op == "all-gather":
+            b += (AXIS_N - 1) / AXIS_N * res
+        elif op == "reduce-scatter":
+            b += (AXIS_N - 1) * res
+        else:
+            b += res
+    return b
+
+
+def _extract(rec):
+    return (rec["cost"].get("flops", 0.0),
+            rec["cost"].get("bytes accessed", 0.0),
+            _coll_link_bytes(rec["collectives"]))
+
+
+def reconstruct(arch: str, shape: str, cfg) -> dict | None:
+    """Unroll-difference reconstruction of per-device totals."""
+    r1 = _load(arch, shape, 1)
+    if r1 is None:
+        return None
+    mb = r1.get("microbatch", 1)
+    f1 = _extract(r1)
+
+    if cfg.family == "hybrid":
+        r2, r3 = _load(arch, shape, 2), _load(arch, shape, 3)
+        if r2 is None or r3 is None:
+            return None
+        f2, f3 = _extract(r2), _extract(r3)
+        G = cfg.num_layers // cfg.attn_every
+        L = cfg.num_layers
+        totals = []
+        for a1, a2, a3 in zip(f1, f2, f3):
+            # quadratic fit through U = 1, 2, 3
+            c2 = (a3 - 2 * a2 + a1) / 2.0
+            c1 = a2 - a1 - 3.0 * c2
+            c0 = a1 - c1 - c2
+            totals.append(max(c0 + G * (c1 - c2) + L * c2, a1))
+        method = "quadratic(u1,u2,u3)"
+    else:
+        # preferred second point: u2; deepseek's odd L uses u5 (95 = 19·5)
+        L = cfg.enc_layers if cfg.family == "encdec" else cfg.num_layers
+        u2, step = 2, 1
+        r2 = _load(arch, shape, 2)
+        if arch == "deepseek-67b":
+            r5 = _load(arch, shape, 5)
+            if r5 is not None:
+                r2, u2 = r5, 5
+        if r2 is None:
+            return None
+        f2 = _extract(r2)
+        totals = []
+        for a1, a2 in zip(f1, f2):
+            body = (a2 - a1) / (u2 - 1)
+            totals.append(max(a1 + (L - 1) * body, a1))
+        method = f"linear(u1,u{u2})"
+
+    flops, bytes_, coll = (t * mb for t in totals)
+    return {
+        "flops": flops, "bytes": bytes_, "coll_bytes": coll,
+        "microbatch": mb, "method": method,
+        "mem": r1["memory"], "compile_s": r1["compile_s"],
+    }
+
+
+def analyze() -> list[dict]:
+    from repro.config.base import SHAPES
+    from repro.configs.registry import ARCHS, cell_applicable
+
+    rows = []
+    for arch, cfg in ARCHS.items():
+        for sname, shape in SHAPES.items():
+            ok, why = cell_applicable(cfg, shape)
+            if not ok:
+                rows.append({"arch": arch, "shape": sname,
+                             "status": "skipped", "reason": why})
+                continue
+            rec = reconstruct(arch, sname, cfg)
+            if rec is None:
+                rows.append({"arch": arch, "shape": sname,
+                             "status": "missing"})
+                continue
+            t_comp = rec["flops"] / PEAK_FLOPS
+            t_mem = rec["bytes"] / HBM_BW
+            t_coll = rec["coll_bytes"] / ICI_BW
+            dom = max(("compute", t_comp), ("memory", t_mem),
+                      ("collective", t_coll), key=lambda kv: kv[1])[0]
+            n_params = cfg.param_count(
+                active_only=cfg.family == "moe")
+            factor = 6 if shape.kind == "train" else 2
+            model_flops = factor * n_params * shape.tokens / CHIPS
+            t_bound = max(t_comp, t_mem, t_coll)
+            rows.append({
+                "arch": arch, "shape": sname, "status": "ok",
+                "kind": shape.kind,
+                "microbatch": rec["microbatch"],
+                "method": rec["method"],
+                "hlo_flops": rec["flops"],
+                "hlo_bytes": rec["bytes"],
+                "coll_bytes": rec["coll_bytes"],
+                "t_compute_s": t_comp,
+                "t_memory_s": t_mem,
+                "t_collective_s": t_coll,
+                "dominant": dom,
+                "model_flops": model_flops,
+                "useful_ratio": model_flops / rec["flops"]
+                if rec["flops"] else 0.0,
+                "roofline_frac": (model_flops / PEAK_FLOPS) / t_bound
+                if t_bound else 0.0,
+                "step_time_bound_s": t_bound,
+            })
+    return rows
+
+
+def to_markdown(rows) -> str:
+    hdr = ("| arch | shape | mb | compute s | memory s | collective s | "
+           "dominant | MODEL/HLO | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                       f"skipped | — | — |\n")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | ? | missing "
+                       "| | | | | |\n")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['microbatch']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_frac']:.1%} |\n")
+    return "".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-out", default=str(RESULTS / "roofline.json"))
+    ap.add_argument("--md-out", default=str(RESULTS / "roofline.md"))
+    args = ap.parse_args()
+    rows = analyze()
+    Path(args.json_out).write_text(json.dumps(rows, indent=2))
+    md = to_markdown(rows)
+    Path(args.md_out).write_text(md)
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

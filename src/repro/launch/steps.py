@@ -1,0 +1,205 @@
+"""Step-function factories: the jitted programs the launcher/dry-run lower.
+
+Each factory closes over (ModelConfig, Dist, TrainConfig) and returns a
+function plus its in/out shardings, ready for
+
+    jax.jit(fn, in_shardings=…, out_shardings=…, donate_argnums=…)
+        .lower(*ShapeDtypeStructs).compile()
+
+Donation: train donates (params, opt_state); decode donates the cache —
+in-place cache update is what keeps the 512k-context cells inside the
+16 GB/chip budget.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.core.optimizer import get_optimizer
+from repro.distributed import sharding as SH
+from repro.models import io as IO
+from repro.models import transformer as T
+
+
+def params_shape(cfg: ModelConfig, seed: int = 0):
+    """ShapeDtypeStruct tree of the parameters (no allocation)."""
+    return jax.eval_shape(partial(T.init_params, cfg),
+                          jax.random.PRNGKey(seed))
+
+
+def _opt_state_shardings(opt_shape, dist: SH.Dist, cfg: ModelConfig,
+                         p_shardings):
+    """FLEXA state is controller scalars (replicated); q_ema follows params."""
+    rep = dist.sharding(P())
+    flat, treedef = jax.tree_util.tree_flatten(opt_shape)
+    out = []
+    # Controller scalars replicate; EMA/moment tensors (ndim ≥ 2) mirror the
+    # parameter layout via the same rule engine.
+    for leaf in flat:
+        if hasattr(leaf, "ndim") and leaf.ndim >= 2:
+            spec = SH.spec_for_param("opt_ema", tuple(leaf.shape), dist, cfg)
+            out.append(dist.sharding(spec))
+        else:
+            out.append(rep)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def make_train_step(cfg: ModelConfig, dist: SH.Dist, tcfg: TrainConfig,
+                    shape: ShapeConfig):
+    opt_init, opt_update = get_optimizer(tcfg)
+    mb = max(1, tcfg.microbatch)
+    use_pp = tcfg.pipeline
+    if tcfg.strategy == "zero3" and cfg.family in ("dense", "vlm", "ssm",
+                                                   "hybrid", "encdec"):
+        # ZeRO-3: the model axis joins the batch axes for activations;
+        # parameter storage stays 2-D sharded (gathered at use).
+        dist = SH.Dist(mesh=dist.mesh,
+                       dp_axes=tuple(dist.dp_axes) + ("model",))
+    if use_pp:
+        from repro.distributed.pipeline import pipeline_loss_fn, \
+            supports_pipeline
+        assert supports_pipeline(cfg), cfg.family
+        mb = 1  # the pipeline's own microbatching replaces grad accum
+
+    def grads_of(params, batch):
+        def lf(p):
+            if use_pp:
+                return pipeline_loss_fn(cfg, p, batch, dist,
+                                        n_micro=tcfg.pp_microbatches)
+            return T.loss_fn(cfg, p, batch, mesh=dist.mesh,
+                             dp_axes=dist.dp_axes)
+        return jax.value_and_grad(lf, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if mb == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            # Gradient accumulation: scan over microbatches; grads live in
+            # one params-sized fp32 buffer (sharded like the params), the
+            # activation working set shrinks by the microbatch factor.
+            chunks = jax.tree_util.tree_map(
+                lambda t: t.reshape((mb, t.shape[0] // mb) + t.shape[1:]),
+                batch)
+
+            # The body is checkpointed so per-microbatch residuals (incl.
+            # ZeRO-3's gathered layer weights) rematerialize instead of
+            # being stashed per iteration (measured 85 GB/device without).
+            @jax.checkpoint
+            def body(acc, chunk):
+                g_acc, loss_acc = acc
+                (loss, _), g = grads_of(params, chunk)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, loss_acc + loss), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda t: jnp.zeros(t.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (g0, jnp.asarray(0.0, jnp.float32)), chunks)
+            grads = jax.tree_util.tree_map(lambda g: g / mb, grads)
+            loss = loss_sum / mb
+            metrics = {"xent": loss, "aux": jnp.asarray(0.0)}
+        new_params, new_opt, opt_metrics = opt_update(
+            grads, opt_state, params, loss)
+        metrics = dict(metrics, **opt_metrics, loss=loss)
+        return new_params, new_opt, metrics
+
+    pshape = params_shape(cfg)
+    oshape = jax.eval_shape(opt_init, pshape)
+    # Stage-shard the layer dim only when it divides the stage count;
+    # otherwise params stay FSDP-sharded and the pipeline pays one
+    # params-sized reshard per step (vs per-layer gathers — still a win).
+    stage_ok = use_pp and cfg.num_layers % dist.mesh.shape["data"] == 0
+    p_sh = SH.param_shardings(pshape, dist, cfg, pipeline=stage_ok)
+    o_sh = _opt_state_shardings(oshape, dist, cfg, p_sh)
+    b_specs = SH.batch_specs(cfg, dist, "train")
+    b_sh = {k: dist.sharding(v) for k, v in b_specs.items()}
+    rep = dist.sharding(P())
+    m_sh = None  # let metrics land replicated (scalars)
+    in_sh = (p_sh, o_sh, b_sh)
+    out_sh = (p_sh, o_sh, m_sh)
+    return train_step, in_sh, out_sh, (pshape, oshape)
+
+
+def _logits_sharding(cfg: ModelConfig, dist: SH.Dist, batch: int):
+    """(B, V) logits: batch over dp when divisible, vocab over tp when
+    divisible (out_shardings require exact divisibility, unlike internal
+    constraints)."""
+    bdim = dist.dp if batch % dist.dp_size == 0 else None
+    vdim = dist.tp_axis if cfg.vocab_size % dist.tp_size == 0 else None
+    return dist.sharding(P(bdim, vdim))
+
+
+def make_prefill_step(cfg: ModelConfig, dist: SH.Dist, shape: ShapeConfig):
+    def prefill_step(params, batch):
+        return T.prefill(cfg, params, batch, mesh=dist.mesh,
+                         dp_axes=dist.dp_axes)
+
+    pshape = params_shape(cfg)
+    p_sh = SH.param_shardings(pshape, dist, cfg)
+    b_specs = SH.batch_specs(cfg, dist, "prefill")
+    b_sh = {k: dist.sharding(v) for k, v in b_specs.items()}
+    logits_sh = _logits_sharding(cfg, dist, shape.global_batch)
+    c_spec = SH.cache_spec(cfg, dist, shape.global_batch)
+    c_sh = _cache_shardings(cfg, dist, shape, c_spec)
+    return prefill_step, (p_sh, b_sh), (logits_sh, c_sh), (pshape,)
+
+
+def _cache_shardings(cfg, dist, shape, c_spec):
+    # cache_spec returns PartitionSpecs keyed like the cache dict; the real
+    # cache trees have the same keys.
+    return {k: dist.sharding(v) for k, v in c_spec.items()}
+
+
+def make_decode_step(cfg: ModelConfig, dist: SH.Dist, shape: ShapeConfig):
+    def serve_step(params, token, cache, pos):
+        return T.decode_step(cfg, params, token, cache, pos,
+                             mesh=dist.mesh, dp_axes=dist.dp_axes)
+
+    pshape = params_shape(cfg)
+    p_sh = SH.param_shardings(pshape, dist, cfg)
+    bspec = SH.batch_specs(cfg, dist, "decode")
+    tok_sh = dist.sharding(
+        bspec["token"] if shape.global_batch >= dist.dp_size
+        else P(None, None))
+    c_spec = SH.cache_spec(cfg, dist, shape.global_batch)
+    c_sh = _cache_shardings(cfg, dist, shape, c_spec)
+    pos_sh = dist.sharding(P())
+    logits_sh = _logits_sharding(cfg, dist, shape.global_batch)
+    in_sh = (p_sh, tok_sh, c_sh, pos_sh)
+    out_sh = (logits_sh, c_sh)
+    return serve_step, in_sh, out_sh, (pshape,)
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, dist: SH.Dist,
+               tcfg: TrainConfig | None = None):
+    """Build + lower the right step for one (arch × shape) cell.
+
+    Returns the jax ``Lowered`` object (call .compile() on it).
+    """
+    tcfg = tcfg or TrainConfig()
+    if shape.kind == "train":
+        fn, in_sh, out_sh, (pshape, oshape) = make_train_step(
+            cfg, dist, tcfg, shape)
+        batch = IO.input_specs(cfg, shape)
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=(0, 1))
+        return jitted.lower(pshape, oshape, batch)
+    if shape.kind == "prefill":
+        fn, in_sh, out_sh, (pshape,) = make_prefill_step(cfg, dist, shape)
+        batch = IO.input_specs(cfg, shape)
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        return jitted.lower(pshape, batch)
+    # decode
+    fn, in_sh, out_sh, (pshape,) = make_decode_step(cfg, dist, shape)
+    specs = IO.input_specs(cfg, shape)
+    token = specs["token"]
+    cache = IO.cache_specs(cfg, shape)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(2,))
+    return jitted.lower(pshape, token, cache, pos)

@@ -1,0 +1,210 @@
+"""Attention layers: chunked (flash-style) jnp attention + GQA projections.
+
+Three execution paths share one semantic contract (kernels/ref.py oracle):
+
+* ``chunked_attention`` — online-softmax over KV blocks via ``lax.scan``:
+  O(S·block) memory instead of O(S²).  This is the path used for training
+  and prefill — it is what makes the 32k-prefill cells compile with bounded
+  per-device memory, and on TPU its per-block body is exactly what the
+  Pallas ``flash_attention`` kernel implements (ops.py dispatches there).
+* ``decode_attention`` — one query token against a (possibly partial) cache;
+  direct softmax (linear in S, memory-bound).  The cache sequence dimension
+  may be sharded over the ``model`` mesh axis; the softmax reductions then
+  lower to tiny all-reduces (flash-decode combine), scheduled by GSPMD.
+* the Pallas kernel (TPU) — selected in ``ops.flash_attention``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.layers import apply_mrope, apply_rope
+
+NEG_INF = -1e30
+
+
+def chunked_attention(q, k, v, *, causal: bool = True, block: int = 1024,
+                      scale=None):
+    """Flash-style attention in jnp.  q: (B,Hq,Sq,D); k,v: (B,Hkv,Skv,D)."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    blk = min(block, Skv)
+    nblk = -(-Skv // blk)
+    pad = nblk * blk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
+    qf = q.astype(jnp.float32) * scale
+    offset = Skv - Sq                        # queries end-aligned to kv
+    qpos = offset + jnp.arange(Sq)
+
+    kb = k.reshape(B, Hkv, nblk, blk, D).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(B, Hkv, nblk, blk, D).transpose(2, 0, 1, 3, 4)
+
+    # The per-block body is itself rematerialized: without this, the scan's
+    # backward saves every block's (B, Hq, Sq, blk) fp32 score/softmax
+    # tensors — in aggregate the full O(S²) attention matrix, defeating the
+    # point of chunking.  With it, backward recomputes each block (one extra
+    # attention forward) and stores only the (m, ℓ, acc) carries — the jnp
+    # analogue of the flash-attention backward.
+    @jax.checkpoint
+    def body(carry, inp):
+        m, l, acc, ib = carry[0], carry[1], carry[2], carry[3]
+        kblk, vblk = inp                     # (B, Hkv, blk, D)
+        kr = jnp.repeat(kblk, rep, axis=1).astype(jnp.float32)
+        vr = jnp.repeat(vblk, rep, axis=1).astype(jnp.float32)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kr)
+        kpos = ib * blk + jnp.arange(blk)
+        valid = kpos[None, :] < Skv          # mask zero padding
+        if causal:
+            valid = valid & (kpos[None, :] <= qpos[:, None])
+        s = jnp.where(valid[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd", p, vr)
+        return (m_new, l_new, acc_new, ib + 1), None
+
+    m0 = jnp.full((B, Hq, Sq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hq, Sq, 1), jnp.float32)
+    a0 = jnp.zeros((B, Hq, Sq, D), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(
+        body, (m0, l0, a0, jnp.asarray(0, jnp.int32)), (kb, vb))
+    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+
+def decode_attention(q, k, v, cache_len, *, scale=None):
+    """One-step attention: q (B,Hq,1,D) vs cache k,v (B,Hkv,S,D).
+
+    ``cache_len`` (scalar int): number of valid cache positions; the query
+    attends to cache[:cache_len] plus itself (caller appends it to cache
+    before or after, see KVCache.update).
+
+    GQA is a grouped einsum — materializing repeated KV would copy the
+    cache ×(Hq/Hkv) (measured +17 GB/device on deepseek decode_32k).  The
+    cache stays in its storage dtype; scores are fp32.  With the cache
+    sequence dim sharded over ``model``, the softmax reductions lower to
+    the flash-decode partial-max/sum all-reduces.
+    """
+    B, Hq, _, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    # Keep k/v in their storage dtype: converting cache slices to fp32 per
+    # step lets XLA hoist the convert out of the layer loop — a full fp32
+    # copy of the whole cache (+6.4 GB/device measured).  bf16 operands
+    # with fp32 MXU accumulation give the same numerics where it matters.
+    qg = (q.astype(jnp.float32) * scale).astype(q.dtype) \
+        .reshape(B, Hkv, rep, D)
+    s = jnp.einsum("bhrd,bhkd->bhrk", qg, k,
+                   preferred_element_type=jnp.float32)
+    valid = jnp.arange(S)[None, None, None, :] < cache_len
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)                   # (B,Hkv,rep,S) fp32
+    out = jnp.einsum("bhrk,bhkd->bhrd", p.astype(k.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Hq, 1, D).astype(q.dtype)
+
+
+# ------------------------------------------------------------------ #
+# Full GQA attention layer (projections + rope + attention + output) #
+# ------------------------------------------------------------------ #
+def init_attn_params(key, cfg: ModelConfig):
+    import repro.models.layers as L
+    d, hq, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.init_dense(ks[0], (d, hq * dh)),
+        "wk": L.init_dense(ks[1], (d, hkv * dh)),
+        "wv": L.init_dense(ks[2], (d, hkv * dh)),
+        "wo": L.init_dense(ks[3], (hq * dh, d)),
+    }
+
+
+def _split_heads(x, n_heads, head_dim):
+    B, S, _ = x.shape
+    return x.reshape(B, S, n_heads, head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    B, H, S, D = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, S, H * D)
+
+
+def attention_layer(params, x, positions, cfg: ModelConfig, *,
+                    causal: bool = True, block: int = 1024):
+    """Training/prefill attention over x: (B, S, d_model).
+
+    Returns (out, (k, v)) — the kv tensors for cache construction.
+    """
+    dt = x.dtype
+    q = _split_heads(x @ params["wq"].astype(dt), cfg.num_heads, cfg.head_dim)
+    k = _split_heads(x @ params["wk"].astype(dt), cfg.num_kv_heads,
+                     cfg.head_dim)
+    v = _split_heads(x @ params["wv"].astype(dt), cfg.num_kv_heads,
+                     cfg.head_dim)
+    if cfg.use_mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    out = chunked_attention(q, k, v, causal=causal, block=block)
+    return _merge_heads(out) @ params["wo"].astype(dt), (k, v)
+
+
+def cross_attention_layer(params, x, kv_cache, cfg: ModelConfig):
+    """Decoder cross-attention against precomputed encoder (k, v)."""
+    dt = x.dtype
+    k, v = kv_cache
+    q = _split_heads(x @ params["wq"].astype(dt), cfg.num_heads, cfg.head_dim)
+    out = chunked_attention(q, k, v, causal=False)
+    return _merge_heads(out) @ params["wo"].astype(dt)
+
+
+def encoder_kv(params, enc_out, cfg: ModelConfig):
+    dt = enc_out.dtype
+    k = _split_heads(enc_out @ params["wk"].astype(dt), cfg.num_kv_heads,
+                     cfg.head_dim)
+    v = _split_heads(enc_out @ params["wv"].astype(dt), cfg.num_kv_heads,
+                     cfg.head_dim)
+    return k, v
+
+
+def attention_decode(params, x, cache_k, cache_v, pos, cfg: ModelConfig):
+    """Single-token attention step.
+
+    x: (B, 1, d); cache_k/v: (B, Hkv, S, dh) with ``pos`` valid entries.
+    Writes the new token's k/v at index ``pos`` and attends to [0, pos].
+    Returns (out, new_cache_k, new_cache_v).
+    """
+    dt = x.dtype
+    B = x.shape[0]
+    q = _split_heads(x @ params["wq"].astype(dt), cfg.num_heads, cfg.head_dim)
+    k = _split_heads(x @ params["wk"].astype(dt), cfg.num_kv_heads,
+                     cfg.head_dim)
+    v = _split_heads(x @ params["wv"].astype(dt), cfg.num_kv_heads,
+                     cfg.head_dim)
+    posn = jnp.full((B, 1), pos, jnp.int32)
+    if cfg.use_mrope:
+        pos3 = jnp.broadcast_to(posn[:, None, :], (B, 3, 1))
+        q = apply_mrope(q, pos3, cfg.rope_theta)
+        k = apply_mrope(k, pos3, cfg.rope_theta)
+    else:
+        q = apply_rope(q, posn, cfg.rope_theta)
+        k = apply_rope(k, posn, cfg.rope_theta)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), pos, axis=2)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), pos, axis=2)
+    out = decode_attention(q, cache_k, cache_v, pos + 1)
+    return _merge_heads(out) @ params["wo"].astype(dt), cache_k, cache_v

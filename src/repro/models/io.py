@@ -1,0 +1,96 @@
+"""Input specifications per (arch × shape): ShapeDtypeStructs for the AOT
+dry-run and random instantiation for smoke tests.
+
+Per the assignment, modality frontends are stubs: the encdec (audio) arch
+receives precomputed frame embeddings ``enc_embeds`` and the VLM arch
+receives M-RoPE position streams alongside token ids — exactly what the
+(unmodeled) patchifier/speech-frontend would emit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig, ShapeConfig
+
+
+def _act_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every step-function input."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = _act_dtype(cfg)
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        specs = {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+    elif shape.kind == "prefill":
+        specs = {"tokens": sds((B, S), i32)}
+    else:  # decode: one new token; positions/enc context come from the cache
+        return {"token": sds((B, 1), i32)}
+    if cfg.use_mrope:
+        specs["positions"] = sds((B, 3, S), i32)
+    if cfg.is_encoder_decoder:
+        s_enc = S  # stub frontend emits one frame embedding per position
+        specs["enc_embeds"] = sds((B, s_enc, cfg.d_model), dt)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStructs for the decode cache at ``seq_len`` capacity."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = _act_dtype(cfg)
+    sds = jax.ShapeDtypeStruct
+    Lr = cfg.num_layers
+    if cfg.family == "ssm":
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+        return {
+            "conv": sds((Lr, B, cfg.ssm_conv_width - 1, conv_ch), dt),
+            "ssm": sds((Lr, B, cfg.ssm_nheads, cfg.ssm_state,
+                        cfg.ssm_headdim), jnp.float32),
+        }
+    att = (B, cfg.num_kv_heads, S, cfg.head_dim)
+    if cfg.family == "hybrid":
+        n_groups = cfg.num_layers // cfg.attn_every
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+        return {
+            "conv": sds((Lr, B, cfg.ssm_conv_width - 1, conv_ch), dt),
+            "ssm": sds((Lr, B, cfg.ssm_nheads, cfg.ssm_state,
+                        cfg.ssm_headdim), jnp.float32),
+            "attn_k": sds((n_groups,) + att, dt),
+            "attn_v": sds((n_groups,) + att, dt),
+        }
+    if cfg.is_encoder_decoder:
+        return {
+            "self_k": sds((Lr,) + att, dt), "self_v": sds((Lr,) + att, dt),
+            "cross_k": sds((Lr,) + att, dt), "cross_v": sds((Lr,) + att, dt),
+        }
+    return {"k": sds((Lr,) + att, dt), "v": sds((Lr,) + att, dt)}
+
+
+def random_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0) -> dict:
+    """Concrete random inputs matching input_specs (smoke tests/examples)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, spec in input_specs(cfg, shape).items():
+        if name == "positions":
+            # Sequential M-RoPE streams (pure-text layout: t == h == w).
+            B3, _, S3 = spec.shape
+            pos = jnp.broadcast_to(jnp.arange(S3, dtype=jnp.int32),
+                                   (B3, 3, S3))
+            out[name] = pos
+        elif spec.dtype == jnp.int32:
+            out[name] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, size=spec.shape), jnp.int32)
+        else:
+            out[name] = jnp.asarray(
+                rng.standard_normal(spec.shape), spec.dtype)
+    return out
+
+
+def zero_cache(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_specs(cfg, shape))

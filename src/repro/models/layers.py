@@ -1,0 +1,124 @@
+"""Shared transformer building blocks (pure-jnp, pjit-friendly).
+
+Conventions:
+* parameters are fp32 "master" tensors; compute casts to the config dtype;
+* all functions are shape-polymorphic over batch/sequence;
+* no framework objects — params are plain nested dicts, layers are functions
+  (composability requirement: everything works under scan/remat/shard_map).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w1, w3, w2):
+    """SwiGLU MLP:  (silu(x·w1) ⊙ (x·w3)) · w2."""
+    dt = x.dtype
+    h = jax.nn.silu(x @ w1.astype(dt)) * (x @ w3.astype(dt))
+    return h @ w2.astype(dt)
+
+
+# ------------------------------------------------------------------ #
+# Rotary position embeddings (standard + M-RoPE)                     #
+# ------------------------------------------------------------------ #
+def _rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (B, H, S, D); positions: (B, S) int32 → rotated x (same dtype).
+
+    Rotate-half convention (llama-style): pairs (x[..., :D/2], x[..., D/2:]).
+    """
+    B, H, S, D = x.shape
+    freqs = _rope_freqs(D, theta)                       # (D/2,)
+    ang = positions.astype(jnp.float32)[:, None, :, None] * freqs  # (B,1,S,D/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., : D // 2], x[..., D // 2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# Qwen2-VL M-RoPE: the rotary half-dim is split into three sections
+# (temporal, height, width), each driven by its own position stream.
+MROPE_SECTIONS = (1, 1, 2)  # ratios; scaled to D/2 per config (16/24/24 @128)
+
+
+def mrope_sections(head_dim: int) -> tuple[int, int, int]:
+    half = head_dim // 2
+    t = half // 4
+    h = (half - t) // 2
+    return (t, h, half - t - h)      # 128 → (16, 24, 24), Qwen2-VL's split
+
+
+def apply_mrope(x, positions3, theta: float = 10_000.0):
+    """x: (B, H, S, D); positions3: (B, 3, S) int32 (t/h/w streams)."""
+    B, H, S, D = x.shape
+    half = D // 2
+    freqs = _rope_freqs(D, theta)                       # (half,)
+    secs = mrope_sections(D)
+    # Per-frequency stream selector: first secs[0] freqs use t, then h, w.
+    sel = jnp.concatenate([
+        jnp.full((secs[0],), 0), jnp.full((secs[1],), 1),
+        jnp.full((secs[2],), 2)]).astype(jnp.int32)     # (half,)
+    pos = positions3.astype(jnp.float32)[:, sel, :]     # (B, half, S)
+    ang = pos.transpose(0, 2, 1)[:, None, :, :] * freqs  # (B,1,S,half)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ #
+# Embedding / logits                                                 #
+# ------------------------------------------------------------------ #
+def embed(tokens, table, dtype):
+    return table.astype(dtype)[tokens]
+
+
+def logits(x, table_or_head):
+    """Final projection: bf16 operands, fp32 accumulation/output.
+
+    Casting the table to fp32 *before* the matmul doubles the bytes of the
+    GSPMD all-gather that materializes it (measured 3.4 GB/device at 67B
+    scale); casting to the activation dtype keeps the gather in bf16 and
+    lets the MXU accumulate in fp32.
+    """
+    return jax.lax.dot_general(
+        x, table_or_head.astype(x.dtype),
+        dimension_numbers=(((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def cross_entropy(lg, labels, *, z_loss: float = 0.0):
+    """Mean token cross-entropy; lg fp32 (B, S, V); labels (B, S) int32.
+
+    Optional z-loss (log²Z regularizer) — the standard large-scale stability
+    trick; 0 by default.
+    """
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss > 0:
+        nll = nll + z_loss * lse ** 2
+    return jnp.mean(nll)
+
+
+def init_dense(key, shape, scale=None):
+    fan_in = shape[0]
+    if scale is None:
+        scale = fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale)

@@ -1,0 +1,127 @@
+"""Mamba2 (SSD) block — the attention-free backbone for mamba2/zamba2.
+
+Faithful to the Mamba2 layer structure:
+  in_proj → [z | x | B | C | dt],  causal depthwise conv on (x,B,C),
+  SSD scan (kernels/ops.ssd_scan: Pallas on TPU, chunked jnp elsewhere),
+  per-head D skip, gated RMSNorm (y ⊙ silu(z)), out_proj.
+
+Single B/C group (ngroups=1, the published 1.3b setting).  Decode keeps a
+(conv_state, ssm_state) pair per layer — O(1) per token, which is what makes
+the 512k long-context cells runnable for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models import layers as L
+
+
+def init_ssm_params(key, cfg: ModelConfig):
+    d = cfg.d_model
+    din = cfg.d_inner
+    nh = cfg.ssm_nheads
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 5)
+    conv_ch = din + 2 * N                      # conv over [x | B | C]
+    return {
+        # in_proj → [z (din) | x (din) | B (N) | C (N) | dt (nh)]
+        "w_in": L.init_dense(ks[0], (d, 2 * din + 2 * N + nh)),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_ch),
+                                    jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.linspace(1e-3, 1e-1, nh).astype(jnp.float32))),
+        "norm_scale": jnp.ones((din,), jnp.float32),
+        "w_out": L.init_dense(ks[4], (din, d)),
+    }
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv1d.  u: (B, S, C); w: (K, C); b: (C,)."""
+    K = w.shape[0]
+    dt = u.dtype
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros(u.shape, jnp.float32)
+    for i in range(K):                       # K is 4 — unrolled, fused by XLA
+        out = out + pad[:, i: i + u.shape[1], :].astype(jnp.float32) \
+            * w[i][None, None, :]
+    return jax.nn.silu(out + b[None, None, :]).astype(dt)
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    din, N, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    z = proj[..., :din]
+    xBC = proj[..., din: 2 * din + 2 * N]
+    dt = proj[..., 2 * din + 2 * N:]
+    return z, xBC, dt
+
+
+def ssm_layer(params, x, cfg: ModelConfig):
+    """Training/prefill SSD block over x: (B, S, d_model)."""
+    dtp = x.dtype
+    B_, S, _ = x.shape
+    din, N, nh, P = (cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads,
+                     cfg.ssm_headdim)
+    proj = x @ params["w_in"].astype(dtp)
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+    xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    xs = xBC[..., :din]
+    Bm = xBC[..., din: din + N]
+    Cm = xBC[..., din + N:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])   # (B,S,nh)
+    A = -jnp.exp(params["A_log"])                              # (nh,)
+    xh = xs.reshape(B_, S, nh, P)
+    y, _ = kops.ssd_scan(xh, dt, A, Bm, Cm, chunk=cfg.ssm_chunk)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh.astype(y.dtype)
+    y = y.reshape(B_, S, din)
+    y = L.rms_norm(y * jax.nn.silu(z), params["norm_scale"], cfg.norm_eps)
+    return y @ params["w_out"].astype(dtp)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype):
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_state,
+                          cfg.ssm_headdim), jnp.float32),
+    }
+
+
+def ssm_decode(params, x, cache, cfg: ModelConfig):
+    """Single-token SSD step.  x: (B, 1, d_model); cache per init_ssm_cache."""
+    dtp = x.dtype
+    B_ = x.shape[0]
+    din, N, nh, P = (cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads,
+                     cfg.ssm_headdim)
+    proj = x[:, 0, :] @ params["w_in"].astype(dtp)             # (B, ·)
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+
+    # conv state: window of the last K−1 inputs
+    window = jnp.concatenate([cache["conv"],
+                              xBC[:, None, :].astype(cache["conv"].dtype)],
+                             axis=1)                            # (B, K, C)
+    w = params["conv_w"]
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w)
+    xBC_t = jax.nn.silu(conv_out + params["conv_b"][None, :]).astype(dtp)
+    new_conv = window[:, 1:, :]
+
+    xs = xBC_t[..., :din]
+    Bm = xBC_t[..., din: din + N]
+    Cm = xBC_t[..., din + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, :])          # (B, nh)
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(B_, nh, P)
+    y, h_new = kops.ssd_decode(xh, dt, A, Bm, Cm, cache["ssm"])
+    y = y + params["D"].astype(y.dtype)[None, :, None] * xh.astype(y.dtype)
+    y = y.reshape(B_, din)
+    y = L.rms_norm(y * jax.nn.silu(z), params["norm_scale"], cfg.norm_eps)
+    out = (y @ params["w_out"].astype(dtp))[:, None, :]
+    return out, {"conv": new_conv, "ssm": h_new}

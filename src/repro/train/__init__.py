@@ -1,0 +1,3 @@
+from repro.train.loop import StragglerMonitor, TrainLoop
+
+__all__ = ["StragglerMonitor", "TrainLoop"]

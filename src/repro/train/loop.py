@@ -1,0 +1,148 @@
+"""Fault-tolerant training loop.
+
+The loop is the part of the framework a cluster operator actually touches,
+so it carries the operational features:
+
+* **checkpoint/restart** — periodic (+ final, + on-signal) atomic
+  checkpoints of (params, opt_state, data step); on start, auto-resume from
+  the newest valid checkpoint (``TrainConfig.resume``);
+* **signal safety** — SIGTERM/SIGINT set a flag; the loop finishes the
+  in-flight step, checkpoints, and exits cleanly (preemption handling);
+* **straggler monitor** — per-step wall times feed an EWMA; steps slower
+  than ``straggler_factor``× the EWMA are counted and logged.  On a real
+  multi-host fleet this signal drives the backup-worker policy; FLEXA's
+  own partial-update semantics (Sᵏ subsets, Theorem 1) mean the optimizer
+  itself tolerates skipped/stale blocks — see DESIGN.md §5;
+* **gradient compression** hooks (distributed/compression.py);
+* deterministic, restart-stable data order (data pipeline is keyed by
+  step index, so resume repeats no sample).
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.config.base import ModelConfig, TrainConfig
+from repro.core.optimizer import get_optimizer
+from repro.data.synthetic import TokenPipeline
+from repro.distributed import compression as COMP
+from repro.models import transformer as T
+
+
+@dataclass
+class StragglerMonitor:
+    factor: float = 2.0
+    ewma: float = 0.0
+    alpha: float = 0.1
+    slow_steps: int = 0
+    history: list = field(default_factory=list)
+
+    def observe(self, dt: float) -> bool:
+        slow = self.ewma > 0 and dt > self.factor * self.ewma
+        self.ewma = dt if self.ewma == 0 else \
+            (1 - self.alpha) * self.ewma + self.alpha * dt
+        if slow:
+            self.slow_steps += 1
+        self.history.append(dt)
+        return slow
+
+
+class TrainLoop:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, *,
+                 batch: int = 8, seq_len: int = 128, mesh=None,
+                 dp_axes=("data",)):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.dp_axes = dp_axes
+        self.pipe = TokenPipeline(cfg, batch, seq_len, seed=tcfg.seed)
+        self.opt_init, self.opt_update = get_optimizer(tcfg)
+        self.ckpt = Checkpointer(tcfg.ckpt_dir, keep=tcfg.ckpt_keep) \
+            if tcfg.ckpt_dir else None
+        self.monitor = StragglerMonitor()
+        self._stop = False
+        self.metrics_log: list[dict] = []
+
+        use_comp = tcfg.grad_compression != "none"
+
+        def step_fn(params, opt_state, comp_state, batch):
+            def lf(p):
+                return T.loss_fn(self.cfg, p, batch, mesh=self.mesh,
+                                 dp_axes=self.dp_axes)
+            (loss, metrics), grads = jax.value_and_grad(
+                lf, has_aux=True)(params)
+            if use_comp:
+                grads, comp_state = COMP.compress(
+                    grads, comp_state, kind=tcfg.grad_compression,
+                    topk_frac=tcfg.grad_topk_frac)
+            new_params, new_opt, opt_metrics = self.opt_update(
+                grads, opt_state, params, loss)
+            return new_params, new_opt, comp_state, \
+                dict(metrics, **opt_metrics, loss=loss)
+
+        self.step_fn = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+
+    # ------------------------------------------------------------- #
+    def _install_signals(self):
+        def handler(signum, frame):
+            self._stop = True
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                signal.signal(sig, handler)
+            except ValueError:
+                pass  # not on main thread (tests)
+
+    def run(self, steps: int | None = None, key=None):
+        tcfg = self.tcfg
+        steps = steps if steps is not None else tcfg.steps
+        key = key if key is not None else jax.random.PRNGKey(tcfg.seed)
+
+        params = T.init_params(self.cfg, key)
+        opt_state = self.opt_init(params)
+        comp_state = COMP.init_state(params)
+        start_step = 0
+
+        if self.ckpt is not None and tcfg.resume:
+            latest = self.ckpt.latest_step()
+            if latest is not None:
+                (params, opt_state), _ = self.ckpt.restore(
+                    (params, opt_state), step=latest)
+                start_step = latest
+        self._install_signals()
+
+        for step in range(start_step, steps):
+            batch = {k: jnp.asarray(v) for k, v in
+                     self.pipe(step).items()}
+            t0 = time.perf_counter()
+            params, opt_state, comp_state, metrics = self.step_fn(
+                params, opt_state, comp_state, batch)
+            loss = float(metrics["loss"])       # sync point
+            dt = time.perf_counter() - t0
+            slow = self.monitor.observe(dt)
+            rec = {"step": step + 1, "loss": loss, "time": dt,
+                   "slow": slow}
+            self.metrics_log.append(rec)
+            if (step + 1) % tcfg.log_every == 0:
+                print(f"step {step+1:5d} loss {loss:.4f} "
+                      f"({dt*1e3:.0f} ms{' SLOW' if slow else ''})",
+                      flush=True)
+            if self.ckpt is not None and (step + 1) % tcfg.ckpt_every == 0:
+                if tcfg.ckpt_async:
+                    self.ckpt.save_async(step + 1, (params, opt_state))
+                else:
+                    self.ckpt.save(step + 1, (params, opt_state))
+            if self._stop:
+                print(f"signal received — checkpointing at step {step+1} "
+                      "and exiting", flush=True)
+                break
+
+        if self.ckpt is not None:
+            self.ckpt.wait()
+            self.ckpt.save(min(step + 1, steps), (params, opt_state))
+        return params, opt_state

@@ -1,0 +1,9 @@
+# NOTE: no XLA_FLAGS here on purpose — tests and benches must see the real
+# single CPU device; only launch/dryrun.py forces the 512-device topology.
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,50 @@
+"""Artifact-pipeline integrity: the committed dry-run/roofline results stay
+consistent with the registry (guards against config drift)."""
+import json
+from pathlib import Path
+
+import pytest
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+
+@pytest.mark.skipif(not (RESULTS / "roofline.json").exists(),
+                    reason="roofline artifacts not generated")
+def test_roofline_covers_all_cells():
+    rows = json.loads((RESULTS / "roofline.json").read_text())
+    ok = [r for r in rows if r["status"] == "ok"]
+    skipped = [r for r in rows if r["status"] == "skipped"]
+    assert len(ok) == 32
+    assert len(skipped) == 8
+    for r in ok:
+        assert r["dominant"] in ("compute", "memory", "collective")
+        assert r["hlo_flops"] > 0
+        assert 0 < r["useful_ratio"] < 1.5, (r["arch"], r["shape"])
+        # prefill cells: no backward ⇒ MODEL/HLO ≈ 1 (methodology check)
+        if r["shape"] == "prefill_32k":
+            assert 0.8 < r["useful_ratio"] < 1.25, r["arch"]
+
+
+@pytest.mark.skipif(not (RESULTS / "dryrun").exists(),
+                    reason="dry-run artifacts not generated")
+def test_dryrun_multipod_coverage_and_budget():
+    from repro.config.base import SHAPES
+    from repro.configs.registry import ARCHS, cell_applicable
+    missing, over = [], []
+    for arch, cfg in ARCHS.items():
+        for sname, shape in SHAPES.items():
+            if not cell_applicable(cfg, shape)[0]:
+                continue
+            for mesh in ("16x16", "2x16x16"):
+                f = RESULTS / "dryrun" / f"{arch}__{sname}__{mesh}.json"
+                if not f.exists():
+                    missing.append(f.name)
+                    continue
+                rec = json.loads(f.read_text())
+                assert rec["status"] == "ok", f.name
+                live = rec["memory"].get("temp_size_in_bytes", 0) + \
+                    rec["memory"].get("argument_size_in_bytes", 0)
+                if live > 16e9:
+                    over.append((f.name, live / 1e9))
+    assert not missing, missing
+    assert not over, over

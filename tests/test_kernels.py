@@ -1,0 +1,135 @@
+"""Per-kernel correctness sweeps: Pallas (interpret mode) vs jnp oracle,
+across shapes and dtypes, plus hypothesis fuzzing of the FLEXA prox."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+# ------------------------------------------------------------------ #
+# flexa_prox                                                         #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("shape", [(8,), (130,), (33, 7), (4, 5, 6),
+                                   (1024,), (257, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("c", [0.0, 0.3])
+def test_flexa_best_response_sweep(shape, dtype, c):
+    x = jnp.asarray(RNG.standard_normal(shape), dtype)
+    g = jnp.asarray(RNG.standard_normal(shape), dtype)
+    z_r, e_r = ref.flexa_best_response_ref(x, g, 2.0, c)
+    z_k, e_k = ops.flexa_best_response(x, g, 2.0, c, force="interpret")
+    np.testing.assert_allclose(np.asarray(z_k), np.asarray(z_r),
+                               atol=2e-5, rtol=2e-5)
+    assert abs(float(e_k) - float(e_r)) < 1e-3 * max(1.0, float(e_r))
+
+
+@pytest.mark.parametrize("scalar_d", [True, False])
+def test_flexa_apply_sweep(scalar_d):
+    shape = (37, 19)
+    x = jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+    g = jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+    d = 1.7 if scalar_d else jnp.asarray(
+        RNG.uniform(0.5, 3.0, shape), jnp.float32)
+    a_r = ref.flexa_apply_ref(x, g, d, 0.2, 0.9, 1.0)
+    a_k = ops.flexa_apply(x, g, d, 0.2, jnp.float32(0.9),
+                          force="interpret")
+    np.testing.assert_allclose(np.asarray(a_k), np.asarray(a_r), atol=2e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 600), st.floats(0.1, 10), st.floats(0, 2))
+def test_flexa_prox_fuzz(n, d, c):
+    x = jnp.asarray(RNG.standard_normal(n), jnp.float32)
+    g = jnp.asarray(RNG.standard_normal(n), jnp.float32)
+    z_r, e_r = ref.flexa_best_response_ref(x, g, d, c)
+    z_k, e_k = ops.flexa_best_response(x, g, d, c, force="interpret")
+    np.testing.assert_allclose(np.asarray(z_k), np.asarray(z_r), atol=1e-5,
+                               rtol=1e-5)
+
+
+# ------------------------------------------------------------------ #
+# flash attention                                                    #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("B,Hq,Hkv,S,D,bq,bk", [
+    (1, 2, 2, 64, 16, 32, 32),      # MHA square
+    (2, 4, 2, 64, 16, 16, 64),      # GQA, uneven blocks
+    (1, 8, 1, 128, 32, 64, 32),     # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, Hq, Hkv, S, D, bq, bk, dtype):
+    q = jnp.asarray(RNG.standard_normal((B, Hq, S, D)), dtype)
+    k = jnp.asarray(RNG.standard_normal((B, Hkv, S, D)), dtype)
+    v = jnp.asarray(RNG.standard_normal((B, Hkv, S, D)), dtype)
+    o_r = ref.flash_attention_ref(q, k, v, causal=True)
+    o_k = ops.flash_attention(q, k, v, causal=True, force="interpret",
+                              block_q=bq, block_k=bk)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(o_k, np.float32), np.asarray(o_r, np.float32), atol=tol)
+
+
+def test_flash_attention_noncausal():
+    q = jnp.asarray(RNG.standard_normal((1, 2, 32, 16)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 2, 32, 16)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, 2, 32, 16)), jnp.float32)
+    o_r = ref.flash_attention_ref(q, k, v, causal=False)
+    o_k = ops.flash_attention(q, k, v, causal=False, force="interpret",
+                              block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=2e-5)
+
+
+def test_chunked_attention_matches_ref():
+    """The jnp flash path used by the models == oracle (incl. decode
+    offset alignment)."""
+    from repro.models.attention import chunked_attention
+    q = jnp.asarray(RNG.standard_normal((2, 4, 8, 16)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((2, 2, 32, 16)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((2, 2, 32, 16)), jnp.float32)
+    o_r = ref.flash_attention_ref(q, k, v, causal=True)   # offset = 24
+    o_c = chunked_attention(q, k, v, causal=True, block=8)
+    np.testing.assert_allclose(np.asarray(o_c), np.asarray(o_r), atol=2e-5)
+
+
+# ------------------------------------------------------------------ #
+# SSD scan                                                           #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("Bt,S,H,P,N,chunk", [
+    (1, 32, 2, 8, 8, 8),
+    (2, 64, 3, 16, 8, 16),
+    (1, 48, 1, 8, 16, 16),          # S not a chunk multiple after pad test
+])
+def test_ssd_scan_sweep(Bt, S, H, P, N, chunk):
+    x = jnp.asarray(RNG.standard_normal((Bt, S, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.3, (Bt, S, H)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2.0, (H,)), jnp.float32)
+    B = jnp.asarray(RNG.standard_normal((Bt, S, N)), jnp.float32)
+    C = jnp.asarray(RNG.standard_normal((Bt, S, N)), jnp.float32)
+    y_r, h_r = ops.ssd_scan(x, dt, A, B, C, chunk=chunk, force="ref")
+    y_k, h_k = ops.ssd_scan(x, dt, A, B, C, chunk=chunk, force="interpret")
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), atol=2e-4)
+
+
+def test_ssd_scan_matches_sequential_recurrence():
+    """Chunked == step-by-step recurrence (the semantic ground truth)."""
+    Bt, S, H, P, N = 1, 24, 2, 4, 6
+    x = jnp.asarray(RNG.standard_normal((Bt, S, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.3, (Bt, S, H)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2.0, (H,)), jnp.float32)
+    B = jnp.asarray(RNG.standard_normal((Bt, S, N)), jnp.float32)
+    C = jnp.asarray(RNG.standard_normal((Bt, S, N)), jnp.float32)
+    h = jnp.zeros((Bt, H, N, P))
+    ys = []
+    for t in range(S):
+        y, h = ref.ssd_decode_ref(x[:, t], dt[:, t], A, B[:, t], C[:, t], h)
+        ys.append(y)
+    y_seq = jnp.stack(ys, axis=1)
+    y_c, h_c = ops.ssd_scan(x, dt, A, B, C, chunk=8, force="ref")
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_seq),
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h_c), np.asarray(h), atol=2e-5)

@@ -1,0 +1,83 @@
+"""Property tests (hypothesis) for the proximal operators and step rules —
+the low-level invariants Algorithm 1's convergence proof leans on.
+"""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.prox import group_soft_threshold, soft_threshold
+from repro.core.stepsize import gamma_schedule
+
+S = settings(max_examples=25, deadline=None)
+
+floats = st.floats(-100, 100, allow_nan=False)
+pos = st.floats(0.01, 50, allow_nan=False)
+
+
+@S
+@given(st.lists(floats, min_size=1, max_size=32), pos)
+def test_soft_threshold_is_prox_of_l1(vs, t):
+    """z = soft(v,t) minimizes ½(z−v)² + t|z| — check first-order optimality
+    and that it beats nearby points."""
+    v = jnp.asarray(vs, jnp.float32)
+    z = soft_threshold(v, t)
+    obj = lambda u: 0.5 * (u - v) ** 2 + t * jnp.abs(u)
+    f_z = obj(z)
+    for delta in (1e-2, -1e-2, 0.1, -0.1):
+        tol = 1e-5 * (1.0 + jnp.abs(f_z))      # fp32-relative
+        assert bool(jnp.all(f_z <= obj(z + delta) + tol))
+
+
+@S
+@given(st.lists(floats, min_size=1, max_size=32), pos)
+def test_soft_threshold_shrinks(vs, t):
+    v = jnp.asarray(vs, jnp.float32)
+    z = soft_threshold(v, t)
+    assert bool(jnp.all(jnp.abs(z) <= jnp.abs(v) + 1e-6))
+    assert bool(jnp.all(jnp.sign(z) * jnp.sign(v) >= 0))       # no sign flip
+    # exact-zero region: |v| ≤ t ⇒ z = 0
+    assert bool(jnp.all(jnp.where(jnp.abs(v) <= t, z == 0, True)))
+
+
+@S
+@given(st.lists(floats, min_size=2, max_size=16), pos)
+def test_group_soft_threshold_norm(vs, t):
+    """Block shrink: ‖z‖ = max(0, ‖v‖−t) and direction preserved."""
+    v = jnp.asarray(vs, jnp.float32)[None, :]
+    z = group_soft_threshold(v, t)
+    nv = float(jnp.linalg.norm(v))
+    nz = float(jnp.linalg.norm(z))
+    assert abs(nz - max(0.0, nv - t)) < 1e-3 * max(1.0, nv)
+    if nv > t * (1 + 1e-3) and t > 0 and nv > 1e-3:
+        # strictly outside the shrinkage boundary: direction preserved
+        cos = float(jnp.vdot(v, z)) / max(nv * nz, 1e-30)
+        assert cos > 0.999
+
+
+@S
+@given(st.floats(0.1, 1.0), st.floats(1e-6, 0.5))
+def test_gamma_rule_theorem1_conditions(g0, theta):
+    """Eq. (4): γᵏ ∈ (0,1], strictly decreasing, not summable too fast.
+
+    (Σγ = ∞ and Σγ² < ∞ hold asymptotically since γᵏ ~ 1/(θk); here we
+    check monotonicity, positivity and the 1/(θk) envelope.)
+    """
+    g = gamma_schedule(g0, theta, 200)
+    gn = np.asarray(g)
+    assert (gn > 0).all() and (gn <= 1.0).all()
+    assert (np.diff(gn) < 0).all()
+    k = np.arange(1, 201)
+    assert (gn <= 1.0 / (theta * k) + 1e-6).all()   # γᵏ ≤ 1/(θk) envelope
+
+
+def test_nesterov_certificate():
+    """The planted instance must satisfy its own optimality certificate."""
+    from repro.problems.lasso import nesterov_instance
+    p = nesterov_instance(m=60, n=300, nnz_frac=0.1, c=1.0, seed=3)
+    # V(x*) == V* and stationarity ≈ 0 at x*
+    assert abs(float(p.v(p.x_star)) - p.v_star) < 1e-3 * p.v_star
+    assert float(p.stationarity(p.x_star, tau=1.0)) < 1e-3
+    # subgradient condition off-support: |∇ᵢF| ≤ c
+    g = np.asarray(p.grad_f(p.x_star))
+    off = np.asarray(p.x_star) == 0
+    assert (np.abs(g[off]) <= 1.0 + 1e-4).all()
