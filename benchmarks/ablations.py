@@ -16,16 +16,17 @@ from pathlib import Path
 import numpy as np
 
 from repro.config.base import SolverConfig
-from repro.core import flexa
 from repro.problems.group_lasso import nesterov_group_instance
 from repro.problems.lasso import nesterov_instance
+from repro.solvers import solve
 
 RESULTS = Path(__file__).resolve().parent.parent / "results" / "bench"
 
 
 def _run(problem, cfg: SolverConfig) -> dict:
+    """One facade solve, timed; rel err needs the instance's planted V*."""
     t0 = time.perf_counter()
-    r = flexa.solve(problem, cfg=cfg)
+    r = solve(problem, method="flexa", cfg=cfg)
     wall = time.perf_counter() - t0
     rel = (r.history["V"][-1] - problem.v_star) / problem.v_star \
         if problem.v_star else None

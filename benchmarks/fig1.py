@@ -6,10 +6,21 @@ Four instance groups exactly as in §4:
   (c) medium size, high sparsity   — n=10000, m=2000,  5% nnz
   (d) large size, high sparsity    — n=100000, m=5000,  5% nnz
 
-Algorithms: FPA (=FLEXA, greedy ρ=0.5, exact-block surrogate, Eq.(4) step,
-τ controller — the paper's exact configuration), FISTA, GRock(1), GRock(P),
-Gauss-Seidel, ADMM.  Metric: relative error (V−V*)/V* vs wall time (V* is
-exact — planted instances), plus time/iterations to reach 1e-2/1e-4/1e-6.
+Every algorithm now runs through the unified facade
+(``repro.solvers.solve``), so the race is a single loop over registry
+method names — same Problem, same iteration/tolerance budget, same
+``SolverResult`` contract.  Metric: relative error (V−V*)/V* vs wall time
+(V* is exact — planted instances), plus time/iterations to reach
+1e-2/1e-4/1e-6.
+
+Artifacts (``results/bench/``):
+
+* ``<group>.json``       — summary rows per (group, seed, algo);
+* ``BENCH_solvers.json`` — the full trajectory artifact: for every run the
+  per-iteration ``V``/``time`` series (what Fig. 1 actually plots), the
+  summary rows, and a ``batched`` section measuring the multi-instance
+  engine (one compiled program for B instances vs B facade solves —
+  the serving amortization the ROADMAP asks for).
 
 The container is a single CPU core (the paper used a 32-core node), so the
 default scale divides the instance dimensions by ``--scale`` (8 by default;
@@ -24,10 +35,9 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.baselines import admm, fista, gauss_seidel, grock
 from repro.config.base import SolverConfig
-from repro.core import flexa
 from repro.problems.lasso import nesterov_instance
+from repro.solvers import solve, solve_batched
 
 RESULTS = Path(__file__).resolve().parent.parent / "results" / "bench"
 
@@ -39,6 +49,19 @@ GROUPS = {
 }
 THRESHOLDS = (1e-2, 1e-4, 1e-6)
 
+# The Fig. 1 field as (label, registry method, method-specific options).
+# FPA = the paper's FLEXA configuration (greedy ρ=0.5, exact-block
+# surrogate, Eq. (4) step, §4 τ-controller) — all defaults of SolverConfig.
+def _field(n_processors: int):
+    return [
+        ("FPA", "flexa", {}),
+        ("FISTA", "fista", {}),
+        ("GRock1", "grock", {"P": 1}),
+        (f"GRockP{n_processors}", "grock", {"P": n_processors}),
+        ("GS", "gauss_seidel", {}),
+        ("ADMM", "admm", {"rho": 10.0}),
+    ]
+
 
 def time_to(history_v, history_t, v_star, thr):
     rel = (np.asarray(history_v) - v_star) / v_star
@@ -49,33 +72,29 @@ def time_to(history_v, history_t, v_star, thr):
 
 
 def run_group(name: str, spec: dict, scale: int, max_iters: int,
-              n_processors: int = 16) -> list[dict]:
+              n_processors: int = 16):
+    """Race the whole field on one instance group.
+
+    Returns (summary rows, trajectory records) — trajectories carry the raw
+    per-iteration (V, time) series for the BENCH_solvers.json artifact.
+    """
     m = max(50, spec["m"] // scale)
     n = max(200, spec["n"] // scale)
-    rows = []
+    rows, trajs = [], []
     for seed in range(spec["realizations"]):
         p = nesterov_instance(m=m, n=n, nnz_frac=spec["nnz"], c=1.0,
                               seed=seed)
-        algos = {
-            "FPA": lambda: flexa.solve(
-                p, cfg=SolverConfig(max_iters=max_iters, tol=0)),
-            "FISTA": lambda: fista.solve(p, max_iters=max_iters, tol=0),
-            "GRock1": lambda: grock.solve(p, P=1, max_iters=max_iters,
-                                          tol=0),
-            f"GRockP{n_processors}": lambda: grock.solve(
-                p, P=n_processors, max_iters=max_iters, tol=0),
-            "GS": lambda: gauss_seidel.solve(
-                p, max_iters=max(10, max_iters // 10), tol=0),
-            "ADMM": lambda: admm.solve(p, rho=10.0, max_iters=max_iters,
-                                       tol=0),
-        }
-        for algo, fn in algos.items():
+        for algo, method, options in _field(n_processors):
+            # GS iterations are full n-coordinate sweeps — budget fewer.
+            iters = max(10, max_iters // 10) if method == "gauss_seidel" \
+                else max_iters
+            cfg = SolverConfig(max_iters=iters, tol=0)
             t0 = time.perf_counter()
-            r = fn()
+            r = solve(p, method=method, cfg=cfg, **options)
             wall = time.perf_counter() - t0
             rel_final = (r.history["V"][-1] - p.v_star) / p.v_star
             row = {"group": name, "seed": seed, "algo": algo,
-                   "m": m, "n": n, "iters": r.iters,
+                   "method": method, "m": m, "n": n, "iters": r.iters,
                    "wall_s": round(wall, 3),
                    "rel_err_final": float(rel_final)}
             for thr in THRESHOLDS:
@@ -84,18 +103,73 @@ def run_group(name: str, spec: dict, scale: int, max_iters: int,
                 row[f"t_{thr:.0e}"] = None if t is None else round(t, 4)
                 row[f"it_{thr:.0e}"] = it
             rows.append(row)
-    return rows
+            trajs.append({
+                "group": name, "seed": seed, "algo": algo,
+                "v_star": p.v_star,
+                "V": [float(v) for v in r.history["V"]],
+                "time": [round(float(t), 5) for t in r.history["time"]],
+            })
+    return rows, trajs
 
 
-def main(scale: int = 8, max_iters: int = 500, groups=None) -> list[dict]:
+def run_batched(scale: int, n_instances: int = 8,
+                max_iters: int = 400) -> dict:
+    """Multi-instance engine vs a Python loop of facade solves.
+
+    Same B instances, same budget: the sequential path pays per-instance
+    dispatch and host-loop stepping; the batched path is one compiled
+    vmap + while_loop program (tau_adapt off for cross-driver
+    reproducibility — see repro.solvers.batched).
+    """
+    m = max(40, 2000 // scale // 4)
+    n = max(160, 10_000 // scale // 4)
+    cfg = SolverConfig(max_iters=max_iters, tol=1e-6, tau_adapt=False)
+    probs = [nesterov_instance(m=m, n=n, nnz_frac=0.1, c=1.0, seed=s)
+             for s in range(n_instances)]
+
+    t0 = time.perf_counter()
+    seq = [solve(p, method="flexa", cfg=cfg) for p in probs]
+    t_seq = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    rb = solve_batched(probs, cfg=cfg)        # includes compilation
+    t_batched_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rb = solve_batched(probs, cfg=cfg)        # compiled-program reuse
+    t_batched_warm = time.perf_counter() - t0
+
+    max_dx = max(
+        float(np.abs(np.asarray(r.x) - np.asarray(rb.x[i])).max())
+        for i, r in enumerate(seq))
+    return {
+        "B": n_instances, "m": m, "n": n,
+        "sequential_s": round(t_seq, 3),
+        "batched_cold_s": round(t_batched_cold, 3),
+        "batched_warm_s": round(t_batched_warm, 3),
+        "speedup_warm": round(t_seq / max(t_batched_warm, 1e-9), 2),
+        "max_abs_diff_vs_sequential": max_dx,
+        "converged": [bool(v) for v in np.asarray(rb.converged)],
+    }
+
+
+def main(scale: int = 8, max_iters: int = 500, groups=None,
+         with_batched: bool = True) -> list[dict]:
     RESULTS.mkdir(parents=True, exist_ok=True)
-    all_rows = []
+    all_rows, all_trajs = [], []
     for name, spec in GROUPS.items():
         if groups and name not in groups:
             continue
-        rows = run_group(name, spec, scale, max_iters)
+        rows, trajs = run_group(name, spec, scale, max_iters)
         all_rows.extend(rows)
+        all_trajs.extend(trajs)
         (RESULTS / f"{name}.json").write_text(json.dumps(rows, indent=2))
+
+    artifact = {"scale": scale, "max_iters": max_iters,
+                "summary": all_rows, "trajectories": all_trajs}
+    if with_batched:
+        artifact["batched"] = run_batched(scale)
+    (RESULTS / "BENCH_solvers.json").write_text(
+        json.dumps(artifact, indent=2))
     return all_rows
 
 
@@ -104,6 +178,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=8)
     ap.add_argument("--max-iters", type=int, default=500)
+    ap.add_argument("--no-batched", action="store_true",
+                    help="skip the multi-instance engine measurement")
     args = ap.parse_args()
-    for row in main(scale=args.scale, max_iters=args.max_iters):
+    for row in main(scale=args.scale, max_iters=args.max_iters,
+                    with_batched=not args.no_batched):
         print(row)

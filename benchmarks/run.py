@@ -1,15 +1,31 @@
 """Benchmark driver: one benchmark per paper table/figure.
 
+All solver benchmarks go through the unified ``repro.solvers.solve`` facade
+(one loop over registry method names — adding a solver to the registry adds
+it to the race), and ``fig1`` additionally measures the batched
+multi-instance engine (``repro.solvers.solve_batched``): B instances in one
+compiled program vs B sequential facade solves.
+
 Prints ``name,us_per_call,derived`` CSV rows:
   * fig1 groups  — per-algorithm wall time; derived = time-to-1e-4 rel err
+  * batched      — multi-instance engine; derived = warm speedup vs loop
   * ablations    — per-variant wall time; derived = final rel err
   * lm_step      — per-arch train-step time; derived = decode-step time
 
-Full JSON artifacts land in ``results/bench/``.
+Full JSON artifacts land in ``results/bench/``; the headline one is
+``BENCH_solvers.json`` — written by ``fig1.main`` — which holds the full
+per-iteration (V, time) trajectories of every run (what Fig. 1 plots), the
+summary rows, and the ``batched`` amortization record.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import sys
+from pathlib import Path
+
+# Allow `python benchmarks/run.py` (repo root not on sys.path then).
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 
 def main() -> None:
@@ -30,6 +46,15 @@ def main() -> None:
             f"rel_final={r['rel_err_final']:.2e}"
         print(f"{r['group']}/{r['algo']}/seed{r['seed']},"
               f"{r['wall_s'] * 1e6 / max(1, r['iters']):.0f},{derived}")
+
+    # The batched record fig1.main just wrote into BENCH_solvers.json.
+    artifact = json.loads(
+        (Path(fig1.RESULTS) / "BENCH_solvers.json").read_text())
+    bat = artifact.get("batched")
+    if bat:
+        per_call = bat["batched_warm_s"] * 1e6 / bat["B"]
+        print(f"batched_engine/B{bat['B']},{per_call:.0f},"
+              f"speedup_warm={bat['speedup_warm']}x")
 
     from benchmarks import ablations
     out = ablations.main()

@@ -23,13 +23,13 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.linalg import cho_factor, cho_solve
 
-from repro.baselines.fista import BaselineResult
 from repro.core.prox import soft_threshold
 from repro.problems.base import Problem
+from repro.core.result import SolverResult
 
 
 def solve(problem: Problem, rho: float = 10.0, x0=None,
-          max_iters: int = 2000, tol: float = 1e-6) -> BaselineResult:
+          max_iters: int = 2000, tol: float = 1e-6) -> SolverResult:
     t_start = time.perf_counter()
     A = problem.data.get("A")
     b = problem.data.get("b")
@@ -68,5 +68,5 @@ def solve(problem: Problem, rho: float = 10.0, x0=None,
         if float(stat) <= tol:
             converged = True
             break
-    return BaselineResult(x=z, iters=it + 1, converged=converged,
-                          history=hist)
+    return SolverResult(x=z, iters=it + 1, converged=converged,
+                        history=hist, method="admm")

@@ -8,25 +8,20 @@ the power iteration), matching Fig. 1's methodology.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.problems.base import Problem
+from repro.core.result import SolverResult
 
-
-@dataclass
-class BaselineResult:
-    x: Any
-    iters: int
-    converged: bool
-    history: dict = field(default_factory=dict)
+# Unified result contract (repro.solvers.result); the historical name is
+# kept because every baseline module re-exports it.
+BaselineResult = SolverResult
 
 
 def solve(problem: Problem, x0=None, max_iters: int = 2000,
-          tol: float = 1e-6) -> BaselineResult:
+          tol: float = 1e-6) -> SolverResult:
     t_start = time.perf_counter()
     if x0 is None:
         x0 = jnp.zeros((problem.n,), jnp.float32)
@@ -56,5 +51,5 @@ def solve(problem: Problem, x0=None, max_iters: int = 2000,
         if float(stat) <= tol:
             converged = True
             break
-    return BaselineResult(x=x, iters=it + 1, converged=converged,
-                          history=hist)
+    return SolverResult(x=x, iters=it + 1, converged=converged,
+                        history=hist, method="fista")

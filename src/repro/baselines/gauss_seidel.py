@@ -16,13 +16,13 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.baselines.fista import BaselineResult
 from repro.core.prox import soft_threshold
 from repro.problems.base import Problem
+from repro.core.result import SolverResult
 
 
 def solve(problem: Problem, x0=None, max_iters: int = 200,
-          tol: float = 1e-6) -> BaselineResult:
+          tol: float = 1e-6) -> SolverResult:
     t_start = time.perf_counter()
     A = problem.data.get("A")
     b = problem.data.get("b")
@@ -64,5 +64,5 @@ def solve(problem: Problem, x0=None, max_iters: int = 200,
         if float(stat) <= tol:
             converged = True
             break
-    return BaselineResult(x=x, iters=it + 1, converged=converged,
-                          history=hist)
+    return SolverResult(x=x, iters=it + 1, converged=converged,
+                        history=hist, method="gauss_seidel")

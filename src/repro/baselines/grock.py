@@ -17,14 +17,14 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.baselines.fista import BaselineResult
 from repro.core.prox import soft_threshold
 from repro.core.selection import topk_mask
 from repro.problems.base import Problem
+from repro.core.result import SolverResult
 
 
 def solve(problem: Problem, P: int = 1, x0=None, max_iters: int = 2000,
-          tol: float = 1e-6) -> BaselineResult:
+          tol: float = 1e-6) -> SolverResult:
     t_start = time.perf_counter()
     if x0 is None:
         x0 = jnp.zeros((problem.n,), jnp.float32)
@@ -56,5 +56,5 @@ def solve(problem: Problem, P: int = 1, x0=None, max_iters: int = 2000,
             break
         if not jnp.isfinite(v):             # GRock can diverge (see docstring)
             break
-    return BaselineResult(x=x, iters=it + 1, converged=converged,
-                          history=hist)
+    return SolverResult(x=x, iters=it + 1, converged=converged,
+                        history=hist, method="grock")

@@ -1,0 +1,31 @@
+"""Version compatibility shims for the JAX API surface.
+
+The codebase is written against the modern ``jax.shard_map`` entry point
+(with ``check_vma`` / ``axis_names``).  Older jax releases (< 0.6) only ship
+``jax.experimental.shard_map.shard_map`` whose equivalent knobs are named
+``check_rep`` and ``auto`` (the complement of the manual axis set).  Every
+shard_map call in the repo goes through :func:`shard_map` below so the same
+source runs on both API generations.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False,
+              axis_names=None):
+    """``jax.shard_map`` with fallback to the pre-0.6 experimental API.
+
+    ``axis_names`` (when given) is the set of mesh axes the body is *manual*
+    over; remaining axes stay automatic (GSPMD-partitioned).
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {} if axis_names is None else {"axis_names": axis_names}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {}
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, **kw)

@@ -21,9 +21,7 @@ The distributed (shard_map) version lives in ``repro.core.pflexa``.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from functools import partial
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +30,7 @@ from repro.config.base import SolverConfig
 from repro.core import selection, stepsize
 from repro.core.surrogate import best_response, curvature
 from repro.problems.base import Problem
+from repro.core.result import SolverResult
 
 
 class FlexaState(NamedTuple):
@@ -45,16 +44,21 @@ class FlexaState(NamedTuple):
     stat: jnp.ndarray           # ‖x̂(xᵏ)−xᵏ‖∞ of the *last* step
 
 
-@dataclass
-class FlexaResult:
-    x: Any
-    iters: int
-    converged: bool
-    state: FlexaState
-    history: dict = field(default_factory=dict)
-
+# All solvers in the repo share one result contract (repro.solvers.result);
+# the old per-module name is kept as an alias for existing call sites.
+FlexaResult = SolverResult
 
 MAX_TAU_CHANGES = 60  # "finite number of changes" cap (Theorem 1 compliance)
+
+
+def tau0_from_colsq(col_sq, n: int):
+    """Paper §4 default  τᵢ = tr(AᵀA)/2n  from the column norms ‖aᵢ‖².
+
+    Traceable — shared by :func:`default_tau0` (host path) and the batched
+    engine (``repro.solvers.batched._tau_base``), so the two drivers can
+    never disagree on the default.
+    """
+    return jnp.sum(col_sq) / (2.0 * n)
 
 
 def default_tau0(problem: Problem) -> float:
@@ -63,7 +67,7 @@ def default_tau0(problem: Problem) -> float:
     tr(AᵀA) = Σᵢ‖aᵢ‖² = Σᵢ diag_curv/2 for F = ‖Ax−b‖².
     """
     col_sq = problem.diag_curv(None) / 2.0
-    return float(jnp.sum(col_sq) / (2.0 * problem.n))
+    return float(tau0_from_colsq(col_sq, problem.n))
 
 
 def _base_tau(problem: Problem, cfg: SolverConfig) -> jnp.ndarray:
@@ -85,78 +89,88 @@ def init_state(problem: Problem, x0, cfg: SolverConfig) -> FlexaState:
     )
 
 
+def flexa_iteration(problem: Problem, cfg: SolverConfig,
+                    tau_base: jnp.ndarray, state: FlexaState):
+    """One Algorithm-1 iteration ``state -> (state, info)`` — S.2–S.4 plus
+    the §4 τ-controller.
+
+    Pure and traceable: the same function backs the jitted per-step driver
+    (:func:`make_step`), the single-program ``lax.while_loop`` driver
+    (:func:`solve_compiled`), and the batched multi-instance engine
+    (``repro.solvers.batched`` vmaps it over a stack of problems, with the
+    problem closures rebuilt from per-instance data inside the vmap).
+    """
+    x = state.x
+    tau = tau_base * state.tau_scale
+    grad = problem.grad_f(x)
+    d = curvature(problem, tau, cfg.surrogate)
+
+    # (S.2) best response; optionally inexact with the Thm-1(v) schedule.
+    if cfg.inexact_alpha1 > 0 and problem.block_size > 1:
+        inner = 5  # few inner prox-grad steps; cert recorded in info
+        zhat, cert = best_response(problem, x, grad, d,
+                                   inner_iters=inner, eps=0.0)
+    else:
+        zhat = best_response(problem, x, grad, d)
+        cert = jnp.asarray(0.0)
+
+    # (S.3) error bound + greedy selection.
+    E = problem.block_norms(zhat - x)
+    M = jnp.max(E)
+    if cfg.jacobi:
+        mask_b = selection.full_mask(E)
+    else:
+        mask_b = selection.greedy_mask(E, cfg.rho, M)
+    mask = mask_b if problem.block_size == 1 \
+        else jnp.repeat(mask_b, problem.block_size)
+
+    # (S.4) damped, masked update.
+    xnew = x + state.gamma * mask * (zhat - x)
+    v_new = problem.v(xnew)
+
+    # §4 τ-controller (finitely many changes).
+    can_change = state.n_tau_changes < MAX_TAU_CHANGES
+    adapt = bool(cfg.tau_adapt)
+    increased = (v_new > state.v_prev) & can_change & adapt
+    consec = jnp.where(v_new > state.v_prev, 0, state.consec_dec + 1)
+    halve = (consec >= cfg.tau_patience) & can_change & adapt
+    tau_scale = jnp.where(increased, state.tau_scale * cfg.tau_grow,
+                          state.tau_scale)
+    tau_scale = jnp.where(halve, tau_scale * cfg.tau_shrink, tau_scale)
+    consec = jnp.where(halve, 0, consec)
+    n_changes = state.n_tau_changes + increased.astype(jnp.int32) \
+        + halve.astype(jnp.int32)
+
+    stat = jnp.max(jnp.abs(zhat - x))  # ‖x̂−x‖∞ termination measure
+    new_state = FlexaState(
+        x=xnew,
+        gamma=stepsize.gamma_next(state.gamma, cfg.theta),
+        tau_scale=tau_scale,
+        v_prev=v_new,
+        consec_dec=consec,
+        n_tau_changes=n_changes,
+        k=state.k + 1,
+        stat=stat,
+    )
+    info = {
+        "V": v_new,
+        "stat": stat,
+        "E_max": M,
+        "sel_frac": jnp.mean(mask_b),
+        "gamma": state.gamma,
+        "tau_scale": tau_scale,
+        "inexact_cert": cert,
+    }
+    return new_state, info
+
+
 def make_step(problem: Problem, cfg: SolverConfig):
     """Build the jitted Algorithm-1 iteration ``state -> (state, info)``."""
     tau_base = _base_tau(problem, cfg)
 
-    def expand_mask(mask_blocks):
-        if problem.block_size == 1:
-            return mask_blocks
-        return jnp.repeat(mask_blocks, problem.block_size)
-
     @jax.jit
     def step(state: FlexaState):
-        x = state.x
-        tau = tau_base * state.tau_scale
-        grad = problem.grad_f(x)
-        d = curvature(problem, tau, cfg.surrogate)
-
-        # (S.2) best response; optionally inexact with the Thm-1(v) schedule.
-        if cfg.inexact_alpha1 > 0 and problem.block_size > 1:
-            inner = 5  # few inner prox-grad steps; cert recorded in info
-            zhat, cert = best_response(problem, x, grad, d,
-                                       inner_iters=inner, eps=0.0)
-        else:
-            zhat = best_response(problem, x, grad, d)
-            cert = jnp.asarray(0.0)
-
-        # (S.3) error bound + greedy selection.
-        E = problem.block_norms(zhat - x)
-        M = jnp.max(E)
-        if cfg.jacobi:
-            mask_b = selection.full_mask(E)
-        else:
-            mask_b = selection.greedy_mask(E, cfg.rho, M)
-        mask = expand_mask(mask_b)
-
-        # (S.4) damped, masked update.
-        xnew = x + state.gamma * mask * (zhat - x)
-        v_new = problem.v(xnew)
-
-        # §4 τ-controller (finitely many changes).
-        can_change = state.n_tau_changes < MAX_TAU_CHANGES
-        adapt = bool(cfg.tau_adapt)
-        increased = (v_new > state.v_prev) & can_change & adapt
-        consec = jnp.where(v_new > state.v_prev, 0, state.consec_dec + 1)
-        halve = (consec >= cfg.tau_patience) & can_change & adapt
-        tau_scale = jnp.where(increased, state.tau_scale * cfg.tau_grow,
-                              state.tau_scale)
-        tau_scale = jnp.where(halve, tau_scale * cfg.tau_shrink, tau_scale)
-        consec = jnp.where(halve, 0, consec)
-        n_changes = state.n_tau_changes + increased.astype(jnp.int32) \
-            + halve.astype(jnp.int32)
-
-        stat = jnp.max(jnp.abs(zhat - x))  # ‖x̂−x‖∞ termination measure
-        new_state = FlexaState(
-            x=xnew,
-            gamma=stepsize.gamma_next(state.gamma, cfg.theta),
-            tau_scale=tau_scale,
-            v_prev=v_new,
-            consec_dec=consec,
-            n_tau_changes=n_changes,
-            k=state.k + 1,
-            stat=stat,
-        )
-        info = {
-            "V": v_new,
-            "stat": stat,
-            "E_max": M,
-            "sel_frac": jnp.mean(mask_b),
-            "gamma": state.gamma,
-            "tau_scale": tau_scale,
-            "inexact_cert": cert,
-        }
-        return new_state, info
+        return flexa_iteration(problem, cfg, tau_base, state)
 
     return step
 
@@ -186,8 +200,8 @@ def solve(problem: Problem, x0=None, cfg: SolverConfig | None = None,
         if stat <= cfg.tol:
             converged = True
             break
-    return FlexaResult(x=state.x, iters=int(state.k), converged=converged,
-                       state=state, history=hist)
+    return SolverResult(x=state.x, iters=int(state.k), converged=converged,
+                        state=state, history=hist, method="flexa")
 
 
 def solve_compiled(problem: Problem, x0=None,
@@ -206,5 +220,6 @@ def solve_compiled(problem: Problem, x0=None,
         return new_state
 
     final = jax.lax.while_loop(cond, body, init_state(problem, x0, cfg))
-    return FlexaResult(x=final.x, iters=int(final.k),
-                       converged=bool(final.stat <= cfg.tol), state=final)
+    return SolverResult(x=final.x, iters=int(final.k),
+                        converged=bool(final.stat <= cfg.tol), state=final,
+                        method="flexa_compiled")

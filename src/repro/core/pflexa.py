@@ -23,9 +23,7 @@ use it unmodified.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from functools import partial
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import numpy as np
 import jax
@@ -33,9 +31,11 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config.base import SolverConfig
+from repro.compat import shard_map
 from repro.core.flexa import MAX_TAU_CHANGES
 from repro.core.prox import soft_threshold
 from repro.core import stepsize
+from repro.core.result import SolverResult
 
 
 class PFlexaState(NamedTuple):
@@ -50,12 +50,8 @@ class PFlexaState(NamedTuple):
     stat: jnp.ndarray
 
 
-@dataclass
-class PFlexaResult:
-    x: Any
-    iters: int
-    converged: bool
-    history: dict = field(default_factory=dict)
+# Unified result contract (repro.solvers.result); old name kept as alias.
+PFlexaResult = SolverResult
 
 
 def _pad_cols(A: np.ndarray, p: int) -> tuple[np.ndarray, int]:
@@ -122,7 +118,7 @@ def make_sharded_step(mesh: Mesh, axis: str, c: float, cfg: SolverConfig,
     info_specs = {k: P() for k in
                   ("V", "stat", "E_max", "sel_frac", "gamma", "tau_scale")}
 
-    sharded = jax.shard_map(
+    sharded = shard_map(
         local_step, mesh=mesh,
         in_specs=(P(None, axis), P(axis), P(), state_specs),
         out_specs=(state_specs, info_specs),
@@ -200,5 +196,6 @@ def solve(A, b, c: float, cfg: SolverConfig | None = None,
             converged = True
             break
     x_full = np.asarray(state.x)[:n]
-    return PFlexaResult(x=jnp.asarray(x_full), iters=int(state.k),
-                        converged=converged, history=hist)
+    return SolverResult(x=jnp.asarray(x_full), iters=int(state.k),
+                        converged=converged, history=hist, method="pflexa",
+                        state=state, meta={"pad": pad, "n_shards": p})

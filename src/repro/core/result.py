@@ -1,0 +1,44 @@
+"""The one result/history contract every solver in the repo returns.
+
+Fields shared by all methods (FLEXA, its distributed/batched variants, and
+the four baselines):
+
+* ``x``          — final iterate (``(n,)``, or ``(B, n)`` for batched runs);
+* ``iters``      — iterations executed (``int``, or ``(B,)`` array);
+* ``converged``  — termination-test verdict (``bool``, or ``(B,)`` array);
+* ``history``    — per-iteration trajectory dict.  Every solver records at
+  least ``V`` (objective), ``stat`` (its stationarity measure) and ``time``
+  (seconds since solve start, *including* any per-method initialization such
+  as FISTA's power iteration — the paper's Fig. 1 methodology); FLEXA adds
+  ``E_max`` / ``sel_frac`` / ``gamma`` / ``tau_scale``.  Compiled drivers
+  that never leave the device return an empty history.
+* ``method``     — registry name that produced the result (``""`` when the
+  solver module was called directly);
+* ``state``      — solver-specific final state (e.g. :class:`FlexaState`),
+  ``None`` for methods without persistent state;
+* ``meta``       — free-form extras (batch sizes, padding, timings).
+
+``FlexaResult`` / ``BaselineResult`` / ``PFlexaResult`` are kept as aliases
+of this class so pre-refactor call sites keep working.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+
+@dataclass
+class SolverResult:
+    x: Any
+    iters: Any
+    converged: Any
+    history: dict = field(default_factory=dict)
+    state: Any = None
+    method: str = ""
+    meta: dict = field(default_factory=dict)
+
+    def rel_error(self, v_star: float) -> float:
+        """Relative objective error vs a known optimum (benchmark metric)."""
+        if not self.history.get("V"):
+            raise ValueError("no history recorded (compiled driver?)")
+        return (self.history["V"][-1] - v_star) / v_star

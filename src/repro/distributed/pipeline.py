@@ -40,6 +40,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.config.base import ModelConfig
+from repro.compat import shard_map
 from repro.models import layers as L
 from repro.models import transformer as T
 
@@ -153,16 +154,19 @@ def pipeline_loss_fn(cfg: ModelConfig, params, batch, dist,
 
     tok_mb = tokens.reshape(n_micro, mb, S)
     # Manual over the stage axis only; `model` (and `pod`) stay auto —
-    # GSPMD keeps TP/SP partitioning inside the stage body.
-    buf = jax.shard_map(
-        shard_fn, mesh=mesh,
-        in_specs=(P(), jax.tree_util.tree_map(
-            lambda _: P(stage_axis), stage_params),
-            P(), P()),
-        out_specs=P(stage_axis),              # (P, n_micro, mb, S, D)
-        check_vma=False,
-        axis_names=frozenset({stage_axis}),
-    )(tok_mb, stage_params, params["embed"], params["final_norm"])
+    # GSPMD keeps TP/SP partitioning inside the stage body.  The mesh
+    # context lets the bare PartitionSpec constraints inside shard_fn
+    # resolve on jax versions that require an ambient mesh.
+    with mesh:
+        buf = shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(), jax.tree_util.tree_map(
+                lambda _: P(stage_axis), stage_params),
+                P(), P()),
+            out_specs=P(stage_axis),              # (P, n_micro, mb, S, D)
+            check_vma=False,
+            axis_names=frozenset({stage_axis}),
+        )(tok_mb, stage_params, params["embed"], params["final_norm"])
     # Sum over the stage-sharded dim (all-zero except the last stage):
     # GSPMD lowers this to a local reduce + one activation-sized psum.
     x_last = jnp.sum(buf, axis=0, dtype=jnp.float32).astype(dt)

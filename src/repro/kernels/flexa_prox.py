@@ -16,6 +16,17 @@ Tiles are (block_r × block_c) VMEM blocks with block_c a multiple of 128
 the VPU streams at HBM bandwidth.  Tensors are padded/reshaped to 2-D by
 ``ops.py`` (zero padding is algebraically inert: soft(0−0)=0 contributes
 nothing to z or Eᵢ²).
+
+``batched_best_response`` / ``batched_apply_update`` accept a leading batch
+dimension (B, R, C) with *per-instance* scalars c / d / γ·mask — the kernel
+grid gains a batch axis and each instance reads its own (1, 1, 1) scalar
+block, so one kernel launch can cover a whole request bucket of the batched
+multi-instance engine.  Per-instance e2 partials reduce to a (B,)
+error-bound vector.  Dispatch lives in ``ops.flexa_*_batched``; note the
+batched *solver* (``repro.solvers.batched``) currently runs its prox chain
+as plain vmapped jnp (XLA-fused; on CPU that is also what these ops
+dispatch to) — these kernels are the TPU implementation of that hot path,
+validated against the same oracle, not yet wired into the solver loop.
 """
 from __future__ import annotations
 
@@ -114,5 +125,127 @@ def apply_update(x, g, d, c, gamma_mask, *, block=DEFAULT_BLOCK,
         ],
         out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
+        interpret=interpret,
+    )(x, g, d_arr, c_arr, gm_arr)
+
+
+# ===================================================================== #
+# Leading-batch-dimension variants (the multi-instance engine's bucket) #
+# ===================================================================== #
+def _expand_instance_scalar(v, B: int, name: str):
+    """() or (B,) → (B, 1, 1) fp32 for per-instance (1,1,1) scalar blocks."""
+    v = jnp.asarray(v, jnp.float32)
+    if v.ndim == 0:
+        v = jnp.broadcast_to(v, (B,))
+    if v.shape != (B,):
+        raise ValueError(f"{name} must be a scalar or (B,), got {v.shape}")
+    return v.reshape(B, 1, 1)
+
+
+def _norm_batched_d(d, x):
+    """d may be (), (B,), or (B, R, C); returns (d_arr, d_spec, scalar_d)."""
+    B = x.shape[0]
+    scalar_d = jnp.ndim(d) <= 1
+    if scalar_d:
+        d_arr = _expand_instance_scalar(d, B, "d")
+        d_spec = pl.BlockSpec((1, 1, 1), lambda bi, i, j: (bi, 0, 0))
+    else:
+        if d.shape != x.shape:
+            raise ValueError(f"dense d must match x {x.shape}, got {d.shape}")
+        d_arr = d
+        d_spec = None  # filled by caller with the tile spec
+    return d_arr, d_spec, scalar_d
+
+
+def _br_kernel_batched(x_ref, g_ref, d_ref, c_ref, z_ref, e2_ref, *,
+                       scalar_d: bool):
+    x = x_ref[0].astype(jnp.float32)
+    g = g_ref[0].astype(jnp.float32)
+    d = d_ref[0, 0, 0] if scalar_d else d_ref[0].astype(jnp.float32)
+    c = c_ref[0, 0, 0]
+    w = x - g / d
+    t = c / d
+    z = jnp.sign(w) * jnp.maximum(jnp.abs(w) - t, 0.0)
+    z_ref[0] = z
+    e2_ref[0, 0, 0] = jnp.sum((z - x) ** 2)
+
+
+def batched_best_response(x, g, d, c, *, block=DEFAULT_BLOCK,
+                          interpret: bool = False):
+    """x, g: (B, R, C).  d: (), (B,) or (B, R, C).  c: () or (B,).
+
+    Returns (z fp32 (B, R, C), e2 fp32 (B,)) — per-instance error bounds.
+    """
+    B, R, C = x.shape
+    br, bc = min(block[0], R), min(block[1], C)
+    grid = (B, pl.cdiv(R, br), pl.cdiv(C, bc))
+    d_arr, d_spec, scalar_d = _norm_batched_d(d, x)
+    if d_spec is None:
+        d_spec = pl.BlockSpec((1, br, bc), lambda bi, i, j: (bi, i, j))
+    c_arr = _expand_instance_scalar(c, B, "c")
+
+    z, e2p = pl.pallas_call(
+        partial(_br_kernel_batched, scalar_d=scalar_d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, br, bc), lambda bi, i, j: (bi, i, j)),
+            pl.BlockSpec((1, br, bc), lambda bi, i, j: (bi, i, j)),
+            d_spec,
+            pl.BlockSpec((1, 1, 1), lambda bi, i, j: (bi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, br, bc), lambda bi, i, j: (bi, i, j)),
+            pl.BlockSpec((1, 1, 1), lambda bi, i, j: (bi, i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, R, C), jnp.float32),
+            jax.ShapeDtypeStruct(grid, jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, g, d_arr, c_arr)
+    return z, jnp.sum(e2p, axis=(1, 2))
+
+
+def _apply_kernel_batched(x_ref, g_ref, d_ref, c_ref, gm_ref, o_ref, *,
+                          scalar_d: bool):
+    x = x_ref[0].astype(jnp.float32)
+    g = g_ref[0].astype(jnp.float32)
+    d = d_ref[0, 0, 0] if scalar_d else d_ref[0].astype(jnp.float32)
+    c = c_ref[0, 0, 0]
+    gamma_mask = gm_ref[0, 0, 0]         # per-instance γ·mask scalar
+    w = x - g / d
+    t = c / d
+    z = jnp.sign(w) * jnp.maximum(jnp.abs(w) - t, 0.0)
+    o_ref[0] = (x + gamma_mask * (z - x)).astype(o_ref.dtype)
+
+
+def batched_apply_update(x, g, d, c, gamma_mask, *, block=DEFAULT_BLOCK,
+                         interpret: bool = False):
+    """Fused batched  x + γᵢ·mᵢ·(x̂(x) − x)  over a (B, R, C) bucket.
+
+    ``gamma_mask`` is () or (B,): each instance carries its own damping
+    (independent γ/τ trajectories in the multi-instance engine).
+    """
+    B, R, C = x.shape
+    br, bc = min(block[0], R), min(block[1], C)
+    grid = (B, pl.cdiv(R, br), pl.cdiv(C, bc))
+    d_arr, d_spec, scalar_d = _norm_batched_d(d, x)
+    if d_spec is None:
+        d_spec = pl.BlockSpec((1, br, bc), lambda bi, i, j: (bi, i, j))
+    c_arr = _expand_instance_scalar(c, B, "c")
+    gm_arr = _expand_instance_scalar(gamma_mask, B, "gamma_mask")
+
+    return pl.pallas_call(
+        partial(_apply_kernel_batched, scalar_d=scalar_d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, br, bc), lambda bi, i, j: (bi, i, j)),
+            pl.BlockSpec((1, br, bc), lambda bi, i, j: (bi, i, j)),
+            d_spec,
+            pl.BlockSpec((1, 1, 1), lambda bi, i, j: (bi, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda bi, i, j: (bi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, br, bc), lambda bi, i, j: (bi, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, R, C), x.dtype),
         interpret=interpret,
     )(x, g, d_arr, c_arr, gm_arr)

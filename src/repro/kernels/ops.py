@@ -79,6 +79,61 @@ def flexa_apply(x, g, d, c, gamma_mask, *, force=None):
     return o2.reshape(-1)[:n].reshape(x.shape)
 
 
+def _to_3d(t: jnp.ndarray, cols: int = 512):
+    """Flatten + zero-pad each instance of (B, ...) to (B, rows, cols)."""
+    B = t.shape[0]
+    flat = t.reshape(B, -1)
+    n = flat.shape[1]
+    pad = (-n) % cols
+    if pad:
+        flat = jnp.concatenate(
+            [flat, jnp.zeros((B, pad), flat.dtype)], axis=1)
+    return flat.reshape(B, -1, cols), n
+
+
+def flexa_best_response_batched(x, g, d, c, *, force=None):
+    """Per-instance z = soft(x − g/d, c/d) and e2 over a (B, ...) bucket.
+
+    ``c`` / ``gamma_mask`` / scalar ``d`` may be per-instance (B,) vectors —
+    each request in a serving bucket carries its own regularization weight
+    and γ/τ state.  Returns (z with x's shape, e2 (B,)).
+    """
+    mode = _mode(force)
+    if mode == "ref":
+        return ref.flexa_best_response_batched_ref(x, g, d, c)
+    interp = mode == "interpret"
+    B = x.shape[0]
+    dense_d = jnp.ndim(d) > 1
+    x3, n = _to_3d(x)
+    g3, _ = _to_3d(g)
+    if dense_d:
+        d3 = jnp.maximum(_to_3d(jnp.broadcast_to(d, x.shape))[0], 1e-30)
+    else:
+        d3 = d
+    z3, e2 = _fp.batched_best_response(x3, g3, d3, c, interpret=interp)
+    z = z3.reshape(B, -1)[:, :n].reshape(x.shape)
+    return z, e2
+
+
+def flexa_apply_batched(x, g, d, c, gamma_mask, *, force=None):
+    """Fused batched update x ← x + γᵢ·mᵢ·(x̂ − x) over a (B, ...) bucket."""
+    mode = _mode(force)
+    if mode == "ref":
+        return ref.flexa_apply_batched_ref(x, g, d, c, gamma_mask)
+    interp = mode == "interpret"
+    B = x.shape[0]
+    dense_d = jnp.ndim(d) > 1
+    x3, n = _to_3d(x)
+    g3, _ = _to_3d(g)
+    if dense_d:
+        d3 = jnp.maximum(_to_3d(jnp.broadcast_to(d, x.shape))[0], 1e-30)
+    else:
+        d3 = d
+    o3 = _fp.batched_apply_update(x3, g3, d3, c, gamma_mask,
+                                  interpret=interp)
+    return o3.reshape(B, -1)[:, :n].reshape(x.shape)
+
+
 def flash_attention(q, k, v, *, causal=True, scale=None, force=None,
                     block_q: int = 256, block_k: int = 512):
     mode = _mode(force)

@@ -44,6 +44,38 @@ def flexa_apply_ref(x, g, d, c, gamma, mask):
     return (xf + gamma * mask * (z - xf)).astype(x.dtype)
 
 
+def _per_instance(v, B):
+    """() or (B,) → (B,) fp32 (batched-oracle scalar normalization)."""
+    v = jnp.asarray(v, jnp.float32)
+    return jnp.broadcast_to(v, (B,))
+
+
+def flexa_best_response_batched_ref(x, g, d, c):
+    """Batched oracle: x, g (B, ...); d ()/(B,)/dense; c ()/(B,).
+
+    Returns (z (B, ...) fp32, e2 (B,)) — one error bound per instance.
+    """
+    B = x.shape[0]
+    c = _per_instance(c, B)
+    if jnp.ndim(d) <= 1:
+        d = _per_instance(d, B)
+    return jax.vmap(flexa_best_response_ref)(x, g, d, c)
+
+
+def flexa_apply_batched_ref(x, g, d, c, gamma_mask):
+    """Batched oracle of the fused update; ``gamma_mask`` is ()/(B,)."""
+    B = x.shape[0]
+    c = _per_instance(c, B)
+    gamma_mask = _per_instance(gamma_mask, B)
+    if jnp.ndim(d) <= 1:
+        d = _per_instance(d, B)
+    ones = jnp.asarray(1.0, jnp.float32)
+    return jax.vmap(
+        lambda xi, gi, di, ci, gmi: flexa_apply_ref(xi, gi, di, ci, gmi,
+                                                    ones))(
+        x, g, d, c, gamma_mask)
+
+
 # ------------------------------------------------------------------ #
 # Flash attention (causal, GQA)                                      #
 # ------------------------------------------------------------------ #

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config.base import ModelConfig
+from repro.compat import shard_map
 from repro.models import layers as L
 
 
@@ -142,7 +143,7 @@ def moe_layer(params, x, cfg: ModelConfig, *, mesh=None,
         return y.reshape(bs, s, d), aux
 
     dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(dp, None, None), P(None, None), P(tp_axis, None, None),
                   P(tp_axis, None, None), P(tp_axis, None, None)),

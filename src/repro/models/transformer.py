@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.config.base import ModelConfig
+from repro.compat import shard_map
 from repro.models import attention as ATT
 from repro.models import layers as L
 from repro.models import moe as MOE
@@ -136,7 +137,7 @@ def _embed(tokens, table, dt, mesh, dp_axes):
     def f(tok, tab):
         return tab.astype(dt)[tok]          # fully local: (B_l, S, D_l)
 
-    return jax.shard_map(
+    return shard_map(
         f, mesh=mesh,
         in_specs=(P(dp, None), P(None, "model")),
         out_specs=P(dp, None, "model"),
@@ -453,7 +454,7 @@ def fused_logits_xent(x, table, labels, mesh, dp_axes, *,
             nll = nll + z_loss * lse ** 2
         return jax.lax.psum(jnp.sum(nll), all_axes)
 
-    total = jax.shard_map(
+    total = shard_map(
         f, mesh=mesh,
         in_specs=(P(dp, "model", None), P(None, "model"), P(dp, "model")),
         out_specs=P(),

@@ -40,8 +40,15 @@ class Problem:
     def blockify(self, x: jnp.ndarray) -> jnp.ndarray:
         return x.reshape(self.n_blocks, self.block_size)
 
+    def _g_off(self) -> bool:
+        """G ≡ 0 shortcut.  ``g_weight`` may be a traced scalar (the batched
+        engine vmaps over per-instance weights), so only test equality when
+        it is a concrete Python number."""
+        return self.g_kind == "zero" or (
+            isinstance(self.g_weight, (int, float)) and self.g_weight == 0.0)
+
     def g(self, x: jnp.ndarray):
-        if self.g_kind == "zero" or self.g_weight == 0.0:
+        if self._g_off():
             return jnp.asarray(0.0, x.dtype)
         if self.g_kind == "l1":
             return self.g_weight * jnp.sum(jnp.abs(x))
@@ -56,7 +63,7 @@ class Problem:
 
     def prox(self, w: jnp.ndarray, t) -> jnp.ndarray:
         """Blockwise prox of ``t·g`` at ``w`` (t broadcastable over coords)."""
-        if self.g_kind == "zero" or self.g_weight == 0.0:
+        if self._g_off():
             return w
         if self.g_kind == "l1":
             return soft_threshold(w, t * self.g_weight)

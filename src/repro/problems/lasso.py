@@ -13,11 +13,17 @@ import jax.numpy as jnp
 from repro.problems.base import Problem
 
 
-def make_lasso(A, b, c: float, block_size: int = 1,
-               v_star=None, x_star=None, name: str = "lasso") -> Problem:
-    A = jnp.asarray(A)
-    b = jnp.asarray(b)
-    col_sq = jnp.sum(A * A, axis=0)          # ‖aᵢ‖² per column
+def quadratic_fns(A, b, col_sq=None):
+    """The F = ‖Ax−b‖² closure triple (f, grad_f, diag_curv).
+
+    The single definition of the factor-2 convention used everywhere:
+    ∇F = 2Aᵀ(Ax−b) and ∂²F/∂xᵢ² = 2‖aᵢ‖² (exact for quadratics —
+    surrogate choice (6)).  Traceable, so the batched engine can call it
+    with per-instance traced slices of (A, b); ``col_sq`` may be
+    precomputed to avoid re-reducing ‖aᵢ‖² inside a solve loop.
+    """
+    if col_sq is None:
+        col_sq = jnp.sum(A * A, axis=0)      # ‖aᵢ‖² per column
 
     def f(x):
         r = A @ x - b
@@ -26,9 +32,17 @@ def make_lasso(A, b, c: float, block_size: int = 1,
     def grad_f(x):
         return 2.0 * (A.T @ (A @ x - b))
 
-    def diag_curv(x):
-        # ∂²F/∂xᵢ² = 2‖aᵢ‖², exact for quadratics (surrogate choice (6)).
+    def diag_curv(_):
         return 2.0 * col_sq
+
+    return f, grad_f, diag_curv
+
+
+def make_lasso(A, b, c: float, block_size: int = 1,
+               v_star=None, x_star=None, name: str = "lasso") -> Problem:
+    A = jnp.asarray(A)
+    b = jnp.asarray(b)
+    f, grad_f, diag_curv = quadratic_fns(A, b)
 
     # L_F = 2·λmax(AᵀA): cheap power-iteration estimate.
     L = float(2.0 * _power_iter_sq(np.asarray(A)))

@@ -1,29 +1,41 @@
-"""Serving engine: batched prefill + decode with a static-shape KV cache.
+"""Serving engines: two request-batched drivers behind one design idea —
+pack concurrent requests into *fixed shape buckets* so each bucket pays XLA
+compilation once and every later request rides the compiled program.
 
-The engine wraps the model's ``prefill``/``decode_step`` into a
-request-batched driver:
+1. :class:`ServeEngine` — LM text generation: batched prefill + decode with
+   a static-shape KV cache:
 
-* requests are padded/packed into a fixed (batch, max_len) grid — static
-  shapes keep one compiled executable per (batch, len) bucket;
-* prefill builds the cache at ``max_len`` capacity; decode then appends one
-  token per step for the whole batch in lock-step (continuous batching is a
-  scheduler-level extension: slots free as sequences hit EOS);
-* greedy or temperature sampling (seeded, deterministic).
+   * requests are padded/packed into a fixed (batch, max_len) grid — static
+     shapes keep one compiled executable per (batch, len) bucket;
+   * prefill builds the cache at ``max_len`` capacity; decode then appends
+     one token per step for the whole batch in lock-step (continuous
+     batching is a scheduler-level extension: slots free as sequences hit
+     EOS);
+   * greedy or temperature sampling (seeded, deterministic).
 
-This is the substrate the decode_32k / long_500k dry-run cells lower
-(``serve_step`` = one engine decode step).
+   This is the substrate the decode_32k / long_500k dry-run cells lower
+   (``serve_step`` = one engine decode step).
+
+2. :class:`SolverServeEngine` — the paper-side workload: many concurrent
+   Lasso / group-Lasso solve requests.  Requests are grouped by shape
+   signature, padded up to power-of-two batch buckets, and dispatched to
+   the batched multi-instance FLEXA program
+   (:func:`repro.solvers.solve_batched`'s compiled core).  One compilation
+   per (signature, bucket) is amortized over every subsequent request —
+   the "heavy concurrent traffic" scenario from the ROADMAP.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.config.base import ModelConfig, ShapeConfig
+from repro.config.base import ModelConfig, ShapeConfig, SolverConfig
 from repro.models import io as IO
 from repro.models import transformer as T
+from repro.solvers.batched import BatchedProblemSpec, make_batched_solver
 
 
 @dataclass
@@ -104,3 +116,132 @@ class ServeEngine:
         g = jax.random.gumbel(key, logits.shape)
         return jnp.argmax(logits / temperature + g,
                           axis=-1)[:, None].astype(jnp.int32)
+
+
+# ===================================================================== #
+# Batched solver serving (the paper-side workload)                      #
+# ===================================================================== #
+@dataclass
+class SolveRequest:
+    """One Lasso/group-Lasso request:  min ‖Ax−b‖² + c·g(x)."""
+    A: np.ndarray               # (m, n) design matrix
+    b: np.ndarray               # (m,)   observations
+    c: float = 1.0              # regularization weight
+    block_size: int = 1         # 1 ⇒ ℓ1; >1 ⇒ group-ℓ2 blocks
+    x0: np.ndarray | None = None  # optional warm start
+
+    @property
+    def spec(self) -> BatchedProblemSpec:
+        return BatchedProblemSpec(
+            m=int(self.A.shape[0]), n=int(self.A.shape[1]),
+            block_size=self.block_size,
+            g_kind="l1" if self.block_size == 1 else "group_l2")
+
+
+@dataclass
+class SolveResponse:
+    """Per-request solver verdict (unbatched back out of the bucket)."""
+    x: np.ndarray
+    iters: int
+    converged: bool
+    stat: float                 # final ‖x̂(x)−x‖∞
+    bucket: int                 # batch bucket the request was served in
+
+
+class SolverServeEngine:
+    """Serve many concurrent FLEXA solves from shared compiled programs.
+
+    The hot path of "millions of small solves" is not FLOPs but *dispatch*:
+    per-request jit tracing, compilation and Python-loop stepping dwarf the
+    actual linear algebra at small m×n.  The engine removes all three:
+
+    * requests are grouped by :class:`BatchedProblemSpec` (same m, n, block
+      structure — the static signature a compiled program is specialized
+      to) and stacked;
+    * each group is chopped into power-of-two *buckets* (≤ ``max_batch``);
+      short remainders are padded by repeating the first request — padding
+      rows converge in lock-step and are dropped before responding;
+    * each (spec, bucket) pair hits :func:`make_batched_solver` — an
+      ``lru_cache``'d, jitted vmap+while_loop program — so compilation
+      happens once per shape signature, then every subsequent batch of
+      requests with that signature reuses the executable;
+    * the whole bucket converges inside ONE device program (stragglers keep
+      iterating while finished instances are frozen), so there is no
+      per-iteration host sync either.
+
+    ``engine.stats`` reports requests/batches served, padding overhead and
+    distinct compiled signatures.  The amortization measurement in
+    ``results/bench/BENCH_solvers.json`` (``batched`` section) is produced
+    by ``benchmarks/fig1.run_batched`` over the same compiled-program cache.
+    """
+
+    def __init__(self, cfg: SolverConfig | None = None, *,
+                 max_batch: int = 16):
+        self.cfg = cfg or SolverConfig()
+        self.max_batch = int(max_batch)
+        self.stats = {"requests": 0, "batches": 0, "padded": 0,
+                      "signatures": 0}
+        self._seen: set = set()
+
+    # ------------------------------------------------------------- #
+    def _bucket(self, count: int) -> int:
+        """Smallest power-of-two ≥ count; ``max_batch`` itself is the top
+        bucket (the cap holds even when it is not a power of two)."""
+        b = 1
+        while b < count and b < self.max_batch:
+            b *= 2
+        return min(b, self.max_batch)
+
+    def submit(self, requests: list[SolveRequest]) -> list[SolveResponse]:
+        """Solve a wave of requests; responses align with request order.
+
+        The whole wave is validated before any bucket runs, so a malformed
+        request rejects the wave atomically (no partial stats/responses).
+        """
+        by_spec: dict[BatchedProblemSpec, list[int]] = {}
+        for i, r in enumerate(requests):
+            spec = r.spec
+            if np.shape(r.b) != (spec.m,):
+                raise ValueError(
+                    f"request {i}: b must have shape ({spec.m},), got "
+                    f"{np.shape(r.b)}")
+            if r.x0 is not None and np.shape(r.x0) != (spec.n,):
+                raise ValueError(
+                    f"request {i}: x0 must have shape ({spec.n},), got "
+                    f"{np.shape(r.x0)}")
+            by_spec.setdefault(spec, []).append(i)
+
+        out: list[SolveResponse | None] = [None] * len(requests)
+        for spec, idxs in by_spec.items():
+            run = make_batched_solver(spec, self.cfg)
+            pos = 0
+            while pos < len(idxs):
+                chunk = idxs[pos:pos + self.max_batch]
+                pos += self.max_batch
+                B = self._bucket(len(chunk))
+                pad = B - len(chunk)
+                rows = [requests[i] for i in chunk] \
+                    + [requests[chunk[0]]] * pad
+                A = jnp.stack([jnp.asarray(r.A, jnp.float32) for r in rows])
+                b = jnp.stack([jnp.asarray(r.b, jnp.float32) for r in rows])
+                c = jnp.asarray([float(r.c) for r in rows], jnp.float32)
+                x0 = jnp.stack([
+                    jnp.zeros((spec.n,), jnp.float32) if r.x0 is None
+                    else jnp.asarray(r.x0, jnp.float32) for r in rows])
+
+                final, converged = run(A, b, c, x0)
+                xs = np.asarray(final.x)
+                ks = np.asarray(final.k)
+                stats_ = np.asarray(final.stat)
+                conv = np.asarray(converged)
+                for j, i in enumerate(chunk):
+                    out[i] = SolveResponse(
+                        x=xs[j], iters=int(ks[j]), converged=bool(conv[j]),
+                        stat=float(stats_[j]), bucket=B)
+
+                self.stats["requests"] += len(chunk)
+                self.stats["batches"] += 1
+                self.stats["padded"] += pad
+                self._seen.add((spec, B))
+        self.stats["signatures"] = len(self._seen)
+        return out  # type: ignore[return-value]

@@ -1,0 +1,27 @@
+"""Unified solver surface for the composite problem  min F(x) + G(x).
+
+One import gives the whole algorithm family behind a single contract:
+
+    from repro.solvers import solve, solve_batched, SolverResult
+
+    r = solve(problem, method="flexa")        # or fista / admm / grock /
+    print(r.iters, r.history["V"][-1])        #    gauss_seidel / pflexa
+
+* :func:`solve` — facade dispatching to the registry (``registry.py``);
+  every method returns the same :class:`SolverResult` / history contract.
+* :func:`solve_batched` — the batched multi-instance FLEXA engine: B
+  independent Lasso / group-Lasso instances advance in lock-step inside one
+  compiled (vmap + while_loop) program (``batched.py``).
+* :func:`register` / :func:`available_methods` — extend or inspect the
+  method registry.
+"""
+from repro.solvers.api import solve
+from repro.solvers.batched import (BatchedProblemSpec, make_batched_solver,
+                                   solve_batched)
+from repro.solvers.registry import available_methods, get_solver, register
+from repro.solvers.result import SolverResult
+
+__all__ = [
+    "solve", "solve_batched", "make_batched_solver", "BatchedProblemSpec",
+    "SolverResult", "register", "get_solver", "available_methods",
+]

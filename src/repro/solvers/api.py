@@ -1,0 +1,56 @@
+"""``solve()`` — the single front door to every algorithm in the repo.
+
+    from repro.problems.lasso import nesterov_instance
+    from repro.solvers import solve
+
+    p = nesterov_instance(m=200, n=1000, nnz_frac=0.1, c=1.0, seed=0)
+    r = solve(p, method="flexa")              # the paper's Algorithm 1
+    r = solve(p, method="fista")              # same budget, same contract
+    r = solve(p, method="admm", rho=5.0)      # method-specific option
+
+All methods consume the shared budget knobs from
+:class:`~repro.config.base.SolverConfig` (``max_iters``, ``tol``; FLEXA
+additionally reads its ρ/γ/τ hyperparameters from it) and return a
+:class:`~repro.solvers.result.SolverResult` whose ``history`` follows one
+trajectory contract — which is what makes the Fig. 1 style solver races in
+``benchmarks/fig1.py`` honest: one loop, one metric, any method.
+
+For many *concurrent* instances use :func:`repro.solvers.solve_batched`
+(one compiled program for B problems) instead of a Python loop over
+``solve`` calls.
+"""
+from __future__ import annotations
+
+from repro.config.base import SolverConfig
+from repro.problems.base import Problem
+from repro.solvers.registry import get_solver
+from repro.solvers.result import SolverResult
+
+
+def solve(problem: Problem, method: str = "flexa",
+          cfg: SolverConfig | None = None, x0=None,
+          **options) -> SolverResult:
+    """Solve ``min F(x) + G(x)`` with a registered method.
+
+    Parameters
+    ----------
+    problem : the :class:`Problem` bundle (F, G, data).
+    method  : registry name — ``"flexa"`` (default), ``"fista"``,
+              ``"admm"``, ``"grock"``, ``"gauss_seidel"``, or one of the
+              extended entries (``"jacobi"``, ``"flexa_compiled"``,
+              ``"pflexa"``) — see
+              :func:`repro.solvers.available_methods`.
+    cfg     : shared budget/hyperparameter config (defaults to
+              ``SolverConfig()``).
+    x0      : optional warm start (zeros otherwise).
+    options : method-specific knobs, e.g. ``rho=`` (ADMM penalty),
+              ``P=`` (GRock parallelism).  Unknown keys raise TypeError.
+
+    Returns
+    -------
+    SolverResult with ``result.method`` set to ``method``.
+    """
+    cfg = cfg or SolverConfig()
+    result = get_solver(method)(problem, x0, cfg, **options)
+    result.method = method
+    return result

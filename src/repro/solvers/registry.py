@@ -1,0 +1,150 @@
+"""Method registry: one name per algorithm, one adapter per entry point.
+
+The repo grew six solver entry points with incompatible signatures
+(``flexa.solve(cfg=SolverConfig)``, ``fista.solve(max_iters=, tol=)``,
+``admm.solve(rho=, ...)``, ...).  Each registry adapter normalizes one of
+them onto the common call convention
+
+    adapter(problem, x0, cfg: SolverConfig, **options) -> SolverResult
+
+so the :func:`repro.solvers.solve` facade can race any method against any
+other on the same :class:`~repro.problems.base.Problem` with the same
+budget (``cfg.max_iters`` / ``cfg.tol``).  ``**options`` carries the knobs
+that are genuinely method-specific (ADMM's penalty ``rho``, GRock's
+parallelism ``P``) and rejects unknown keys at the adapter.
+
+Third-party methods can join the race via :func:`register`:
+
+    @register("my_method")
+    def _my_method(problem, x0, cfg, **options):
+        ...
+        return SolverResult(...)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.baselines import admm as _admm
+from repro.baselines import fista as _fista
+from repro.baselines import gauss_seidel as _gs
+from repro.baselines import grock as _grock
+from repro.config.base import SolverConfig
+from repro.core import flexa as _flexa
+from repro.core import pflexa as _pflexa
+from repro.problems.base import Problem
+from repro.solvers.result import SolverResult
+
+_REGISTRY: dict[str, Callable] = {}
+
+
+def register(name: str, fn: Callable | None = None):
+    """Register ``fn`` as solver ``name`` (usable as a decorator)."""
+    def _do(f):
+        if name in _REGISTRY:
+            raise ValueError(f"solver {name!r} already registered")
+        _REGISTRY[name] = f
+        return f
+    return _do if fn is None else _do(fn)
+
+
+def get_solver(name: str) -> Callable:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown solver {name!r}; available: {available_methods()}"
+        ) from None
+
+
+def available_methods() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def _reject_unknown(options: dict, allowed: tuple = ()):
+    unknown = set(options) - set(allowed)
+    if unknown:
+        raise TypeError(f"unknown solver options {sorted(unknown)}; "
+                        f"this method accepts {sorted(allowed) or 'none'}")
+
+
+# ------------------------------------------------------------------ #
+# FLEXA family                                                       #
+# ------------------------------------------------------------------ #
+@register("flexa")
+def _solve_flexa(problem: Problem, x0, cfg: SolverConfig,
+                 **options) -> SolverResult:
+    """Algorithm 1, greedy ρ-selection (the paper's FPA configuration)."""
+    _reject_unknown(options, ("callback",))
+    return _flexa.solve(problem, x0=x0, cfg=cfg,
+                        callback=options.get("callback"))
+
+
+@register("flexa_compiled")
+def _solve_flexa_compiled(problem: Problem, x0, cfg: SolverConfig,
+                          **options) -> SolverResult:
+    """Algorithm 1 as one ``lax.while_loop`` program (no per-step host
+    sync; no history — the production/serving path)."""
+    _reject_unknown(options)
+    return _flexa.solve_compiled(problem, x0=x0, cfg=cfg)
+
+
+@register("jacobi")
+def _solve_jacobi(problem: Problem, x0, cfg: SolverConfig,
+                  **options) -> SolverResult:
+    """Fully parallel Jacobi: Sᵏ = 𝒩 (ρ → 0 limit of the greedy rule)."""
+    _reject_unknown(options)
+    r = _flexa.solve(problem, x0=x0,
+                     cfg=dataclasses.replace(cfg, jacobi=True))
+    r.method = "jacobi"
+    return r
+
+
+@register("pflexa")
+def _solve_pflexa(problem: Problem, x0, cfg: SolverConfig,
+                  **options) -> SolverResult:
+    """Distributed (shard_map) FLEXA — quadratic ℓ1 problems only."""
+    _reject_unknown(options, ("mesh", "axis"))
+    A = problem.data.get("A")
+    b = problem.data.get("b")
+    if A is None or problem.g_kind != "l1":
+        raise ValueError("pflexa requires a quadratic ℓ1 problem "
+                         "with data A, b")
+    kw = {k: v for k, v in options.items() if v is not None}
+    return _pflexa.solve(A, b, float(problem.g_weight), cfg=cfg, x0=x0, **kw)
+
+
+# ------------------------------------------------------------------ #
+# Baselines (paper §4 benchmarks)                                    #
+# ------------------------------------------------------------------ #
+@register("fista")
+def _solve_fista(problem: Problem, x0, cfg: SolverConfig,
+                 **options) -> SolverResult:
+    _reject_unknown(options)
+    return _fista.solve(problem, x0=x0, max_iters=cfg.max_iters, tol=cfg.tol)
+
+
+@register("admm")
+def _solve_admm(problem: Problem, x0, cfg: SolverConfig,
+                **options) -> SolverResult:
+    _reject_unknown(options, ("rho",))
+    # `rho` here is ADMM's penalty parameter, unrelated to cfg.rho (the
+    # FLEXA greedy-selection factor) — hence a method option, not config.
+    return _admm.solve(problem, rho=options.get("rho", 10.0), x0=x0,
+                       max_iters=cfg.max_iters, tol=cfg.tol)
+
+
+@register("grock")
+def _solve_grock(problem: Problem, x0, cfg: SolverConfig,
+                 **options) -> SolverResult:
+    _reject_unknown(options, ("P",))
+    return _grock.solve(problem, P=options.get("P", 16), x0=x0,
+                        max_iters=cfg.max_iters, tol=cfg.tol)
+
+
+@register("gauss_seidel")
+def _solve_gauss_seidel(problem: Problem, x0, cfg: SolverConfig,
+                        **options) -> SolverResult:
+    # One "iteration" is a full cyclic sweep over all n coordinates.
+    _reject_unknown(options)
+    return _gs.solve(problem, x0=x0, max_iters=cfg.max_iters, tol=cfg.tol)

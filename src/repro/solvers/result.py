@@ -1,0 +1,10 @@
+"""Re-export of the shared result contract.
+
+The dataclass itself lives in :mod:`repro.core.result` so that low-level
+modules (``core.flexa``, ``baselines.*``) can import it without touching
+this package's ``__init__`` (which imports them back — the registry).
+High-level code spells it ``repro.solvers.SolverResult``.
+"""
+from repro.core.result import SolverResult
+
+__all__ = ["SolverResult"]

@@ -1,21 +1,64 @@
-"""Property tests (hypothesis) for the proximal operators and step rules —
+"""Property tests for the proximal operators and step rules —
 the low-level invariants Algorithm 1's convergence proof leans on.
+
+Properties are checked with hypothesis when the optional test extra is
+installed (``pip install -e .[test]``); otherwise each property runs over a
+fixed grid of representative examples so the suite is still meaningful on a
+bare container (the seed suite failed at collection on this import).
 """
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core.prox import group_soft_threshold, soft_threshold
-from repro.core.stepsize import gamma_schedule
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional test extra
+    HAVE_HYPOTHESIS = False
 
-S = settings(max_examples=25, deadline=None)
+from repro.core.prox import group_soft_threshold, soft_threshold  # noqa: E402
+from repro.core.stepsize import gamma_schedule  # noqa: E402
 
-floats = st.floats(-100, 100, allow_nan=False)
-pos = st.floats(0.01, 50, allow_nan=False)
+# Deterministic fallback cases used when hypothesis is unavailable:
+# (values, threshold t) pairs covering zeros, sign mixes, |v| ≶ t regimes.
+VEC_CASES = [
+    ([0.0, 0.0], 0.5),
+    ([1.0, -1.0, 0.3, -0.3], 0.3),
+    ([100.0, -100.0, 0.0, 1e-3], 5.0),
+    (list(np.linspace(-50, 50, 32)), 0.01),
+    ([7.5, -2.25, 0.125], 50.0),
+]
+GAMMA_CASES = [(0.1, 1e-6), (0.9, 0.1), (1.0, 0.5), (0.5, 0.01)]
 
 
-@S
-@given(st.lists(floats, min_size=1, max_size=32), pos)
+def property_test(fallback_cases, *strategies):
+    """Decorate a property: hypothesis-driven when available, else a fixed
+    parametrized sweep (each fallback case is one positional-args tuple)."""
+    def deco(check):
+        if HAVE_HYPOTHESIS:
+            return settings(max_examples=25, deadline=None)(
+                given(*strategies)(check))
+
+        @pytest.mark.parametrize("case", fallback_cases)
+        def runner(case):
+            check(*case)
+        runner.__name__ = check.__name__
+        runner.__doc__ = check.__doc__
+        return runner
+    return deco
+
+
+if HAVE_HYPOTHESIS:
+    floats = st.floats(-100, 100, allow_nan=False)
+    pos = st.floats(0.01, 50, allow_nan=False)
+    vec_strats = (st.lists(floats, min_size=1, max_size=32), pos)
+    grp_strats = (st.lists(floats, min_size=2, max_size=16), pos)
+    gam_strats = (st.floats(0.1, 1.0), st.floats(1e-6, 0.5))
+else:
+    vec_strats = grp_strats = gam_strats = ()
+
+
+@property_test(VEC_CASES, *vec_strats)
 def test_soft_threshold_is_prox_of_l1(vs, t):
     """z = soft(v,t) minimizes ½(z−v)² + t|z| — check first-order optimality
     and that it beats nearby points."""
@@ -28,8 +71,7 @@ def test_soft_threshold_is_prox_of_l1(vs, t):
         assert bool(jnp.all(f_z <= obj(z + delta) + tol))
 
 
-@S
-@given(st.lists(floats, min_size=1, max_size=32), pos)
+@property_test(VEC_CASES, *vec_strats)
 def test_soft_threshold_shrinks(vs, t):
     v = jnp.asarray(vs, jnp.float32)
     z = soft_threshold(v, t)
@@ -39,8 +81,7 @@ def test_soft_threshold_shrinks(vs, t):
     assert bool(jnp.all(jnp.where(jnp.abs(v) <= t, z == 0, True)))
 
 
-@S
-@given(st.lists(floats, min_size=2, max_size=16), pos)
+@property_test(VEC_CASES, *grp_strats)
 def test_group_soft_threshold_norm(vs, t):
     """Block shrink: ‖z‖ = max(0, ‖v‖−t) and direction preserved."""
     v = jnp.asarray(vs, jnp.float32)[None, :]
@@ -54,8 +95,7 @@ def test_group_soft_threshold_norm(vs, t):
         assert cos > 0.999
 
 
-@S
-@given(st.floats(0.1, 1.0), st.floats(1e-6, 0.5))
+@property_test(GAMMA_CASES, *gam_strats)
 def test_gamma_rule_theorem1_conditions(g0, theta):
     """Eq. (4): γᵏ ∈ (0,1], strictly decreasing, not summable too fast.
 
