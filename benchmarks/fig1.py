@@ -18,9 +18,12 @@ Artifacts (``results/bench/``):
 * ``<group>.json``       — summary rows per (group, seed, algo);
 * ``BENCH_solvers.json`` — the full trajectory artifact: for every run the
   per-iteration ``V``/``time`` series (what Fig. 1 actually plots), the
-  summary rows, and a ``batched`` section measuring the multi-instance
+  summary rows, a ``batched`` section measuring the multi-instance
   engine (one compiled program for B instances vs B facade solves —
-  the serving amortization the ROADMAP asks for).
+  the serving amortization the ROADMAP asks for), and a
+  ``selection_ablation`` section racing the Step-S.3 rules (greedy vs
+  Jacobi vs the arXiv:1407.4504 random/hybrid sketches vs cyclic) to the
+  same optimum on the fig1b instance.
 
 The container is a single CPU core (the paper used a 32-core node), so the
 default scale divides the instance dimensions by ``--scale`` (8 by default;
@@ -152,8 +155,49 @@ def run_batched(scale: int, n_instances: int = 8,
     }
 
 
+SELECTION_RULES = ("greedy", "full", "southwell", "topk", "random",
+                   "hybrid", "cyclic")
+
+
+def run_selection_ablation(scale: int, max_iters: int = 4000,
+                           tol: float = 1e-6) -> dict:
+    """Race the Step-S.3 selection rules on the fig1b Lasso instance.
+
+    Greedy is the paper's FPA; full is Jacobi; southwell the serial
+    extreme; random/hybrid are the arXiv:1407.4504 sketch rules; cyclic
+    the essentially-cyclic shuffle.  Same instance, same tolerance: the
+    record shows every rule reaching the same planted optimum, with the
+    iteration count measuring what the selection quality buys (random
+    rules visit blocks blindly, so they trade extra iterations for not
+    depending on the error-bound ranking; per-iteration cost is identical
+    in this dense implementation — see repro.core.selection).
+    """
+    m = max(50, 2000 // scale)
+    n = max(200, 10_000 // scale)
+    p = nesterov_instance(m=m, n=n, nnz_frac=0.10, c=1.0, seed=0)
+    rows = []
+    for rule in SELECTION_RULES:
+        cfg = SolverConfig(max_iters=max_iters, tol=tol, selection=rule,
+                           sel_k=max(8, n // 16), sel_p=0.25, seed=0)
+        t0 = time.perf_counter()
+        r = solve(p, method="flexa", cfg=cfg)
+        wall = time.perf_counter() - t0
+        rel = (r.history["V"][-1] - p.v_star) / p.v_star
+        rows.append({
+            "selection": rule, "iters": r.iters,
+            "converged": bool(r.converged),
+            "rel_err_final": float(rel),
+            "wall_s": round(wall, 3),
+            "mean_sel_frac": float(np.mean(r.history["sel_frac"])),
+            "V": [float(v) for v in r.history["V"]],
+        })
+    return {"group": "fig1b_med_mid", "m": m, "n": n, "nnz": 0.10,
+            "max_iters": max_iters, "tol": tol, "rows": rows}
+
+
 def main(scale: int = 8, max_iters: int = 500, groups=None,
-         with_batched: bool = True) -> list[dict]:
+         with_batched: bool = True, with_selection: bool = True
+         ) -> list[dict]:
     RESULTS.mkdir(parents=True, exist_ok=True)
     all_rows, all_trajs = [], []
     for name, spec in GROUPS.items():
@@ -168,6 +212,8 @@ def main(scale: int = 8, max_iters: int = 500, groups=None,
                 "summary": all_rows, "trajectories": all_trajs}
     if with_batched:
         artifact["batched"] = run_batched(scale)
+    if with_selection:
+        artifact["selection_ablation"] = run_selection_ablation(scale)
     (RESULTS / "BENCH_solvers.json").write_text(
         json.dumps(artifact, indent=2))
     return all_rows
@@ -180,7 +226,10 @@ if __name__ == "__main__":
     ap.add_argument("--max-iters", type=int, default=500)
     ap.add_argument("--no-batched", action="store_true",
                     help="skip the multi-instance engine measurement")
+    ap.add_argument("--no-selection", action="store_true",
+                    help="skip the selection-rule ablation")
     args = ap.parse_args()
     for row in main(scale=args.scale, max_iters=args.max_iters,
-                    with_batched=not args.no_batched):
+                    with_batched=not args.no_batched,
+                    with_selection=not args.no_selection):
         print(row)

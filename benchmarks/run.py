@@ -56,6 +56,14 @@ def main() -> None:
         print(f"batched_engine/B{bat['B']},{per_call:.0f},"
               f"speedup_warm={bat['speedup_warm']}x")
 
+    # Selection-rule ablation (greedy vs random/hybrid/cyclic — S.3).
+    sel = artifact.get("selection_ablation")
+    if sel:
+        for r in sel["rows"]:
+            print(f"selection/{r['selection']},"
+                  f"{r['wall_s'] * 1e6 / max(1, r['iters']):.0f},"
+                  f"iters={r['iters']} rel={r['rel_err_final']:.2e}")
+
     from benchmarks import ablations
     out = ablations.main()
     for section, rows in out.items():

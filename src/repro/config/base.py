@@ -229,6 +229,15 @@ class SolverConfig:
     max_iters: int = 2_000
     tol: float = 1e-6               # stop when ‖x̂(x)−x‖∞ ≤ tol
     jacobi: bool = False            # True ⇒ Sᵏ = 𝒩 (full parallel Jacobi)
+    # --- Step S.3 selection rule (repro.core.selection.make_mask) ---
+    # "greedy" (paper FPA) | "full" | "southwell" | "topk" | "random" |
+    # "hybrid" | "cyclic".  random/hybrid are the arXiv:1407.4504 sketch
+    # rules; cyclic is the essentially-cyclic shuffled round-robin.
+    selection: str = "greedy"
+    sel_p: float = 0.25             # Bernoulli sketch probability
+    sel_k: int = 8                  # k for the topk rule
+    sel_chunks: int = 4             # cycle length for the cyclic rule
+    seed: int = 0                   # PRNG seed for randomized selection
 
 
 @dataclass(frozen=True)

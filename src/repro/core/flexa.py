@@ -42,6 +42,7 @@ class FlexaState(NamedTuple):
     n_tau_changes: jnp.ndarray  # finite-change budget accounting
     k: jnp.ndarray              # iteration counter
     stat: jnp.ndarray           # ‖x̂(xᵏ)−xᵏ‖∞ of the *last* step
+    key: jnp.ndarray            # PRNG key (randomized selection rules)
 
 
 # All solvers in the repo share one result contract (repro.solvers.result);
@@ -75,8 +76,14 @@ def _base_tau(problem: Problem, cfg: SolverConfig) -> jnp.ndarray:
     return jnp.full((problem.n,), t0, dtype=jnp.float32)
 
 
-def init_state(problem: Problem, x0, cfg: SolverConfig) -> FlexaState:
+def init_state(problem: Problem, x0, cfg: SolverConfig,
+               key=None) -> FlexaState:
+    """``key`` seeds the randomized selection rules; it defaults to
+    ``PRNGKey(cfg.seed)`` (the batched engine folds in the instance index
+    so every instance follows its own stream)."""
     x0 = jnp.asarray(x0, dtype=jnp.float32)
+    if key is None:
+        key = jax.random.PRNGKey(cfg.seed)
     return FlexaState(
         x=x0,
         gamma=jnp.asarray(cfg.gamma0, jnp.float32),
@@ -86,6 +93,7 @@ def init_state(problem: Problem, x0, cfg: SolverConfig) -> FlexaState:
         n_tau_changes=jnp.asarray(0, jnp.int32),
         k=jnp.asarray(0, jnp.int32),
         stat=jnp.asarray(jnp.inf, jnp.float32),
+        key=key,
     )
 
 
@@ -114,13 +122,15 @@ def flexa_iteration(problem: Problem, cfg: SolverConfig,
         zhat = best_response(problem, x, grad, d)
         cert = jnp.asarray(0.0)
 
-    # (S.3) error bound + greedy selection.
+    # (S.3) error bound + selection rule (greedy by default; random/hybrid/
+    # cyclic per cfg.selection — see repro.core.selection.make_mask).
     E = problem.block_norms(zhat - x)
     M = jnp.max(E)
-    if cfg.jacobi:
-        mask_b = selection.full_mask(E)
+    if selection.needs_key(cfg.selection) and not cfg.jacobi:
+        key, sub = jax.random.split(state.key)
     else:
-        mask_b = selection.greedy_mask(E, cfg.rho, M)
+        key, sub = state.key, state.key
+    mask_b = selection.make_mask(E, cfg, sub, state.k, M=M)
     mask = mask_b if problem.block_size == 1 \
         else jnp.repeat(mask_b, problem.block_size)
 
@@ -151,6 +161,7 @@ def flexa_iteration(problem: Problem, cfg: SolverConfig,
         n_tau_changes=n_changes,
         k=state.k + 1,
         stat=stat,
+        key=key,
     )
     info = {
         "V": v_new,

@@ -34,7 +34,7 @@ from repro.config.base import SolverConfig
 from repro.compat import shard_map
 from repro.core.flexa import MAX_TAU_CHANGES
 from repro.core.prox import soft_threshold
-from repro.core import stepsize
+from repro.core import selection, stepsize
 from repro.core.result import SolverResult
 
 
@@ -48,6 +48,15 @@ class PFlexaState(NamedTuple):
     n_tau_changes: jnp.ndarray
     k: jnp.ndarray
     stat: jnp.ndarray
+    key: jnp.ndarray        # replicated PRNG key (randomized selection)
+
+
+#: Selection rules the sharded step supports.  Every shard evaluates its
+#: local blocks; random draws use per-shard keys (``fold_in(axis_index)``)
+#: split from one replicated stream, and the only collectives the rules add
+#: are scalar pmax/psum reductions.
+SHARDED_SELECTION_RULES = ("greedy", "full", "jacobi", "random", "hybrid",
+                           "cyclic")
 
 
 # Unified result contract (repro.solvers.result); old name kept as alias.
@@ -65,6 +74,42 @@ def _pad_cols(A: np.ndarray, p: int) -> tuple[np.ndarray, int]:
 def make_sharded_step(mesh: Mesh, axis: str, c: float, cfg: SolverConfig,
                       tau0: float):
     """Build the shard_map'ed Algorithm-1 iteration for Lasso."""
+    rule = "full" if cfg.jacobi else cfg.selection
+    if rule not in SHARDED_SELECTION_RULES:
+        raise ValueError(
+            f"pflexa supports selection rules {SHARDED_SELECTION_RULES}; "
+            f"got {rule!r}")
+
+    def local_mask(E_loc, M, state: PFlexaState):
+        """Step S.3 on the local blocks (masks keep it SPMD — only scalar
+        collectives).  Returns (mask, next replicated key)."""
+        if rule in ("full", "jacobi"):
+            return jnp.ones_like(E_loc), state.key
+        if rule == "greedy":
+            # greedy_mask takes the externally-pmax'ed M so the shard-local
+            # rule is literally the solo one.
+            return selection.greedy_mask(E_loc, cfg.rho, M), state.key
+        if rule == "cyclic":
+            # Fixed per-shard shuffle (keyed on seed + shard index), chunk
+            # k mod n_chunks — every block updated once per cycle.
+            perm_key = jax.random.fold_in(
+                jax.random.PRNGKey(cfg.seed), jax.lax.axis_index(axis))
+            return selection.cyclic_shuffle_mask(
+                E_loc.shape[0], state.k, cfg.sel_chunks, perm_key), state.key
+        # random / hybrid: split the replicated stream (same on all shards)
+        # then fold in the shard index so draws are independent per shard.
+        new_key, sub = jax.random.split(state.key)
+        shard_key = jax.random.fold_in(sub, jax.lax.axis_index(axis))
+        sketch = jax.random.bernoulli(
+            shard_key, cfg.sel_p, E_loc.shape).astype(E_loc.dtype)
+        total = jax.lax.psum(jnp.sum(sketch), axis)
+        # Globally empty draw → fall back to the argmax set (never stall).
+        sketch = jnp.where(total > 0, sketch,
+                           (E_loc >= M).astype(E_loc.dtype))
+        if rule == "random":
+            return sketch, new_key
+        Ms = jax.lax.pmax(jnp.max(E_loc * sketch), axis)
+        return sketch * (E_loc >= cfg.rho * Ms).astype(E_loc.dtype), new_key
 
     def local_step(A_loc, colsq_loc, b, state: PFlexaState):
         x, r = state.x, state.r
@@ -75,10 +120,7 @@ def make_sharded_step(mesh: Mesh, axis: str, c: float, cfg: SolverConfig,
 
         E_loc = jnp.abs(z_loc - x)                       # Eᵢ = |x̂ᵢ − xᵢ|
         M = jax.lax.pmax(jnp.max(E_loc), axis)           # one scalar collective
-        if cfg.jacobi:
-            mask = jnp.ones_like(E_loc)
-        else:
-            mask = (E_loc >= cfg.rho * M).astype(E_loc.dtype)
+        mask, new_key = local_mask(E_loc, M, state)
 
         dx_loc = state.gamma * mask * (z_loc - x)
         x_new = x + dx_loc
@@ -106,7 +148,8 @@ def make_sharded_step(mesh: Mesh, axis: str, c: float, cfg: SolverConfig,
             x=x_new, r=r_new,
             gamma=stepsize.gamma_next(state.gamma, cfg.theta),
             tau_scale=tau_scale, v_prev=v_new, consec_dec=consec,
-            n_tau_changes=n_changes, k=state.k + 1, stat=stat)
+            n_tau_changes=n_changes, k=state.k + 1, stat=stat,
+            key=new_key)
         sel = jax.lax.pmean(jnp.mean(mask), axis)
         info = {"V": v_new, "stat": stat, "E_max": M, "sel_frac": sel,
                 "gamma": state.gamma, "tau_scale": tau_scale}
@@ -114,7 +157,7 @@ def make_sharded_step(mesh: Mesh, axis: str, c: float, cfg: SolverConfig,
 
     state_specs = PFlexaState(
         x=P(axis), r=P(), gamma=P(), tau_scale=P(), v_prev=P(),
-        consec_dec=P(), n_tau_changes=P(), k=P(), stat=P())
+        consec_dec=P(), n_tau_changes=P(), k=P(), stat=P(), key=P())
     info_specs = {k: P() for k in
                   ("V", "stat", "E_max", "sel_frac", "gamma", "tau_scale")}
 
@@ -177,6 +220,7 @@ def solve(A, b, c: float, cfg: SolverConfig | None = None,
         n_tau_changes=jnp.asarray(0, jnp.int32),
         k=jnp.asarray(0, jnp.int32),
         stat=jnp.asarray(jnp.inf, jnp.float32),
+        key=jax.random.PRNGKey(cfg.seed),
     )
     step = make_sharded_step(mesh, axis, float(c), cfg, tau0)
 

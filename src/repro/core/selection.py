@@ -5,13 +5,43 @@ The convergence condition is mild: Sᵏ must contain at least one block with
 rule that takes *all* such blocks (ρ = 0.5); ρ → 0⁺ with all blocks gives the
 full Jacobi scheme; taking exactly the argmax gives Gauss-Southwell.
 
+Beyond the deterministic rules, this module implements the hybrid
+random/deterministic schemes of arXiv:1407.4504 (*Hybrid Random/Deterministic
+Parallel Algorithms for Convex and Nonconvex Big Data Optimization*):
+
+* :func:`random_mask`   — a Bernoulli(p) sketch of the blocks.  Convergence
+  is almost-sure rather than deterministic, so the rule is **exempt** from
+  the Theorem-1 greedy condition (the hybrid paper's Theorem 3 covers it).
+* :func:`hybrid_mask`   — greedy-ρ applied *within* a Bernoulli sketch.
+  Satisfies the Theorem-1 condition *relative to the sketch* (it always
+  contains the sketch argmax).  Note on cost: in the hybrid paper the
+  sketch saves computing best responses outside the drawn set; this dense
+  jnp implementation still evaluates every block's best response and Eᵢ
+  each iteration (that is what keeps the update a fixed-shape SPMD mask),
+  so here the rules reproduce the *selection dynamics* — iteration counts,
+  robustness — not the per-iteration FLOP savings.
+* :func:`cyclic_shuffle_mask` — an essentially-cyclic rule: blocks are
+  round-robin assigned to ``n_chunks`` shuffled chunks and chunk ``k mod
+  n_chunks`` is selected at iteration k, so every block is updated at least
+  once per cycle.  Also exempt from the greedy condition (essentially-cyclic
+  convergence), but fully deterministic given the shuffle key.
+
 All rules return a {0,1} mask over blocks — masks (not gathers) keep the
 update SPMD-friendly: every shard evaluates its own blocks, the only global
-quantity is the scalar ``max Eᵢ`` (a ``pmax`` in the distributed path).
+quantities are scalars (``max Eᵢ`` — a ``pmax`` in the distributed path —
+and the sketch max for the hybrid rule).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+
+#: Rules whose Sᵏ depends on a PRNG draw (state must carry/split a key).
+RANDOMIZED_RULES = ("random", "hybrid")
+
+#: Every rule name `SolverConfig.selection` accepts.
+RULES = ("greedy", "full", "jacobi", "southwell", "topk") + \
+    RANDOMIZED_RULES + ("cyclic",)
 
 
 def greedy_mask(E: jnp.ndarray, rho: float, M=None) -> jnp.ndarray:
@@ -36,11 +66,94 @@ def southwell_mask(E: jnp.ndarray) -> jnp.ndarray:
 
 
 def topk_mask(E: jnp.ndarray, k: int) -> jnp.ndarray:
-    """The k largest blocks (Grock-style parallelism cap, for baselines)."""
+    """The k largest blocks (Grock-style parallelism cap, for baselines).
+
+    Exactly k entries via a stable descending argsort, so threshold ties
+    are broken by block index *within the tied value only* — the previous
+    cumsum-trim could evict strictly-larger blocks (including the argmax)
+    when low values tied at the threshold, violating the Theorem-1
+    condition (caught by ``tests/test_selection_rules.py``).
+    """
     if k >= E.shape[0]:
         return jnp.ones_like(E)
-    thresh = jnp.sort(E)[-k]
-    mask = (E >= thresh).astype(E.dtype)
-    # Break ties deterministically so exactly k entries are selected.
-    excess = jnp.cumsum(mask) - k
-    return jnp.where((mask > 0) & (excess > 0), 0.0, mask)
+    idx = jnp.argsort(-E)[:k]          # stable: ties keep index order
+    return jnp.zeros_like(E).at[idx].set(1.0)
+
+
+def random_mask(E: jnp.ndarray, p: float, key) -> jnp.ndarray:
+    """Bernoulli(p) sketch of the blocks (arXiv:1407.4504 random rule).
+
+    A draw that comes back empty is replaced by one uniformly random block,
+    so Sᵏ is never empty (an empty Sᵏ would silently stall an iteration
+    while still decaying γ).
+    """
+    kb, kf = jax.random.split(key)
+    m = jax.random.bernoulli(kb, p, E.shape).astype(E.dtype)
+    one = jax.random.randint(kf, (), 0, E.shape[0])
+    fallback = (jnp.arange(E.shape[0]) == one).astype(E.dtype)
+    return jnp.where(jnp.any(m > 0), m, fallback)
+
+
+def hybrid_mask(E: jnp.ndarray, rho: float, p: float, key) -> jnp.ndarray:
+    """Greedy-ρ restricted to a Bernoulli(p) sketch (the hybrid rule).
+
+    Keeps only sketched blocks within factor ρ of the *sketch* max, so the
+    returned Sᵏ always contains the sketch argmax.  (The distributed
+    ``pflexa`` step implements its own shard-local variant of this rule —
+    the sketch-empty fallback there must be a global psum decision, not
+    the per-shard one :func:`random_mask` makes.)
+    """
+    sketch = random_mask(E, p, key)
+    M_sketch = jnp.max(E * sketch)
+    return sketch * (E >= rho * M_sketch).astype(E.dtype)
+
+
+def cyclic_shuffle_mask(n_blocks: int, k, n_chunks: int, key) -> jnp.ndarray:
+    """Chunk ``k mod n_chunks`` of a shuffled round-robin block partition.
+
+    The permutation is a pure function of ``key`` (constant-folded under
+    jit), so the rule is deterministic per solve: chunks are disjoint,
+    balanced to within one block, and their union over any ``n_chunks``
+    consecutive iterations is all of 𝒩 (essentially-cyclic).
+    """
+    # Fewer blocks than chunks would leave some iterations with an empty
+    # Sᵏ (x unchanged while γ still decays) — clamp the cycle length.
+    n_chunks = max(1, min(n_chunks, n_blocks))
+    perm = jax.random.permutation(key, n_blocks)
+    chunk_of = jnp.zeros((n_blocks,), jnp.int32).at[perm].set(
+        jnp.arange(n_blocks, dtype=jnp.int32) % n_chunks)
+    return (chunk_of == jnp.asarray(k) % n_chunks).astype(jnp.float32)
+
+
+def needs_key(rule: str) -> bool:
+    """Whether ``rule`` consumes a fresh PRNG key every iteration."""
+    return rule in RANDOMIZED_RULES
+
+
+def make_mask(E: jnp.ndarray, cfg, key, k, M=None) -> jnp.ndarray:
+    """Dispatch Step S.3 on ``cfg.selection``.
+
+    ``key`` is the per-iteration PRNG key (consumed only by the randomized
+    rules — see :func:`needs_key`); ``k`` the iteration counter (cyclic
+    rule); ``M`` an optional externally-reduced global max of ``E``.
+    ``cfg.jacobi=True`` overrides to the full rule (back-compat flag).
+    """
+    rule = "full" if cfg.jacobi else cfg.selection
+    if rule == "greedy":
+        return greedy_mask(E, cfg.rho, M)
+    if rule in ("full", "jacobi"):
+        return full_mask(E)
+    if rule == "southwell":
+        return southwell_mask(E)
+    if rule == "topk":
+        return topk_mask(E, cfg.sel_k)
+    if rule == "random":
+        return random_mask(E, cfg.sel_p, key)
+    if rule == "hybrid":
+        return hybrid_mask(E, cfg.rho, cfg.sel_p, key)
+    if rule == "cyclic":
+        # The shuffle is keyed on the solve seed, not the per-step key, so
+        # the partition is fixed across iterations (a true cycle).
+        return cyclic_shuffle_mask(
+            E.shape[0], k, cfg.sel_chunks, jax.random.PRNGKey(cfg.seed))
+    raise ValueError(f"unknown selection rule {rule!r}; one of {RULES}")

@@ -54,8 +54,29 @@ def _int8_tensor(g):
 
 
 def compress(grads, state: CompressionState, *, kind: str = "topk",
-             topk_frac: float = 0.1):
-    """Returns (compressed grads to feed the optimizer, new state)."""
+             topk_frac: float = 0.1, feedback_scale=1.0):
+    """Returns (compressed grads to feed the optimizer, new state).
+
+    ``feedback_scale`` damps the error-feedback carry: the residual stored
+    for the next step is ``feedback_scale·(g + r − C(g + r))``.  Scale 1.0
+    is classical EF-SGD — correct for constant-small-step optimizers, but
+    it destabilized FLEXA (the ROADMAP-flagged topk+EF defect): with the
+    large early γᵏ ≈ 0.9 the full carry re-injects sparsification error
+    faster than the damped iteration contracts, and the loss ascends after
+    a few steps.  The principled choice for FLEXA is the γ-scaled carry
+    ``feedback_scale = γᵏ(1 − γᵏ)`` (what the training loop passes):
+
+    * while γᵏ is large the carry is damped by (1 − γᵏ) — exactly the
+      fraction of the proposed step the Eq. (4) averaging does *not*
+      apply, so the remembered error never exceeds what one undamped step
+      could have injected;
+    * as γᵏ → 0 the carry vanishes like γᵏ, i.e. the EF error follows
+      Theorem 1(v)'s vanishing-inexactness schedule (εᵏ ∝ γᵏ gives
+      Σ γᵏεᵏ ≤ Σ (γᵏ)² < ∞ — the summability Theorem 1 needs).
+
+    Verified by ``tests/test_train_serve.py::test_grad_compression_in_loop``
+    (topk+EF now descends; int8+EF stays fine).
+    """
     if kind == "none":
         return grads, state
 
@@ -67,7 +88,7 @@ def compress(grads, state: CompressionState, *, kind: str = "topk",
             c = _int8_tensor(gf)
         else:
             raise ValueError(kind)
-        return c, gf - c
+        return c, feedback_scale * (gf - c)
 
     out = jax.tree_util.tree_map(one, grads, state.residual)
     comp = jax.tree_util.tree_map(

@@ -26,6 +26,11 @@ class Problem:
     diag_curv: Callable         # x -> per-coordinate curvature majorizer of F
     g_kind: str = "l1"          # "l1" | "group_l2" | "zero"
     g_weight: float = 0.0       # c
+    # Which F-family the problem belongs to ("lasso" | "group_lasso" |
+    # "logreg" | "svm" | "" for ad-hoc F).  The batched engine uses this to
+    # rebuild the F closures from stacked data inside vmap
+    # (repro.problems.families).
+    family: str = ""
     # Optional certificates (Nesterov instances have closed-form optima):
     v_star: Optional[float] = None
     x_star: Optional[jnp.ndarray] = None

@@ -1,0 +1,124 @@
+"""Problem-family registry for the batched multi-instance engine.
+
+The paper's framework covers any composite ``F + G`` (Eq. (1)); the batched
+engine (``repro.solvers.batched``) vmaps :func:`repro.core.flexa.
+flexa_iteration` over a stack of instances, which requires rebuilding each
+instance's F closures from *traced* data slices inside the vmap.  A
+:class:`ProblemFamily` packages exactly what that takes, per F choice:
+
+* ``data_keys``  — which arrays of ``Problem.data`` vary per instance and
+  get stacked along a leading batch dimension (the first one is the (m, n)
+  design/feature matrix that fixes the shape signature);
+* ``make_fns``   — the traceable ``(*arrays, col_sq=None) -> (f, grad_f,
+  diag_curv)`` closure builder.  These are the *same* builders the solo
+  constructors install (``lasso.quadratic_fns``, ``logreg.logistic_fns``,
+  ``svm.squared_hinge_fns``), so batched and solo solves share one
+  definition of the math;
+* ``curv_scale`` — the constant in ``diag_curv = curv_scale·‖columns‖²``,
+  used to derive the paper's §4 default ``τᵢ = tr(diag ∇²F)/ (2·2n)`` from
+  the precomputed column norms without calling ``diag_curv`` on the host.
+
+G stays orthogonal: the family fixes F, while ``g_kind``/``block_size``
+(part of the shape signature) select the prox — so sparse logistic
+regression and *group*-sparse logistic regression are one family.
+
+Adding a family is one :func:`register_family` call; the batched engine,
+the serve engine and the compile-cache keys pick it up automatically.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.problems.base import Problem
+from repro.problems.lasso import quadratic_fns
+from repro.problems.logreg import logistic_fns
+from repro.problems.svm import squared_hinge_fns
+
+
+@dataclass(frozen=True)
+class ProblemFamily:
+    name: str
+    data_keys: tuple            # Problem.data arrays stacked per instance
+    make_fns: Callable          # (*arrays, col_sq=None) -> (f, grad, curv)
+    curv_scale: float           # diag_curv == curv_scale * col_sq
+
+    def col_sq(self, *arrays) -> jnp.ndarray:
+        """‖column‖² of the (m, n) design matrix (arrays[0]) — traceable."""
+        A = arrays[0]
+        return jnp.sum(A * A, axis=0)
+
+    def half_curv(self, col_sq) -> jnp.ndarray:
+        """diag_curv/2 — what the §4 default τ rule reduces over (matches
+        ``flexa.default_tau0`` exactly, so batched and solo drivers can
+        never disagree on the default τ)."""
+        return 0.5 * self.curv_scale * col_sq
+
+
+_FAMILIES: dict[str, ProblemFamily] = {}
+
+
+def register_family(fam: ProblemFamily) -> ProblemFamily:
+    if fam.name in _FAMILIES:
+        raise ValueError(f"problem family {fam.name!r} already registered")
+    _FAMILIES[fam.name] = fam
+    return fam
+
+
+def get_family(name: str) -> ProblemFamily:
+    try:
+        return _FAMILIES[name]
+    except KeyError:
+        raise KeyError(f"unknown problem family {name!r}; available: "
+                       f"{available_families()}") from None
+
+
+def available_families() -> tuple[str, ...]:
+    return tuple(sorted(_FAMILIES))
+
+
+register_family(ProblemFamily(
+    name="lasso", data_keys=("A", "b"),
+    make_fns=quadratic_fns, curv_scale=2.0))
+# Same smooth part as lasso; the group structure lives in the G side of the
+# shape signature (block_size > 1, g_kind="group_l2").
+register_family(ProblemFamily(
+    name="group_lasso", data_keys=("A", "b"),
+    make_fns=quadratic_fns, curv_scale=2.0))
+register_family(ProblemFamily(
+    name="logreg", data_keys=("Z",),
+    make_fns=logistic_fns, curv_scale=0.25))
+register_family(ProblemFamily(
+    name="svm", data_keys=("Z",),
+    make_fns=squared_hinge_fns, curv_scale=2.0))
+
+
+def infer_family(problem: Problem) -> str:
+    """The family of a :class:`Problem` (explicit field, else structural)."""
+    if problem.family:
+        return problem.family
+    if "A" in problem.data:              # quadratic F with data A, b
+        return "lasso" if problem.block_size == 1 else "group_lasso"
+    raise ValueError(
+        "cannot infer a batched problem family for "
+        f"{problem.name!r} (set Problem.family to one of "
+        f"{available_families()})")
+
+
+def build_problem(family: str, arrays, c, *, n: int, block_size: int,
+                  g_kind: str, col_sq=None) -> Problem:
+    """Rebuild a family :class:`Problem` from raw (possibly traced) arrays.
+
+    Unlike the solo constructors this skips every non-traceable step (numpy
+    power iteration etc.), so it can run *inside* jit/vmap with the arrays
+    being per-instance traced slices and ``c`` a traced scalar.
+    """
+    fam = get_family(family)
+    f, grad_f, diag_curv = fam.make_fns(*arrays, col_sq=col_sq)
+    return Problem(
+        name=f"batched_{family}", n=n, block_size=block_size,
+        f=f, grad_f=grad_f, diag_curv=diag_curv,
+        g_kind=g_kind, g_weight=c, family=family,
+        data=dict(zip(fam.data_keys, arrays)))

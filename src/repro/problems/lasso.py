@@ -50,6 +50,7 @@ def make_lasso(A, b, c: float, block_size: int = 1,
         name=name, n=A.shape[1], block_size=block_size,
         f=f, grad_f=grad_f, diag_curv=diag_curv,
         g_kind="l1" if block_size == 1 else "group_l2", g_weight=float(c),
+        family="lasso" if block_size == 1 else "group_lasso",
         v_star=v_star, x_star=x_star, lipschitz=L,
         data={"A": A, "b": b},
     )

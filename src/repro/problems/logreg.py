@@ -16,12 +16,15 @@ from repro.problems.base import Problem
 from repro.problems.lasso import _power_iter_sq
 
 
-def make_logreg(Y, a, c: float, block_size: int = 1) -> Problem:
-    """Y: (m, n) feature rows yⱼ; a: (m,) labels in {−1, +1}."""
-    Y = jnp.asarray(Y)
-    a = jnp.asarray(a)
-    Z = Y * a[:, None]                 # margins are z = Zx
-    col_sq = jnp.sum(Z * Z, axis=0)
+def logistic_fns(Z, col_sq=None):
+    """The F = Σⱼ log(1+exp(−zⱼᵀx)) closure triple (f, grad_f, diag_curv).
+
+    ``Z = diag(a)·Y`` is the label-signed feature matrix.  Traceable, so
+    the batched engine can call it with per-instance traced slices of Z;
+    ``col_sq`` may be precomputed to avoid re-reducing ‖zᵢ‖² in a loop.
+    """
+    if col_sq is None:
+        col_sq = jnp.sum(Z * Z, axis=0)
 
     def f(x):
         t = Z @ x
@@ -37,12 +40,22 @@ def make_logreg(Y, a, c: float, block_size: int = 1) -> Problem:
         # Global bound: σ(t)σ(−t) ≤ 1/4  ⇒  diag(∇²F) ≤ 0.25·Σ zⱼᵢ².
         return 0.25 * col_sq
 
+    return f, grad_f, diag_curv
+
+
+def make_logreg(Y, a, c: float, block_size: int = 1) -> Problem:
+    """Y: (m, n) feature rows yⱼ; a: (m,) labels in {−1, +1}."""
+    Y = jnp.asarray(Y)
+    a = jnp.asarray(a)
+    Z = Y * a[:, None]                 # margins are z = Zx
+    f, grad_f, diag_curv = logistic_fns(Z)
+
     L = float(0.25 * _power_iter_sq(np.asarray(Z)))
     return Problem(
         name="sparse_logreg", n=Y.shape[1], block_size=block_size,
         f=f, grad_f=grad_f, diag_curv=diag_curv,
         g_kind="l1" if block_size == 1 else "group_l2", g_weight=float(c),
-        lipschitz=L, data={"Z": Z},
+        family="logreg", lipschitz=L, data={"Z": Z},
     )
 
 

@@ -15,11 +15,14 @@ from repro.problems.base import Problem
 from repro.problems.lasso import _power_iter_sq
 
 
-def make_svm(Y, a, c: float, block_size: int = 1) -> Problem:
-    Y = jnp.asarray(Y)
-    a = jnp.asarray(a)
-    Z = Y * a[:, None]
-    col_sq = jnp.sum(Z * Z, axis=0)
+def squared_hinge_fns(Z, col_sq=None):
+    """The F = ‖max(0, 1−Zx)‖² closure triple (f, grad_f, diag_curv).
+
+    ``Z = diag(a)·Y``.  Traceable (batched-engine compatible); ``col_sq``
+    may be precomputed to avoid re-reducing ‖zᵢ‖² inside a solve loop.
+    """
+    if col_sq is None:
+        col_sq = jnp.sum(Z * Z, axis=0)
 
     def f(x):
         h = jnp.maximum(0.0, 1.0 - Z @ x)
@@ -32,11 +35,21 @@ def make_svm(Y, a, c: float, block_size: int = 1) -> Problem:
     def diag_curv(x):
         return 2.0 * col_sq
 
+    return f, grad_f, diag_curv
+
+
+def make_svm(Y, a, c: float, block_size: int = 1) -> Problem:
+    Y = jnp.asarray(Y)
+    a = jnp.asarray(a)
+    Z = Y * a[:, None]
+    f, grad_f, diag_curv = squared_hinge_fns(Z)
+
     L = float(2.0 * _power_iter_sq(np.asarray(Z)))
     return Problem(
         name="l1_l2_svm", n=Y.shape[1], block_size=block_size,
         f=f, grad_f=grad_f, diag_curv=diag_curv,
-        g_kind="l1", g_weight=float(c), lipschitz=L, data={"Z": Z},
+        g_kind="l1", g_weight=float(c), family="svm",
+        lipschitz=L, data={"Z": Z},
     )
 
 

@@ -17,12 +17,16 @@ compilation once and every later request rides the compiled program.
    (``serve_step`` = one engine decode step).
 
 2. :class:`SolverServeEngine` — the paper-side workload: many concurrent
-   Lasso / group-Lasso solve requests.  Requests are grouped by shape
-   signature, padded up to power-of-two batch buckets, and dispatched to
-   the batched multi-instance FLEXA program
+   solve requests from *any* registered problem family (lasso, group
+   lasso, sparse logistic regression, ℓ1-ℓ2 SVM — see
+   ``repro.problems.families``).  Requests are grouped by shape signature
+   (family included), padded up to power-of-two batch buckets, and
+   dispatched to the batched multi-instance FLEXA program
    (:func:`repro.solvers.solve_batched`'s compiled core).  One compilation
    per (signature, bucket) is amortized over every subsequent request —
-   the "heavy concurrent traffic" scenario from the ROADMAP.
+   the "heavy concurrent traffic" scenario from the ROADMAP — and a
+   heterogeneous wave (a logreg mix riding along with Lasso traffic) just
+   occupies several cache entries.
 """
 from __future__ import annotations
 
@@ -35,6 +39,7 @@ import jax.numpy as jnp
 from repro.config.base import ModelConfig, ShapeConfig, SolverConfig
 from repro.models import io as IO
 from repro.models import transformer as T
+from repro.problems.families import get_family
 from repro.solvers.batched import BatchedProblemSpec, make_batched_solver
 
 
@@ -123,19 +128,50 @@ class ServeEngine:
 # ===================================================================== #
 @dataclass
 class SolveRequest:
-    """One Lasso/group-Lasso request:  min ‖Ax−b‖² + c·g(x)."""
-    A: np.ndarray               # (m, n) design matrix
-    b: np.ndarray               # (m,)   observations
+    """One composite-minimization request:  min F(x) + c·g(x).
+
+    ``family`` picks F (``repro.problems.families``): the quadratic
+    families ("lasso"/"group_lasso") read ``A`` as the design matrix and
+    need ``b``; "logreg"/"svm" read ``A`` as the label-signed feature
+    matrix Z = diag(a)·Y and take no ``b``.
+    """
+    A: np.ndarray               # (m, n) design / signed-feature matrix
+    b: np.ndarray | None = None  # (m,) observations (quadratic families)
     c: float = 1.0              # regularization weight
     block_size: int = 1         # 1 ⇒ ℓ1; >1 ⇒ group-ℓ2 blocks
+    family: str = ""            # "" ⇒ lasso/group_lasso by block_size
     x0: np.ndarray | None = None  # optional warm start
 
     @property
     def spec(self) -> BatchedProblemSpec:
+        family = self.family or (
+            "lasso" if self.block_size == 1 else "group_lasso")
         return BatchedProblemSpec(
             m=int(self.A.shape[0]), n=int(self.A.shape[1]),
             block_size=self.block_size,
-            g_kind="l1" if self.block_size == 1 else "group_l2")
+            g_kind="l1" if self.block_size == 1 else "group_l2",
+            family=family)
+
+    def data_arrays(self, spec: BatchedProblemSpec) -> tuple:
+        """The family data tuple this request contributes to the stack.
+
+        ``A`` always supplies the leading (m, n) design array whatever the
+        family calls it; ``b`` supplies the observation vector.  Families
+        with additional per-instance arrays need a richer request type —
+        fail loudly rather than guessing.
+        """
+        keys = get_family(spec.family).data_keys
+        out = []
+        for j, k in enumerate(keys):
+            if j == 0:
+                out.append(jnp.asarray(self.A, jnp.float32))
+            elif k == "b":
+                out.append(jnp.asarray(self.b, jnp.float32))
+            else:
+                raise NotImplementedError(
+                    f"SolveRequest has no field for data key {k!r} of "
+                    f"family {spec.family!r}")
+        return tuple(out)
 
 
 @dataclass
@@ -155,12 +191,17 @@ class SolverServeEngine:
     per-request jit tracing, compilation and Python-loop stepping dwarf the
     actual linear algebra at small m×n.  The engine removes all three:
 
-    * requests are grouped by :class:`BatchedProblemSpec` (same m, n, block
-      structure — the static signature a compiled program is specialized
-      to) and stacked;
+    * requests are grouped by :class:`BatchedProblemSpec` (same family, m,
+      n, block structure — the static signature a compiled program is
+      specialized to) and stacked;
     * each group is chopped into power-of-two *buckets* (≤ ``max_batch``);
       short remainders are padded by repeating the first request — padding
-      rows converge in lock-step and are dropped before responding;
+      rows are dropped before responding.  Under deterministic selection
+      rules they converge in lock-step with the request they clone; under
+      the randomized rules each batch slot draws its own PRNG stream, so a
+      padding clone may take a different trajectory and keep the bucket
+      iterating a little longer (bounded by ``cfg.max_iters`` — wasted
+      device work only, never a wrong answer);
     * each (spec, bucket) pair hits :func:`make_batched_solver` — an
       ``lru_cache``'d, jitted vmap+while_loop program — so compilation
       happens once per shape signature, then every subsequent batch of
@@ -201,10 +242,14 @@ class SolverServeEngine:
         by_spec: dict[BatchedProblemSpec, list[int]] = {}
         for i, r in enumerate(requests):
             spec = r.spec
-            if np.shape(r.b) != (spec.m,):
+            needs_b = "b" in get_family(spec.family).data_keys
+            if needs_b and np.shape(r.b) != (spec.m,):
                 raise ValueError(
-                    f"request {i}: b must have shape ({spec.m},), got "
-                    f"{np.shape(r.b)}")
+                    f"request {i}: family {spec.family!r} needs b of shape "
+                    f"({spec.m},), got {np.shape(r.b)}")
+            if not needs_b and r.b is not None:
+                raise ValueError(
+                    f"request {i}: family {spec.family!r} takes no b")
             if r.x0 is not None and np.shape(r.x0) != (spec.n,):
                 raise ValueError(
                     f"request {i}: x0 must have shape ({spec.n},), got "
@@ -222,14 +267,15 @@ class SolverServeEngine:
                 pad = B - len(chunk)
                 rows = [requests[i] for i in chunk] \
                     + [requests[chunk[0]]] * pad
-                A = jnp.stack([jnp.asarray(r.A, jnp.float32) for r in rows])
-                b = jnp.stack([jnp.asarray(r.b, jnp.float32) for r in rows])
+                per_req = [r.data_arrays(spec) for r in rows]
+                data = tuple(jnp.stack([arrs[j] for arrs in per_req])
+                             for j in range(len(per_req[0])))
                 c = jnp.asarray([float(r.c) for r in rows], jnp.float32)
                 x0 = jnp.stack([
                     jnp.zeros((spec.n,), jnp.float32) if r.x0 is None
                     else jnp.asarray(r.x0, jnp.float32) for r in rows])
 
-                final, converged = run(A, b, c, x0)
+                final, converged = run(data, c, x0)
                 xs = np.asarray(final.x)
                 ks = np.asarray(final.k)
                 stats_ = np.asarray(final.stat)

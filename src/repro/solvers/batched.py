@@ -1,29 +1,34 @@
 """Batched multi-instance FLEXA: B independent solves, ONE compiled program.
 
-The serving scenario the ROADMAP asks for is "many concurrent Lasso-type
+The serving scenario the ROADMAP asks for is "many concurrent solve
 requests".  Looping ``solve()`` over instances pays per-instance dispatch
 and compilation and leaves the accelerator idle between small matvecs.
 This module instead *vmaps Algorithm 1 itself* over a stack of instances:
 
 * every instance shares one static shape signature
-  (:class:`BatchedProblemSpec`: m, n, block size, G kind) — data ``A``,
-  ``b`` and the ℓ1 weight ``c`` vary per instance;
+  (:class:`BatchedProblemSpec`: m, n, block size, G kind **and problem
+  family**) — the data arrays and the regularization weight ``c`` vary per
+  instance.  The family (lasso / group_lasso / logreg / svm — see
+  ``repro.problems.families``) selects which F closures get rebuilt from
+  the vmapped data slices inside the vmap;
 * the per-instance iteration is literally
-  :func:`repro.core.flexa.flexa_iteration` — the problem closures are
-  rebuilt from the vmapped data slices inside the vmap, so batched iterates
-  match B sequential ``solve`` calls to float32 accuracy (asserted by
-  ``tests/test_solvers_api.py``);
+  :func:`repro.core.flexa.flexa_iteration`, so batched iterates match B
+  sequential ``solve`` calls to float32 accuracy (asserted for every
+  family by ``tests/test_solvers_api.py``);
 * the driver is a single ``lax.while_loop``: converged instances are
   frozen (their state stops updating, their ``k`` stops counting) while
   stragglers keep iterating, and the program exits when every instance is
   done — one compilation, zero per-step host round trips;
-* compiled programs are cached on ``(spec, cfg)`` via ``lru_cache``, so a
-  serving process pays compilation once per shape bucket
+* compiled programs are cached on ``(spec, cfg)`` via ``lru_cache`` — one
+  compile cache entry per (family, shape, config) signature — so a serving
+  process pays compilation once per bucket
   (``repro.serve.engine.SolverServeEngine`` builds on exactly this).
 
-γ, τ and the selection mask are per-instance state, so each instance follows
-the identical trajectory it would take in a solo run — batching changes the
-schedule of nothing but the hardware.
+γ, τ, the PRNG key of the randomized selection rules, and the selection
+mask are per-instance state, so each instance follows the identical
+trajectory it would take in a solo run with ``key = fold_in(PRNGKey(seed),
+instance_index)`` — batching changes the schedule of nothing but the
+hardware.
 
 Reproducibility note: batched and solo matvecs may reduce in different
 orders (≈1e-6 relative fp32 noise).  The §4 τ-controller branches on exact
@@ -49,7 +54,7 @@ from repro.config.base import SolverConfig
 from repro.core import flexa as _flexa
 from repro.core.flexa import FlexaState, flexa_iteration
 from repro.problems.base import Problem
-from repro.problems.lasso import quadratic_fns
+from repro.problems.families import build_problem, get_family, infer_family
 from repro.solvers.result import SolverResult
 
 
@@ -57,65 +62,74 @@ from repro.solvers.result import SolverResult
 class BatchedProblemSpec:
     """The static signature every instance in one batch must share.
 
-    Shapes must match for vmap/stacking; the G structure must match because
-    it selects the prox (soft-threshold vs group shrinkage) baked into the
-    compiled program.  Hashable on purpose: it is the compile-cache key.
+    Shapes must match for vmap/stacking; ``family`` selects the F closures
+    and the G structure selects the prox (soft-threshold vs group
+    shrinkage) baked into the compiled program.  Hashable on purpose: it is
+    the compile-cache key.
     """
     m: int
     n: int
     block_size: int = 1
     g_kind: str = "l1"
+    family: str = "lasso"
 
     @classmethod
     def of(cls, problem: Problem) -> "BatchedProblemSpec":
-        A = problem.data.get("A")
-        if A is None:
+        family = infer_family(problem)
+        fam = get_family(family)
+        missing = [k for k in fam.data_keys if k not in problem.data]
+        if missing:
             raise ValueError(
-                "batched FLEXA needs quadratic problems with data A, b "
-                f"(got {problem.name!r})")
-        return cls(m=int(A.shape[0]), n=int(problem.n),
+                f"batched FLEXA on family {family!r} needs problem data "
+                f"{fam.data_keys} (got {problem.name!r} missing {missing})")
+        design = problem.data[fam.data_keys[0]]
+        return cls(m=int(design.shape[0]), n=int(problem.n),
                    block_size=int(problem.block_size),
-                   g_kind=str(problem.g_kind))
+                   g_kind=str(problem.g_kind), family=family)
+
+
+def family_problem(arrays, c, spec: BatchedProblemSpec,
+                   col_sq=None) -> Problem:
+    """Rebuild the per-instance :class:`Problem` from raw arrays.
+
+    Traceable (``repro.problems.families.build_problem``): the F closures
+    are the very same builders the solo constructors install, so batched
+    and solo solves share one definition of the math.  ``col_sq`` may be
+    precomputed outside the solve loop to avoid redoing the ‖column‖²
+    reduction every iteration.
+    """
+    return build_problem(spec.family, arrays, c, n=spec.n,
+                         block_size=spec.block_size, g_kind=spec.g_kind,
+                         col_sq=col_sq)
 
 
 def quadratic_problem(A, b, c, spec: BatchedProblemSpec,
                       col_sq=None) -> Problem:
-    """Rebuild the Lasso/group-Lasso :class:`Problem` from raw arrays.
-
-    Unlike ``problems.lasso.make_lasso`` this skips the (non-traceable)
-    numpy power iteration, so it can run *inside* jit/vmap with ``A``/
-    ``b``/``c`` being per-instance traced slices.  The F closures are the
-    very same :func:`~repro.problems.lasso.quadratic_fns` that make_lasso
-    installs — batched and solo solves share one definition of the math.
-    ``col_sq`` may be precomputed outside the solve loop to avoid redoing
-    the ‖aᵢ‖² reduction every iteration.
-    """
-    f, grad_f, diag_curv = quadratic_fns(A, b, col_sq=col_sq)
-    return Problem(
-        name="batched_quadratic", n=spec.n, block_size=spec.block_size,
-        f=f, grad_f=grad_f, diag_curv=diag_curv,
-        g_kind=spec.g_kind, g_weight=c, data={"A": A, "b": b})
+    """Back-compat alias for the quadratic families (pre-registry API)."""
+    return family_problem((A, b), c, spec, col_sq=col_sq)
 
 
-def _tau_base(col_sq, cfg: SolverConfig, n: int) -> jnp.ndarray:
-    """Traceable twin of ``flexa._base_tau`` (same §4 default, via the
-    shared :func:`~repro.core.flexa.tau0_from_colsq`)."""
+def _tau_base(half_curv, cfg: SolverConfig, n: int) -> jnp.ndarray:
+    """Traceable twin of ``flexa._base_tau``: the §4 default from
+    ``diag_curv/2`` (``ProblemFamily.half_curv``), via the shared
+    :func:`~repro.core.flexa.tau0_from_colsq`."""
     if cfg.tau0 > 0:
         return jnp.full((n,), cfg.tau0, jnp.float32)
-    t0 = _flexa.tau0_from_colsq(col_sq, n)
+    t0 = _flexa.tau0_from_colsq(half_curv, n)
     return jnp.broadcast_to(t0.astype(jnp.float32), (n,))
 
 
 def _instance_step(spec: BatchedProblemSpec, cfg: SolverConfig,
-                   A, b, c, col_sq, tau_base, state: FlexaState):
-    problem = quadratic_problem(A, b, c, spec, col_sq=col_sq)
+                   arrays, c, col_sq, tau_base, state: FlexaState):
+    problem = family_problem(arrays, c, spec, col_sq=col_sq)
     return flexa_iteration(problem, cfg, tau_base, state)
 
 
 def _instance_init(spec: BatchedProblemSpec, cfg: SolverConfig,
-                   A, b, c, x0) -> FlexaState:
-    problem = quadratic_problem(A, b, c, spec)
-    return _flexa.init_state(problem, x0, cfg)
+                   arrays, c, x0, idx) -> FlexaState:
+    problem = family_problem(arrays, c, spec)
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), idx)
+    return _flexa.init_state(problem, x0, cfg, key=key)
 
 
 def _freeze_done(done, new_state: FlexaState, old_state: FlexaState):
@@ -128,22 +142,26 @@ def _freeze_done(done, new_state: FlexaState, old_state: FlexaState):
 
 @lru_cache(maxsize=64)
 def make_batched_solver(spec: BatchedProblemSpec, cfg: SolverConfig):
-    """Compile ``run(A, b, c, x0) -> (final FlexaState, converged)``.
+    """Compile ``run(data, c, x0) -> (final FlexaState, converged)``.
 
-    ``A``: (B, m, n), ``b``: (B, m), ``c``: (B,), ``x0``: (B, n).  The cache
-    key is (spec, cfg); jit handles distinct B by recompiling per batch
-    bucket, which is why the serve engine pads requests into fixed buckets.
+    ``data`` is the tuple of stacked family arrays (leading dim B — e.g.
+    ``(A: (B, m, n), b: (B, m))`` for the quadratic families, ``(Z: (B, m,
+    n),)`` for logreg/svm), ``c``: (B,), ``x0``: (B, n).  The cache key is
+    (spec, cfg); jit handles distinct B by recompiling per batch bucket,
+    which is why the serve engine pads requests into fixed buckets.
     """
+    fam = get_family(spec.family)
     vstep = jax.vmap(partial(_instance_step, spec, cfg))
     vinit = jax.vmap(partial(_instance_init, spec, cfg))
-    vtau = jax.vmap(lambda csq: _tau_base(csq, cfg, spec.n))
+    vtau = jax.vmap(lambda csq: _tau_base(fam.half_curv(csq), cfg, spec.n))
 
     @jax.jit
-    def run(A, b, c, x0):
-        col_sq = jnp.sum(A * A, axis=1)          # (B, n), once per solve
+    def run(data, c, x0):
+        col_sq = jax.vmap(fam.col_sq)(*data)     # (B, n), once per solve
         tau_base = vtau(col_sq)                  # (B, n)
-        state = vinit(A, b, c, x0)
-        done = jnp.zeros((x0.shape[0],), bool)
+        B = x0.shape[0]
+        state = vinit(data, c, x0, jnp.arange(B))
+        done = jnp.zeros((B,), bool)
 
         def cond(carry):
             _, done = carry
@@ -151,7 +169,7 @@ def make_batched_solver(spec: BatchedProblemSpec, cfg: SolverConfig):
 
         def body(carry):
             state, done = carry
-            new_state, _ = vstep(A, b, c, col_sq, tau_base, state)
+            new_state, _ = vstep(data, c, col_sq, tau_base, state)
             merged = _freeze_done(done, new_state, state)
             done = done | (merged.stat <= cfg.tol) \
                 | (merged.k >= cfg.max_iters)
@@ -171,10 +189,12 @@ def _stack_instances(problems: Sequence[Problem]):
             raise ValueError(
                 f"all instances in a batch must share one shape signature; "
                 f"got {spec} and {other}")
-    A = jnp.stack([jnp.asarray(p.data["A"], jnp.float32) for p in problems])
-    b = jnp.stack([jnp.asarray(p.data["b"], jnp.float32) for p in problems])
+    fam = get_family(spec.family)
+    data = tuple(
+        jnp.stack([jnp.asarray(p.data[k], jnp.float32) for p in problems])
+        for k in fam.data_keys)
     c = jnp.asarray([float(p.g_weight) for p in problems], jnp.float32)
-    return spec, A, b, c
+    return spec, data, c
 
 
 def solve_batched(problems: Sequence[Problem], x0=None,
@@ -182,10 +202,12 @@ def solve_batched(problems: Sequence[Problem], x0=None,
                   record_history: bool = False) -> SolverResult:
     """Solve B independent instances in one compiled FLEXA program.
 
-    Returns a :class:`SolverResult` whose ``x`` is (B, n) and whose
-    ``iters`` / ``converged`` are per-instance ``(B,)`` arrays.  Each row of
-    ``x`` matches the solo ``solve(problems[i])`` solution (same cfg) to
-    float32 accuracy.
+    The instances may come from any registered problem family (lasso,
+    group_lasso, logreg, svm) as long as they share one
+    :class:`BatchedProblemSpec`.  Returns a :class:`SolverResult` whose
+    ``x`` is (B, n) and whose ``iters`` / ``converged`` are per-instance
+    ``(B,)`` arrays.  Each row of ``x`` matches the solo
+    ``solve(problems[i])`` solution (same cfg) to float32 accuracy.
 
     ``record_history=True`` switches to a Python-loop driver recording the
     batched trajectory (``history["V"]`` etc. are lists of (B,) arrays) —
@@ -193,7 +215,7 @@ def solve_batched(problems: Sequence[Problem], x0=None,
     never syncs with the host until convergence — the serving path.
     """
     cfg = cfg or SolverConfig()
-    spec, A, b, c = _stack_instances(problems)
+    spec, data, c = _stack_instances(problems)
     B = len(problems)
     if x0 is None:
         x0 = jnp.zeros((B, spec.n), jnp.float32)
@@ -205,25 +227,29 @@ def solve_batched(problems: Sequence[Problem], x0=None,
     t0 = time.perf_counter()
     if not record_history:
         run = make_batched_solver(spec, cfg)
-        final, converged = run(A, b, c, x0)
+        final, converged = run(data, c, x0)
         return SolverResult(
             x=final.x, iters=np.asarray(final.k),
             converged=np.asarray(converged), state=final,
             method="flexa_batched",
-            meta={"batch": B, "wall_s": time.perf_counter() - t0})
+            meta={"batch": B, "family": spec.family,
+                  "wall_s": time.perf_counter() - t0})
 
     # History path: same math, stepped from the host so trajectories can be
     # recorded (used by benchmarks; convergence freezing identical).
+    fam = get_family(spec.family)
     vstep = jax.jit(jax.vmap(partial(_instance_step, spec, cfg)))
-    col_sq = jnp.sum(A * A, axis=1)
-    tau_base = jax.vmap(lambda csq: _tau_base(csq, cfg, spec.n))(col_sq)
-    state = jax.vmap(partial(_instance_init, spec, cfg))(A, b, c, x0)
+    col_sq = jax.vmap(fam.col_sq)(*data)
+    tau_base = jax.vmap(
+        lambda csq: _tau_base(fam.half_curv(csq), cfg, spec.n))(col_sq)
+    state = jax.vmap(partial(_instance_init, spec, cfg))(
+        data, c, x0, jnp.arange(B))
     done = np.zeros((B,), bool)
     hist: dict[str, list] = {k: [] for k in
                              ("V", "stat", "E_max", "sel_frac", "gamma",
                               "tau_scale", "time")}
     while not done.all():
-        new_state, info = vstep(A, b, c, col_sq, tau_base, state)
+        new_state, info = vstep(data, c, col_sq, tau_base, state)
         state = _freeze_done(jnp.asarray(done), new_state, state)
         stat = np.asarray(state.stat)
         done = done | (stat <= cfg.tol) | (np.asarray(state.k)
@@ -235,4 +261,5 @@ def solve_batched(problems: Sequence[Problem], x0=None,
         x=state.x, iters=np.asarray(state.k),
         converged=np.asarray(state.stat) <= cfg.tol, state=state,
         history=hist, method="flexa_batched",
-        meta={"batch": B, "wall_s": time.perf_counter() - t0})
+        meta={"batch": B, "family": spec.family,
+              "wall_s": time.perf_counter() - t0})

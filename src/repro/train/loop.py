@@ -78,9 +78,15 @@ class TrainLoop:
             (loss, metrics), grads = jax.value_and_grad(
                 lf, has_aux=True)(params)
             if use_comp:
+                # γ-scaled error feedback, γᵏ(1−γᵏ): damped while FLEXA's
+                # early γ steps are large, vanishing as γᵏ → 0 (see
+                # distributed.compression.compress).  AdamW has no γ state
+                # and keeps the classical unit-scale EF carry.
+                g = getattr(opt_state, "gamma", None)
+                fb = g * (1.0 - g) if g is not None else 1.0
                 grads, comp_state = COMP.compress(
                     grads, comp_state, kind=tcfg.grad_compression,
-                    topk_frac=tcfg.grad_topk_frac)
+                    topk_frac=tcfg.grad_topk_frac, feedback_scale=fb)
             new_params, new_opt, opt_metrics = self.opt_update(
                 grads, opt_state, params, loss)
             return new_params, new_opt, comp_state, \

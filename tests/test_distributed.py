@@ -26,6 +26,30 @@ def test_pflexa_matches_serial_single_device():
     assert np.abs(np.asarray(r1.x) - np.asarray(r2.x)).max() < 1e-3
 
 
+@pytest.mark.parametrize("rule", ["random", "hybrid", "cyclic"])
+def test_pflexa_randomized_selection_converges(rule):
+    """The sharded random/hybrid/cyclic S.3 path (per-shard fold_in keys,
+    psum empty-draw fallback, pmax sketch max) converges to the planted
+    optimum on a 1-device mesh — fast coverage of the branch the 8-way
+    slow test does not exercise."""
+    p = nesterov_instance(m=40, n=160, nnz_frac=0.1, c=1.0, seed=0)
+    cfg = SolverConfig(max_iters=2000, tol=1e-6, selection=rule,
+                       sel_p=0.25, seed=2)
+    r = pflexa.solve(p.data["A"], p.data["b"], 1.0, cfg=cfg)
+    rel = (r.history["V"][-1] - p.v_star) / p.v_star
+    assert r.converged and rel < 1e-5, (rule, rel)
+    # seed-deterministic
+    r2 = pflexa.solve(p.data["A"], p.data["b"], 1.0, cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(r.x), np.asarray(r2.x))
+
+
+def test_pflexa_rejects_unsupported_selection():
+    p = nesterov_instance(m=20, n=64, nnz_frac=0.1, c=1.0, seed=0)
+    with pytest.raises(ValueError, match="pflexa supports"):
+        pflexa.solve(p.data["A"], p.data["b"], 1.0,
+                     cfg=SolverConfig(selection="topk"))
+
+
 SUBPROCESS_SRC = textwrap.dedent("""
     import os, json
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

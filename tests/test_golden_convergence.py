@@ -1,0 +1,124 @@
+"""Golden convergence regression suite.
+
+Fixed-seed per-iteration objective trajectories for flexa / fista / admm on
+one small planted Lasso instance are checked into ``tests/golden/*.json``;
+every run re-solves and asserts the new V series matches the stored one
+within a tight relative tolerance.  This guards the *iteration math* —
+surrogates, step sizes, τ-controller wiring, prox operators, selection —
+against silent drift during refactors: a genuine algorithm change moves V
+by orders of magnitude more than the fp32 reduction-order noise the rtol
+absorbs.
+
+FLEXA is pinned with ``tau_adapt=False``: the §4 τ-controller branches on
+exact fp32 comparisons, so a last-bit matvec difference (BLAS change,
+batching) could flip a τ transition and fail the golden check without any
+math being wrong — the smooth contraction is the stable fingerprint.  (The
+adaptive-τ configuration is covered behaviourally by test_flexa_solver.)
+
+Regenerate after an *intentional* math change with:
+
+    PYTHONPATH=src python tests/test_golden_convergence.py --regen
+"""
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.config.base import SolverConfig
+from repro.problems.lasso import nesterov_instance
+from repro.solvers import solve
+
+GOLDEN_DIR = Path(__file__).resolve().parent / "golden"
+
+# One small, well-conditioned planted instance; solvers must be cheap
+# enough that the suite re-runs all of them on every pytest invocation.
+INSTANCE = dict(m=40, n=120, nnz_frac=0.1, c=1.0, seed=0)
+BUDGET = dict(max_iters=120, tol=0.0)
+
+# method -> (SolverConfig overrides, method-specific options)
+RUNS = {
+    "flexa": (dict(tau_adapt=False), {}),
+    "fista": (dict(), {}),
+    "admm": (dict(), {"rho": 10.0}),
+}
+
+# fp32 matvecs may reduce in different orders across BLAS/XLA versions;
+# trajectory values are O(1..100) so 5e-4 relative is ~1000x above that
+# noise floor and ~1000x below any real math change.
+RTOL, ATOL = 5e-4, 1e-5
+
+
+def _run(method: str):
+    overrides, options = RUNS[method]
+    p = nesterov_instance(**INSTANCE)
+    cfg = SolverConfig(**BUDGET, **overrides)
+    r = solve(p, method=method, cfg=cfg, **options)
+    return p, r
+
+
+def _golden_path(method: str) -> Path:
+    return GOLDEN_DIR / f"{method}_lasso_V.json"
+
+
+@pytest.mark.parametrize("method", sorted(RUNS))
+def test_trajectory_matches_golden(method):
+    path = _golden_path(method)
+    assert path.exists(), (
+        f"golden file {path} missing — regenerate with "
+        "`PYTHONPATH=src python tests/test_golden_convergence.py --regen`")
+    gold = json.loads(path.read_text())
+    assert gold["instance"] == INSTANCE and gold["budget"] == BUDGET, \
+        "golden file was generated for a different instance/budget"
+
+    _, r = _run(method)
+    V = np.asarray(r.history["V"], np.float64)
+    V_gold = np.asarray(gold["V"], np.float64)
+    assert V.shape == V_gold.shape, (
+        f"{method}: iteration count changed "
+        f"({V.shape[0]} vs golden {V_gold.shape[0]})")
+    np.testing.assert_allclose(
+        V, V_gold, rtol=RTOL, atol=ATOL,
+        err_msg=(f"{method}: V trajectory drifted from tests/golden — if "
+                 "the iteration math changed intentionally, regenerate "
+                 "the golden files (see module docstring)"))
+
+
+def test_golden_trajectories_still_converge():
+    """The stored trajectories themselves must describe convergent runs
+    (guards against regenerating goldens from a broken solver)."""
+    p = nesterov_instance(**INSTANCE)
+    for method in RUNS:
+        gold = json.loads(_golden_path(method).read_text())
+        rel = (gold["V"][-1] - p.v_star) / p.v_star
+        assert rel < 1e-2, (method, rel)
+        assert gold["V"][-1] <= gold["V"][0]
+
+
+def regenerate() -> None:
+    GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
+    for method in sorted(RUNS):
+        overrides, options = RUNS[method]
+        p, r = _run(method)
+        rec = {
+            "method": method,
+            "instance": INSTANCE,
+            "budget": BUDGET,
+            "cfg_overrides": overrides,
+            "options": options,
+            "v_star": p.v_star,
+            "V": [float(v) for v in r.history["V"]],
+        }
+        path = _golden_path(method)
+        path.write_text(json.dumps(rec, indent=1))
+        rel = (rec["V"][-1] - p.v_star) / p.v_star
+        print(f"wrote {path} ({len(rec['V'])} iters, "
+              f"final rel err {rel:.2e})")
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        regenerate()
+    else:
+        print(__doc__)

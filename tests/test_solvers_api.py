@@ -6,6 +6,8 @@ import pytest
 
 from repro.config.base import SolverConfig
 from repro.problems.lasso import nesterov_instance
+from repro.problems.logreg import random_logreg_instance
+from repro.problems.svm import random_svm_instance
 from repro.solvers import (available_methods, solve, solve_batched,
                            SolverResult)
 
@@ -138,6 +140,78 @@ def test_solve_batched_heterogeneous_regularization():
 
 
 # ------------------------------------------------------------------ #
+# Problem families in the batched engine                             #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("make,family", [
+    (lambda s: random_logreg_instance(m=30, n=48, nnz_frac=0.2, c=0.5,
+                                      seed=s), "logreg"),
+    (lambda s: random_svm_instance(m=30, n=40, nnz_frac=0.2, c=0.5,
+                                   seed=s), "svm"),
+])
+def test_solve_batched_families_match_independent_solves(make, family):
+    """Acceptance: a logreg batch and an svm batch each match B sequential
+    solve() calls to ≤1e-5 (fixed iters, tau_adapt=False — same fp32
+    reduction-order caveat as the Lasso equivalence test: even the greedy
+    mask branches on exact comparisons, so very long budgets can let a
+    last-bit E-threshold flip split trajectories)."""
+    probs = [make(s) for s in range(4)]
+    cfg = SolverConfig(max_iters=200, tol=-1.0, tau_adapt=False)
+    rb = solve_batched(probs, cfg=cfg)
+    assert rb.meta["family"] == family
+    assert (np.asarray(rb.iters) == 200).all()
+    for i, p in enumerate(probs):
+        ri = solve(p, method="flexa", cfg=cfg)
+        assert ri.iters == 200
+        np.testing.assert_allclose(np.asarray(rb.x[i]), np.asarray(ri.x),
+                                   atol=1e-5)
+
+
+def test_solve_batched_rejects_mixed_families():
+    lr = random_logreg_instance(m=30, n=48, nnz_frac=0.2, c=0.5, seed=0)
+    sv = random_svm_instance(m=30, n=48, nnz_frac=0.2, c=0.5, seed=0)
+    with pytest.raises(ValueError, match="shape signature"):
+        solve_batched([lr, sv])
+
+
+def test_batched_hybrid_selection_reaches_each_optimum(mini_batch):
+    """Randomized selection inside the compiled batched program: every
+    instance still converges (per-instance PRNG streams via fold_in)."""
+    cfg = SolverConfig(max_iters=3000, tol=1e-6, selection="hybrid",
+                       sel_p=0.5, seed=7)
+    rb = solve_batched(mini_batch, cfg=cfg)
+    assert np.asarray(rb.converged).all()
+    for i, p in enumerate(mini_batch):
+        v = float(p.v(rb.x[i]))
+        assert (v - p.v_star) / p.v_star < 1e-4
+
+
+# ------------------------------------------------------------------ #
+# Selection rules through the facade                                 #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("rule", ["hybrid", "random", "cyclic", "topk",
+                                  "southwell"])
+def test_selection_rules_reach_greedy_optimum(mini_lasso, rule):
+    """Every S.3 rule drives Algorithm 1 to the same planted optimum the
+    greedy rule finds (random rules just take more iterations)."""
+    cfg = SolverConfig(max_iters=4000, tol=1e-7, selection=rule,
+                       sel_k=16, seed=1)
+    r = solve(mini_lasso, method="flexa", cfg=cfg)
+    rel = (r.history["V"][-1] - mini_lasso.v_star) / mini_lasso.v_star
+    assert rel < 1e-5, (rule, rel)
+
+
+def test_random_selection_is_seed_deterministic(mini_lasso):
+    cfg = SolverConfig(max_iters=50, tol=0, selection="random", seed=3)
+    r1 = solve(mini_lasso, method="flexa", cfg=cfg)
+    r2 = solve(mini_lasso, method="flexa", cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(r1.x), np.asarray(r2.x))
+    r3 = solve(mini_lasso, method="flexa",
+               cfg=SolverConfig(max_iters=50, tol=0, selection="random",
+                                seed=4))
+    assert not np.array_equal(np.asarray(r1.x), np.asarray(r3.x))
+
+
+# ------------------------------------------------------------------ #
 # Solver serving engine                                              #
 # ------------------------------------------------------------------ #
 def test_solver_serve_engine_buckets_and_amortizes(mini_batch):
@@ -168,3 +242,41 @@ def test_solver_serve_engine_buckets_and_amortizes(mini_batch):
     eng.submit(reqs)
     assert eng.stats["requests"] == 8
     assert eng.stats["signatures"] == 2
+
+
+def test_solver_serve_engine_heterogeneous_family_mix(mini_batch):
+    """One wave mixing Lasso, logreg and svm requests: each family lands in
+    its own compiled signature and every response matches its solo solve."""
+    from repro.serve.engine import SolveRequest, SolverServeEngine
+
+    cfg = SolverConfig(max_iters=2000, tol=1e-6, tau_adapt=False)
+    eng = SolverServeEngine(cfg, max_batch=4)
+    probs = list(mini_batch[:2]) \
+        + [random_logreg_instance(m=30, n=48, nnz_frac=0.2, c=0.5, seed=s)
+           for s in range(2)] \
+        + [random_svm_instance(m=30, n=40, nnz_frac=0.2, c=0.5, seed=0)]
+    reqs = [SolveRequest(A=np.asarray(p.data["A"]),
+                         b=np.asarray(p.data["b"]), c=float(p.g_weight))
+            for p in probs[:2]]
+    reqs += [SolveRequest(A=np.asarray(p.data["Z"]), c=float(p.g_weight),
+                          family=p.family) for p in probs[2:]]
+
+    resps = eng.submit(reqs)
+    assert eng.stats["signatures"] == 3
+    assert all(r.converged for r in resps)
+    for i, p in enumerate(probs):
+        ri = solve(p, method="flexa", cfg=cfg)
+        np.testing.assert_allclose(resps[i].x, np.asarray(ri.x), atol=1e-4)
+
+
+def test_solver_serve_engine_rejects_malformed_family_requests():
+    from repro.serve.engine import SolveRequest, SolverServeEngine
+
+    eng = SolverServeEngine(SolverConfig(max_iters=10))
+    Z = np.zeros((5, 4), np.float32)
+    with pytest.raises(ValueError, match="takes no b"):
+        eng.submit([SolveRequest(A=Z, b=np.zeros(5, np.float32),
+                                 family="logreg")])
+    with pytest.raises(ValueError, match="needs b"):
+        eng.submit([SolveRequest(A=Z, c=1.0)])
+    assert eng.stats["requests"] == 0      # atomic rejection
