@@ -1,0 +1,416 @@
+"""Serve load generator: wave vs continuous batching under arrival traces.
+
+The ROADMAP's serving scenario is heavy concurrent solver traffic.  This
+benchmark generates seeded request traces —
+
+* ``poisson``    — memoryless arrivals at a fixed rate, uniform solve
+  difficulty;
+* ``bursty``     — on/off arrivals (bursts of simultaneous requests
+  separated by idle gaps), uniform difficulty;
+* ``heavy_tail`` — Poisson arrivals whose solve *difficulty* is
+  Pareto-distributed (most requests are easy, a few need 10–50× the
+  iterations — the fig1d "hard Lasso" regime that makes wave batching
+  pathological, cf. the selective-update analysis of arXiv:1402.5521);
+
+difficulty maps to the Nesterov instance's support density (``nnz_frac``
+— measured on this container: ~60 iterations at 0.05 up to the
+``max_iters`` cap near 0.35), and replays each trace through
+
+* the **wave** engine (``SolverServeEngine``): every request that has
+  arrived when the server goes idle is packed into padded power-of-two
+  buckets; a bucket runs to the convergence of its *slowest* member;
+* the **continuous** engine (``ContinuousSolverEngine``): slot-slab
+  scheduling with chunked compiled steps and eviction/backfill.
+
+Time is a simulated clock that flows at real (wall) rate while device
+work runs and jumps over idle gaps, so both engines see the identical
+arrival timeline and latency percentiles are comparable.  Each replay is
+preceded by an untimed warmup replay so compile time never pollutes the
+comparison.  Alongside wall-clock metrics the benchmark records **device
+row iterations** (slots × iterations actually executed) — a fully
+deterministic work measure the CI smoke gate checks, immune to timer
+noise.
+
+Artifact: ``results/bench/BENCH_serve.json`` — per-trace wave/continuous
+summaries (makespan, latency p50/p99, throughput, occupancy, padding
+waste, row iterations), the per-request equivalence check against solo
+``solve()`` (must agree within 1e-5), and the acceptance block (the
+continuous engine must beat the wave engine on makespan and p99 latency
+on the heavy-tail trace).
+
+Run: ``PYTHONPATH=src python benchmarks/serve_load.py`` (≈ a minute at
+the default miniature scale; ``--smoke`` is the seconds-scale CI step;
+the full sweep with ``--requests 96`` is the slow-CI configuration).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from dataclasses import dataclass
+from pathlib import Path
+
+import numpy as np
+
+from repro.config.base import ServeConfig, SolverConfig
+from repro.problems.lasso import nesterov_instance
+from repro.serve import (ContinuousSolverEngine, ServeTelemetry,
+                         SolveRequest, SolverServeEngine)
+from repro.solvers import solve
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "bench"
+
+#: Difficulty d ∈ [0, 1] → Nesterov support density.  0.05 is the paper's
+#: easy high-sparsity regime (~60–100 iterations at the benchmark
+#: scales); 0.18 is the hardest density whose instances still converge
+#: comfortably under the iteration cap (~10–15× the easy iteration
+#: count — the straggler a wave bucket cannot shed).  Harder instances
+#: would hit the cap unconverged, whose iterates are schedule-noise
+#: chaotic and would break the solo-equivalence contract.
+NNZ_EASY, NNZ_HARD = 0.05, 0.18
+
+
+@dataclass(frozen=True)
+class TraceItem:
+    arrival: float              # slab-iteration units (scaled to seconds
+                                # by the runtime calibration)
+    difficulty: float           # [0, 1] → nnz_frac
+    seed: int                   # instance seed
+
+
+# ------------------------------------------------------------------ #
+# Trace generators (all seeded / deterministic)                      #
+# ------------------------------------------------------------------ #
+# Arrival times are expressed in *slab-iteration units* — one unit = the
+# wall time of advancing a full slab by one FLEXA iteration, measured on
+# the warm chunk stepper at runtime (:func:`calibrate_unit`).  A fixed
+# rate in seconds would be machine-dependent: on a fast device any trace
+# is arrival-bound (the server idles between requests and every schedule
+# looks the same), on a slow one everything saturates.  In iteration
+# units the offered load is a pure property of the trace, so the
+# benchmark sits near saturation — the ROADMAP's "heavy concurrent
+# traffic" regime, the only one where the scheduling policy matters —
+# on any machine.
+
+def poisson_trace(n: int, *, mean_gap: float, seed: int,
+                  difficulty: str = "uniform",
+                  tail_alpha: float = 1.3) -> list[TraceItem]:
+    """Exponential inter-arrivals (``mean_gap`` iteration units apart);
+    difficulty either ``uniform`` on [0, 0.5] or ``pareto`` (heavy tail,
+    most mass easy, a few near-cap stragglers)."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(mean_gap, size=n)
+    arrivals = np.cumsum(gaps)
+    if difficulty == "uniform":
+        diff = rng.uniform(0.0, 0.5, size=n)
+    elif difficulty == "pareto":
+        # Lomax/Pareto-II: mostly ≈0, occasionally ≈1 (clipped).
+        diff = np.minimum(rng.pareto(tail_alpha, size=n) / 8.0, 1.0)
+    else:
+        raise ValueError(f"unknown difficulty model {difficulty!r}")
+    return [TraceItem(float(a), float(d), seed * 1000 + i)
+            for i, (a, d) in enumerate(zip(arrivals, diff))]
+
+
+def bursty_trace(n: int, *, burst: int, gap: float,
+                 seed: int) -> list[TraceItem]:
+    """Bursts of ``burst`` simultaneous requests, ``gap`` units apart."""
+    rng = np.random.default_rng(seed)
+    items = []
+    t = 0.0
+    for i in range(n):
+        if i and i % burst == 0:
+            t += gap
+        items.append(TraceItem(t, float(rng.uniform(0.0, 0.5)),
+                               seed * 1000 + i))
+    return items
+
+
+# Mean request cost is a few hundred iterations against a slab that
+# serves ``slab_capacity`` slots concurrently (~20 units/request at full
+# occupancy), so these gaps put the offered load past saturation: the
+# queue builds over the trace, buckets/slabs stay full, and the
+# scheduling policy — not idle waiting — decides every metric.
+TRACES = {
+    "poisson": lambda n, seed: poisson_trace(n, mean_gap=12.0, seed=seed),
+    "bursty": lambda n, seed: bursty_trace(n, burst=12, gap=150.0,
+                                           seed=seed),
+    "heavy_tail": lambda n, seed: poisson_trace(
+        n, mean_gap=12.0, seed=seed, difficulty="pareto",
+        tail_alpha=1.1),
+}
+
+
+def calibrate_unit(cfg: SolverConfig, serve: ServeConfig, m: int,
+                   n: int) -> float:
+    """Seconds per slab iteration, measured on the warm chunk stepper.
+
+    Fills one slab with easy instances, runs two warm chunks untimed
+    (compile + caches), then times a few and takes the median chunk wall
+    over ``chunk_iters``.  Includes per-chunk dispatch overhead on
+    purpose — that is the real unit the continuous engine pays.
+    """
+    items = [TraceItem(0.0, 0.0, 900_000 + i)
+             for i in range(serve.slab_capacity)]
+    reqs = [build_request(it, m, n) for it in items]
+    probe_cfg = dataclasses.replace(cfg, max_iters=10_000, tol=-1.0)
+    eng = ContinuousSolverEngine(probe_cfg, serve)
+    for r in reqs:
+        eng.submit(r)
+    eng.step()                    # compiles the fused chunk, fills slab
+    eng.step()
+    walls = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        eng.step()
+        walls.append(time.perf_counter() - t0)
+    return float(np.median(walls)) / serve.chunk_iters
+
+
+def build_request(item: TraceItem, m: int, n: int) -> SolveRequest:
+    nnz = NNZ_EASY + (NNZ_HARD - NNZ_EASY) * item.difficulty
+    p = nesterov_instance(m=m, n=n, nnz_frac=nnz, c=1.0, seed=item.seed)
+    return SolveRequest(A=np.asarray(p.data["A"]),
+                        b=np.asarray(p.data["b"]), c=float(p.g_weight))
+
+
+# ------------------------------------------------------------------ #
+# Simulated clock: real-rate flow + idle jumps                       #
+# ------------------------------------------------------------------ #
+class SimClock:
+    """``now() = perf_counter() + offset``; ``advance_to`` jumps the
+    offset forward over idle gaps (never backward)."""
+
+    def __init__(self):
+        self.offset = -time.perf_counter()   # start at t = 0
+
+    def __call__(self) -> float:
+        return time.perf_counter() + self.offset
+
+    def advance_to(self, t: float) -> None:
+        if t > self():
+            self.offset += t - self()
+
+
+# ------------------------------------------------------------------ #
+# Replay drivers                                                     #
+# ------------------------------------------------------------------ #
+def replay_wave(trace, requests, cfg: SolverConfig,
+                serve: ServeConfig) -> ServeTelemetry:
+    """Wave policy: when the server goes idle, everything that has
+    arrived forms the next wave (padded power-of-two buckets inside)."""
+    clock = SimClock()
+    tele = ServeTelemetry(clock=clock)
+    eng = SolverServeEngine(cfg, max_batch=serve.max_batch, telemetry=tele)
+    i = 0
+    while i < len(trace):
+        clock.advance_to(trace[i].arrival)
+        now = clock()
+        wave, arrivals = [], []
+        while i < len(trace) and trace[i].arrival <= now:
+            wave.append(requests[i])
+            arrivals.append(trace[i].arrival)
+            i += 1
+        # True trace arrivals: a request that queued up while the
+        # previous wave held the device arrived before this submit —
+        # its latency must include that wait (same definition as the
+        # continuous side).
+        eng.submit(wave, arrivals=arrivals)  # clock flows during the wave
+    return tele
+
+
+def replay_continuous(trace, requests, cfg: SolverConfig,
+                      serve: ServeConfig):
+    """Continuous policy: admit on arrival, chunk-step, evict, backfill.
+    Returns ``(engine, telemetry)`` — the engine for per-request
+    responses (the equivalence check), the telemetry for metrics."""
+    clock = SimClock()
+    tele = ServeTelemetry(clock=clock)
+    eng = ContinuousSolverEngine(cfg, serve, telemetry=tele)
+    i = 0
+    while i < len(trace) or eng.pending:
+        if i < len(trace) and not eng.pending:
+            clock.advance_to(trace[i].arrival)
+        now = clock()
+        while i < len(trace) and trace[i].arrival <= now:
+            eng.submit(requests[i], arrival=trace[i].arrival)
+            i += 1
+        if eng.pending:
+            eng.step()
+    return eng, tele
+
+
+def summarize(tele: ServeTelemetry, engine: str) -> dict:
+    snap = tele.snapshot()
+    completions = [r.completed for r in tele.requests.values()
+                   if r.completed is not None]
+    arrivals = [r.arrival for r in tele.requests.values()]
+    makespan = (max(completions) - min(arrivals)) if completions else None
+    side = snap.get(engine, {})
+    return {
+        "requests": snap["requests"],
+        "converged": snap["converged"],
+        "makespan_s": makespan,
+        "throughput_rps": (snap["completed"] / makespan
+                           if makespan else None),
+        "latency_p50_s": snap["latency_p50"],
+        "latency_p99_s": snap["latency_p99"],
+        "latency_mean_s": snap["latency_mean"],
+        "queue_wait_p99_s": snap["queue_wait_p99"],
+        "iters_total": snap["iters_total"],
+        "row_iters": side.get("row_iters"),
+        "occupancy_mean": side.get("occupancy_mean"),
+        "padding_waste": side.get("padding_waste"),
+        "freeze_waste": side.get("freeze_waste"),  # wave only
+    }
+
+
+# ------------------------------------------------------------------ #
+# Main comparison                                                    #
+# ------------------------------------------------------------------ #
+def run_trace(name: str, n_requests: int, seed: int, m: int, n: int,
+              cfg: SolverConfig, serve: ServeConfig, unit: float,
+              check_solo: bool) -> dict:
+    raw = TRACES[name](n_requests, seed)
+    requests = [build_request(t, m, n) for t in raw]
+    # Scale iteration-unit arrivals to seconds on this machine.
+    trace = [dataclasses.replace(t, arrival=t.arrival * unit)
+             for t in raw]
+
+    # Untimed warmup replays populate every compile cache (fused chunk
+    # stepper, per-bucket wave programs) so the timed replays compare
+    # schedules, not compilation.
+    replay_wave(trace, requests, cfg, serve)
+    replay_continuous(trace, requests, cfg, serve)
+
+    wave_tele = replay_wave(trace, requests, cfg, serve)
+    cont_eng, cont_tele = replay_continuous(trace, requests, cfg, serve)
+
+    record = {
+        "trace": name, "requests": n_requests, "seed": seed,
+        "unit_s": unit,
+        "wave": summarize(wave_tele, "wave"),
+        "continuous": summarize(cont_tele, "continuous"),
+    }
+    w, c = record["wave"], record["continuous"]
+    record["speedup"] = {
+        "makespan": (w["makespan_s"] / c["makespan_s"]
+                     if c["makespan_s"] else None),
+        "p99_latency": (w["latency_p99_s"] / c["latency_p99_s"]
+                        if c["latency_p99_s"] else None),
+        "row_iters": (w["row_iters"] / c["row_iters"]
+                      if c["row_iters"] else None),
+    }
+
+    if check_solo:
+        # Per-request equivalence: every continuous response must match
+        # its solo solve() (identical cfg) within 1e-5.  The solo driver
+        # is the compiled while_loop (same flexa_iteration, same stopping
+        # rule, no per-step host dispatch — seconds instead of minutes
+        # over the whole trace).
+        max_diff = 0.0
+        for req_id, trace_item in enumerate(trace):
+            resp = cont_eng.responses[req_id]
+            nnz = NNZ_EASY + (NNZ_HARD - NNZ_EASY) * trace_item.difficulty
+            p = nesterov_instance(m=m, n=n, nnz_frac=nnz, c=1.0,
+                                  seed=trace_item.seed)
+            solo = solve(p, method="flexa_compiled", cfg=cfg)
+            max_diff = max(max_diff, float(
+                np.abs(np.asarray(resp.x) - np.asarray(solo.x)).max()))
+        record["equivalence"] = {"max_abs_diff_vs_solo": max_diff,
+                                 "checked_requests": n_requests,
+                                 "tolerance": 1e-5,
+                                 "ok": bool(max_diff <= 1e-5)}
+    return record
+
+
+def main(requests: int = 48, seed: int = 0, m: int = 64, n: int = 256,
+         max_iters: int = 2500, slab_capacity: int = 8,
+         chunk_iters: int = 100, max_batch: int = 8,
+         smoke: bool = False) -> dict:
+    if smoke:
+        # Seconds-scale CI configuration: fewer requests — but still
+        # several× the slab capacity (continuous batching only differs
+        # from wave dispatch under backfill pressure); instances stay at
+        # the default size so the chunked schedule remains
+        # device-work-bound, not dispatch-bound.
+        requests, max_iters = 24, 2200
+    # tol 1e-7 keeps tol-stopped responses within ~1e-6 of the solo
+    # solve even on the hardest instances (fp32 reduction-order noise
+    # shifts *stopping times* slightly; the tighter ball shrinks the
+    # solution gap) — 1e-6 stopping was measured as tight as 1.5e-5.
+    cfg = SolverConfig(max_iters=max_iters, tol=1e-7, tau_adapt=False)
+    serve = ServeConfig(max_batch=max_batch, slab_capacity=slab_capacity,
+                        chunk_iters=chunk_iters)
+
+    artifact = {
+        "smoke": smoke,
+        "instance": {"m": m, "n": n, "nnz_easy": NNZ_EASY,
+                     "nnz_hard": NNZ_HARD},
+        "solver_cfg": {"max_iters": max_iters, "tol": cfg.tol,
+                       "tau_adapt": cfg.tau_adapt},
+        "serve_cfg": {"max_batch": max_batch,
+                      "slab_capacity": slab_capacity,
+                      "chunk_iters": chunk_iters, "policy": serve.policy},
+        "traces": {},
+    }
+    unit = calibrate_unit(cfg, serve, m, n)
+    artifact["unit_s"] = unit
+    print(f"calibrated slab-iteration unit: {unit * 1e3:.3f} ms")
+    for trace_name in TRACES:
+        rec = run_trace(trace_name, requests, seed, m, n, cfg, serve,
+                        unit, check_solo=(trace_name == "heavy_tail"))
+        artifact["traces"][trace_name] = rec
+        s = rec["speedup"]
+        print(f"[{trace_name:>10}] makespan x{s['makespan']:.2f}  "
+              f"p99 x{s['p99_latency']:.2f}  row_iters x{s['row_iters']:.2f}")
+
+    ht = artifact["traces"]["heavy_tail"]
+    artifact["acceptance"] = {
+        "continuous_beats_wave_makespan":
+            bool(ht["speedup"]["makespan"] and ht["speedup"]["makespan"] > 1),
+        "continuous_beats_wave_p99":
+            bool(ht["speedup"]["p99_latency"]
+                 and ht["speedup"]["p99_latency"] > 1),
+        "continuous_does_less_device_work":
+            bool(ht["speedup"]["row_iters"]
+                 and ht["speedup"]["row_iters"] > 1),
+        "solo_equivalence_ok": ht["equivalence"]["ok"],
+    }
+    # The CI smoke gate checks only the *deterministic* criteria (device
+    # row iterations, solo equivalence) — wall-clock comparisons on a
+    # shared CI runner are timer-noise-flaky by nature; the full run
+    # gates all four.
+    artifact["gate"] = (["continuous_does_less_device_work",
+                         "solo_equivalence_ok"] if smoke
+                        else list(artifact["acceptance"]))
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / "BENCH_serve.json"
+    out.write_text(json.dumps(artifact, indent=2))
+    print(f"wrote {out}")
+    return artifact
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--m", type=int, default=64)
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--max-iters", type=int, default=2500)
+    ap.add_argument("--slab-capacity", type=int, default=8)
+    ap.add_argument("--chunk-iters", type=int, default=100)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI configuration")
+    args = ap.parse_args()
+    art = main(requests=args.requests, seed=args.seed, m=args.m, n=args.n,
+               max_iters=args.max_iters, slab_capacity=args.slab_capacity,
+               chunk_iters=args.chunk_iters, max_batch=args.max_batch,
+               smoke=args.smoke)
+    failed = [k for k in art["gate"] if not art["acceptance"][k]]
+    if failed:
+        raise SystemExit(f"acceptance failed on {failed}: "
+                         f"{art['acceptance']}")

@@ -1,6 +1,7 @@
 from repro.config.base import (
     MeshConfig,
     ModelConfig,
+    ServeConfig,
     ShapeConfig,
     SHAPES,
     SolverConfig,
@@ -10,6 +11,7 @@ from repro.config.base import (
 __all__ = [
     "MeshConfig",
     "ModelConfig",
+    "ServeConfig",
     "ShapeConfig",
     "SHAPES",
     "SolverConfig",

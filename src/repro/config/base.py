@@ -241,6 +241,31 @@ class SolverConfig:
 
 
 @dataclass(frozen=True)
+class ServeConfig:
+    """Settings for the solver serving runtimes (``repro.serve``).
+
+    The continuous-batching runtime (``ContinuousSolverEngine``) takes
+    this config directly and reads the slab/scheduler knobs.  The wave
+    engine (``SolverServeEngine``) takes a plain ``max_batch=``
+    constructor argument instead — ``max_batch`` here is the matching
+    knob for callers (e.g. ``benchmarks/serve_load.py``) that configure
+    both engines from one place and thread it through themselves.
+    Frozen + hashable so a config can ride inside compile-cache keys if
+    a runtime ever specializes on it.
+    """
+
+    # --- wave engine ---
+    max_batch: int = 16         # power-of-two bucket cap per wave
+    # --- continuous engine ---
+    slab_capacity: int = 8      # live slots per (family × shape) slab
+    chunk_iters: int = 16       # FLEXA iterations per compiled chunk step
+    # Admission-queue ordering: "fifo" (arrival order) | "priority"
+    # (higher SolveRequest.priority first) | "deadline" (earliest
+    # SolveRequest.deadline first; deadline-less requests last).
+    policy: str = "fifo"
+
+
+@dataclass(frozen=True)
 class MeshConfig:
     shape: tuple = (16, 16)
     axes: tuple = ("data", "model")

@@ -1,3 +1,23 @@
-from repro.serve.engine import GenerationResult, ServeEngine
+"""Serving layer: LM generation + two solver-serving runtimes.
 
-__all__ = ["GenerationResult", "ServeEngine"]
+* :class:`ServeEngine` — LM prefill/decode with static KV-cache buckets.
+* :class:`SolverServeEngine` — wave-batched solver serving (padded
+  power-of-two buckets over cached compiled programs).
+* :class:`ContinuousSolverEngine` — continuous batching: slot slabs,
+  chunked compiled steps, eviction/backfill from a policy-ordered
+  admission queue (``repro.serve.continuous``).
+* :class:`ServeTelemetry` — shared latency/occupancy/cache telemetry
+  (``repro.serve.metrics``).
+"""
+from repro.serve.continuous import (AdmissionQueue, ContinuousSolverEngine,
+                                    QueueEntry)
+from repro.serve.engine import (GenerationResult, ServeEngine, SolveRequest,
+                                SolveResponse, SolverServeEngine)
+from repro.serve.metrics import RequestTrace, ServeTelemetry
+
+__all__ = [
+    "GenerationResult", "ServeEngine",
+    "SolveRequest", "SolveResponse", "SolverServeEngine",
+    "ContinuousSolverEngine", "AdmissionQueue", "QueueEntry",
+    "RequestTrace", "ServeTelemetry",
+]

@@ -1,0 +1,342 @@
+"""Continuous-batching solver runtime: slot slabs + admission scheduling.
+
+The wave engine (``repro.serve.engine.SolverServeEngine``) dispatches
+*waves*: a padded power-of-two bucket enters one compiled while_loop and
+nothing leaves until the slowest instance converges — one ill-conditioned
+Lasso holds sixteen slots hostage, and every instance that finished early
+keeps burning device iterations frozen-in-place.  The paper's framework
+is explicitly "virtually all possibilities in between" fully-parallel and
+sequential updates; this runtime applies the same idea to the *serving*
+schedule:
+
+* a **slot slab** per (family × shape) signature
+  (:class:`repro.solvers.batched.SlabState`) holds a fixed-capacity stack
+  of live instances — the static shape XLA compiles against never
+  changes;
+* a compiled, buffer-donated **chunk step**
+  (:func:`repro.solvers.batched.make_chunk_stepper`) advances every live
+  slot by K FLEXA iterations; a slot that converges mid-chunk freezes
+  exactly as in the wave driver, so its answer is independent of K and
+  identical to a solo ``solve()``;
+* after each chunk the host reads one (S,) bool mask, **evicts**
+  converged slots and **backfills** them in place from an **admission
+  queue** with FIFO / priority / earliest-deadline policies — so
+  throughput is bounded by slot occupancy, not by the slowest request in
+  a wave.  Admissions are staged host-side and spliced by the chunk
+  program itself (``make_chunk_stepper``'s fused admit phase — a masked
+  in-place row write), so a tick is one device dispatch however many
+  requests enter; the standalone single-slot splice
+  (:func:`repro.solvers.batched.make_slot_writer`) remains the building
+  block for packing slabs outside the engine.
+
+Per-request PRNG streams fold the *request id* (not the slot) into
+``PRNGKey(cfg.seed)``, so a request's randomized-selection trajectory is
+a pure function of (request, seed) — independent of which slot it lands
+in, what else shares the slab, or when it was admitted.  That is what
+makes the whole runtime deterministic under a fixed seed and arrival
+trace (property-tested in ``tests/test_serve_continuous.py``).
+
+Telemetry (latency percentiles, chunk throughput, slot occupancy, padding
+waste, compile-cache counters) flows into ``repro.serve.metrics``;
+``benchmarks/serve_load.py`` races this runtime against the wave engine
+on seeded arrival traces and writes ``results/bench/BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+import time
+from dataclasses import dataclass
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.config.base import ServeConfig, SolverConfig
+from repro.serve.engine import SolveRequest, SolveResponse, validate_request
+from repro.serve.metrics import ServeTelemetry
+from repro.solvers.batched import (BatchedProblemSpec, make_chunk_stepper,
+                                   slab_alloc, slab_data_shapes)
+
+
+@dataclass
+class QueueEntry:
+    """One queued request plus the scheduling facts the policies read."""
+    req_id: int
+    request: SolveRequest
+    arrival: float
+    priority: int = 0
+    deadline: float | None = None
+
+
+class AdmissionQueue:
+    """Policy-ordered admission: FIFO, priority, or earliest-deadline.
+
+    All three are heaps with a monotonically increasing sequence number as
+    the final tie-break, so ordering is total and deterministic:
+
+    * ``fifo``     — arrival order;
+    * ``priority`` — higher ``SolveRequest.priority`` first (FIFO within
+      a priority class);
+    * ``deadline`` — earliest ``SolveRequest.deadline`` first (EDF);
+      deadline-less requests sort after every dated one, FIFO among
+      themselves.
+    """
+
+    POLICIES = ("fifo", "priority", "deadline")
+
+    def __init__(self, policy: str = "fifo"):
+        if policy not in self.POLICIES:
+            raise ValueError(
+                f"unknown admission policy {policy!r}; pick from "
+                f"{self.POLICIES}")
+        self.policy = policy
+        self._heap: list = []
+        self._seq = itertools.count()
+
+    def _key(self, e: QueueEntry) -> tuple:
+        if self.policy == "priority":
+            return (-e.priority, e.arrival)
+        if self.policy == "deadline":
+            return (math.inf if e.deadline is None else float(e.deadline),
+                    e.arrival)
+        return (e.arrival,)
+
+    def push(self, entry: QueueEntry) -> None:
+        heapq.heappush(self._heap,
+                       (self._key(entry), next(self._seq), entry))
+
+    def pop(self) -> QueueEntry:
+        return heapq.heappop(self._heap)[-1]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+
+class _SlotSlab:
+    """Host-side bookkeeping around one device slab (one signature).
+
+    Admissions are *staged*: :meth:`backfill` writes request payloads
+    into reusable host buffers and flags the slot in an admit mask; the
+    next :meth:`step` ships the whole stage with the chunk call and the
+    fused program splices + iterates in one dispatch.  A tick therefore
+    costs one device program + one (S,) mask readback regardless of how
+    many requests were admitted or evicted.
+    """
+
+    def __init__(self, spec: BatchedProblemSpec, cfg: SolverConfig,
+                 serve: ServeConfig, telemetry: ServeTelemetry):
+        self.spec = spec
+        self.cfg = cfg
+        self.capacity = int(serve.slab_capacity)
+        self.chunk_iters = int(serve.chunk_iters)
+        self.telemetry = telemetry
+        self.queue = AdmissionQueue(serve.policy)
+        self.slab = slab_alloc(spec, cfg, self.capacity)
+        self._chunk = make_chunk_stepper(spec, cfg, self.chunk_iters)
+        # Host mirrors: stop == "do not advance" (empty or finished slot).
+        self.stop = np.ones(self.capacity, bool)
+        self.active = np.zeros(self.capacity, bool)
+        self.slot_req = np.full(self.capacity, -1, np.int64)
+        self._open_audit: dict = {}          # req_id -> its audit record
+        # Admission staging (host buffers, reused across ticks; stale
+        # rows are fine — the chunk program masks them out).
+        S = self.capacity
+        self._stage_data = [np.zeros((S,) + shp, np.float32)
+                            for shp in slab_data_shapes(spec)]
+        self._stage_c = np.zeros(S, np.float32)
+        self._stage_x0 = np.zeros((S, spec.n), np.float32)
+        self._stage_ids = np.zeros(S, np.int32)
+        self._admit = np.zeros(S, bool)
+        # Device-resident copy of the last shipped stage, reused on
+        # ticks without admissions (no re-upload).
+        self._payload = (tuple(jnp.asarray(a) for a in self._stage_data),
+                         jnp.asarray(self._stage_c),
+                         jnp.asarray(self._stage_x0),
+                         jnp.asarray(self._stage_ids))
+        self._no_admit = jnp.zeros(S, bool)
+
+    # ------------------------------------------------------------- #
+    @property
+    def live(self) -> int:
+        return int(self.active.sum())
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue) + self.live
+
+    def _stage(self, slot: int, entry: QueueEntry, audit: list,
+               tick: int) -> None:
+        r = entry.request
+        for buf, arr in zip(self._stage_data,
+                            r.data_arrays(self.spec)):
+            buf[slot] = np.asarray(arr, np.float32)
+        self._stage_c[slot] = r.c
+        self._stage_x0[slot] = 0.0 if r.x0 is None \
+            else np.asarray(r.x0, np.float32)
+        self._stage_ids[slot] = entry.req_id
+        self._admit[slot] = True
+        self.active[slot] = True
+        self.slot_req[slot] = entry.req_id
+        self.telemetry.record_admit(entry.req_id)
+        rec = {"req_id": entry.req_id, "slot": slot,
+               "signature": repr(self.spec), "admit_tick": tick,
+               "evict_tick": None}
+        audit.append(rec)
+        self._open_audit[entry.req_id] = rec
+
+    def backfill(self, audit: list, tick: int) -> None:
+        for slot in np.flatnonzero(~self.active):
+            if not len(self.queue):
+                break
+            self._stage(int(slot), self.queue.pop(), audit, tick)
+
+    def step(self, tick: int) -> list[tuple[int, SolveResponse]]:
+        """One fused tick (admit + chunk); returns evictions."""
+        if not self.active.any():
+            return []
+        t0 = time.perf_counter()
+        # NOTE the .copy() on every numpy→device crossing: jnp.asarray
+        # zero-copies aligned host buffers on CPU, and these staging
+        # buffers are mutated on later ticks — an alias would race the
+        # async chunk dispatch (observed as admissions silently reading
+        # all-False masks under load).
+        if self._admit.any():
+            self._payload = (
+                tuple(jnp.asarray(a.copy()) for a in self._stage_data),
+                jnp.asarray(self._stage_c.copy()),
+                jnp.asarray(self._stage_x0.copy()),
+                jnp.asarray(self._stage_ids.copy()))
+            admit = jnp.asarray(self._admit.copy())
+            self._admit[:] = False
+        else:
+            admit = self._no_admit
+        new_data, new_c, new_x0, new_ids = self._payload
+        self.slab, stop_dev = self._chunk(
+            self.slab, jnp.asarray(self.stop.copy()), admit,
+            new_data, new_c, new_x0, new_ids)
+        # The one per-chunk host sync (copy: the host mirror is mutated).
+        stop = np.array(stop_dev)
+        wall = time.perf_counter() - t0
+        self.telemetry.record_chunk(live=self.live, capacity=self.capacity,
+                                    chunk_iters=self.chunk_iters,
+                                    wall_s=wall)
+
+        finished = np.flatnonzero(stop & self.active)
+        out = []
+        if finished.size:
+            # Pull the whole (S, ·) result arrays and index on the host:
+            # device-side fancy indexing would compile a fresh gather per
+            # distinct eviction count.
+            state = self.slab.state
+            xs = np.asarray(state.x)[finished]
+            ks = np.asarray(state.k)[finished]
+            stats = np.asarray(state.stat)[finished]
+            for j, slot in enumerate(finished):
+                req_id = int(self.slot_req[slot])
+                resp = SolveResponse(
+                    x=xs[j], iters=int(ks[j]),
+                    converged=bool(stats[j] <= self.cfg.tol),
+                    stat=float(stats[j]), bucket=self.capacity)
+                out.append((req_id, resp))
+                self.telemetry.record_completion(
+                    req_id, iters=resp.iters, converged=resp.converged)
+                self._open_audit.pop(req_id)["evict_tick"] = tick
+                self.active[slot] = False
+                self.slot_req[slot] = -1
+        self.stop = stop
+        return out
+
+
+class ContinuousSolverEngine:
+    """Serve solve requests through slot slabs with continuous batching.
+
+    Usage::
+
+        eng = ContinuousSolverEngine(SolverConfig(tol=1e-6),
+                                     ServeConfig(slab_capacity=8,
+                                                 chunk_iters=16))
+        ids = [eng.submit(r) for r in requests]
+        responses = eng.drain()            # {req_id: SolveResponse}
+
+    ``submit`` only enqueues (cheap, host-side); device work happens in
+    :meth:`step` — one scheduler tick: backfill free slots from the
+    admission queue, advance every slab one chunk, evict what converged.
+    :meth:`drain` ticks until nothing is queued or live.  Interleaving
+    ``submit`` and ``step`` is the online mode the load generator drives.
+
+    Determinism: with a fixed ``cfg.seed`` and a fixed submission order,
+    responses, audit log and telemetry iteration counts are reproducible
+    — admission order is a pure function of the queue policy, and each
+    request's PRNG stream is keyed by its request id alone.
+    """
+
+    def __init__(self, cfg: SolverConfig | None = None,
+                 serve: ServeConfig | None = None, *,
+                 telemetry: ServeTelemetry | None = None):
+        self.cfg = cfg or SolverConfig()
+        self.serve = serve or ServeConfig()
+        if self.serve.slab_capacity < 1:
+            raise ValueError("slab_capacity must be >= 1")
+        if self.serve.chunk_iters < 1:
+            raise ValueError("chunk_iters must be >= 1")
+        AdmissionQueue(self.serve.policy)    # validate policy eagerly
+        self.telemetry = telemetry or ServeTelemetry()
+        self._slabs: dict[BatchedProblemSpec, _SlotSlab] = {}
+        self._responses: dict[int, SolveResponse] = {}
+        #: Flat audit log of slot assignments (one record per admission,
+        #: closed at eviction) — the substrate of the no-double-booking
+        #: and determinism property tests.
+        self.audit: list[dict] = []
+        self._tick = 0
+
+    # ------------------------------------------------------------- #
+    @property
+    def pending(self) -> int:
+        """Requests submitted but not yet completed."""
+        return sum(s.pending for s in self._slabs.values())
+
+    def submit(self, request: SolveRequest, *,
+               arrival: float | None = None) -> int:
+        """Enqueue one request; returns its request id."""
+        spec = request.spec
+        validate_request(None, request, spec)
+        # Ids come from the telemetry so a telemetry shared between
+        # engines (apples-to-apples comparisons) never collides.
+        req_id = self.telemetry.next_request_id()
+        t = self.telemetry.now() if arrival is None else arrival
+        self.telemetry.record_arrival(req_id, spec.family, "continuous",
+                                      t=t)
+        slab = self._slabs.get(spec)
+        if slab is None:
+            slab = self._slabs[spec] = _SlotSlab(
+                spec, self.cfg, self.serve, self.telemetry)
+        slab.queue.push(QueueEntry(
+            req_id=req_id, request=request, arrival=t,
+            priority=request.priority, deadline=request.deadline))
+        return req_id
+
+    def step(self) -> list[int]:
+        """One scheduler tick over every slab: backfill → chunk → evict.
+
+        Returns the request ids completed this tick (their responses are
+        available in :attr:`responses`).
+        """
+        self._tick += 1
+        done = []
+        for slab in self._slabs.values():
+            slab.backfill(self.audit, self._tick)
+            for req_id, resp in slab.step(self._tick):
+                self._responses[req_id] = resp
+                done.append(req_id)
+        return done
+
+    def drain(self) -> dict[int, SolveResponse]:
+        """Tick until every submitted request has completed."""
+        while self.pending:
+            self.step()
+        return dict(self._responses)
+
+    @property
+    def responses(self) -> dict[int, SolveResponse]:
+        return self._responses

@@ -30,6 +30,7 @@ compilation once and every later request rides the compiled program.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -40,6 +41,7 @@ from repro.config.base import ModelConfig, ShapeConfig, SolverConfig
 from repro.models import io as IO
 from repro.models import transformer as T
 from repro.problems.families import get_family
+from repro.serve.metrics import ServeTelemetry
 from repro.solvers.batched import BatchedProblemSpec, make_batched_solver
 
 
@@ -134,6 +136,10 @@ class SolveRequest:
     families ("lasso"/"group_lasso") read ``A`` as the design matrix and
     need ``b``; "logreg"/"svm" read ``A`` as the label-signed feature
     matrix Z = diag(a)·Y and take no ``b``.
+
+    ``priority``/``deadline`` are scheduling hints consumed by the
+    continuous runtime's admission queue (``repro.serve.continuous``);
+    the wave engine serves in submission order and ignores them.
     """
     A: np.ndarray               # (m, n) design / signed-feature matrix
     b: np.ndarray | None = None  # (m,) observations (quadratic families)
@@ -141,6 +147,8 @@ class SolveRequest:
     block_size: int = 1         # 1 ⇒ ℓ1; >1 ⇒ group-ℓ2 blocks
     family: str = ""            # "" ⇒ lasso/group_lasso by block_size
     x0: np.ndarray | None = None  # optional warm start
+    priority: int = 0           # higher = admitted first ("priority" policy)
+    deadline: float | None = None  # absolute time ("deadline" policy)
 
     @property
     def spec(self) -> BatchedProblemSpec:
@@ -181,7 +189,28 @@ class SolveResponse:
     iters: int
     converged: bool
     stat: float                 # final ‖x̂(x)−x‖∞
-    bucket: int                 # batch bucket the request was served in
+    bucket: int                 # batch bucket / slab capacity served in
+
+
+def validate_request(i: "int | None", r: SolveRequest,
+                     spec: BatchedProblemSpec) -> None:
+    """Shape/family checks shared by the wave and continuous engines —
+    raise before any device work so rejection is atomic.  ``i`` is the
+    request's position within a wave (``None`` for single-request
+    submission paths, where an index would mislead)."""
+    where = "request" if i is None else f"request {i}"
+    needs_b = "b" in get_family(spec.family).data_keys
+    if needs_b and np.shape(r.b) != (spec.m,):
+        raise ValueError(
+            f"{where}: family {spec.family!r} needs b of shape "
+            f"({spec.m},), got {np.shape(r.b)}")
+    if not needs_b and r.b is not None:
+        raise ValueError(
+            f"{where}: family {spec.family!r} takes no b")
+    if r.x0 is not None and np.shape(r.x0) != (spec.n,):
+        raise ValueError(
+            f"{where}: x0 must have shape ({spec.n},), got "
+            f"{np.shape(r.x0)}")
 
 
 class SolverServeEngine:
@@ -202,27 +231,40 @@ class SolverServeEngine:
       padding clone may take a different trajectory and keep the bucket
       iterating a little longer (bounded by ``cfg.max_iters`` — wasted
       device work only, never a wrong answer);
-    * each (spec, bucket) pair hits :func:`make_batched_solver` — an
-      ``lru_cache``'d, jitted vmap+while_loop program — so compilation
-      happens once per shape signature, then every subsequent batch of
-      requests with that signature reuses the executable;
+    * each (spec, bucket) pair hits :func:`make_batched_solver` — a
+      bounded-LRU-cached (``repro.solvers.cache``), jitted
+      vmap+while_loop program — so compilation happens once per shape
+      signature, then every subsequent batch of requests with that
+      signature reuses the executable;
     * the whole bucket converges inside ONE device program (stragglers keep
       iterating while finished instances are frozen), so there is no
       per-iteration host sync either.
 
-    ``engine.stats`` reports requests/batches served, padding overhead and
-    distinct compiled signatures.  The amortization measurement in
-    ``results/bench/BENCH_solvers.json`` (``batched`` section) is produced
-    by ``benchmarks/fig1.run_batched`` over the same compiled-program cache.
+    ``engine.stats`` reports requests/batches served, padding overhead,
+    distinct compiled signatures, and (no longer silent) the padding-waste
+    and bucket-occupancy aggregates; ``engine.telemetry`` keeps the full
+    per-wave and per-request records (``repro.serve.metrics``) — the
+    baseline columns of ``results/bench/BENCH_serve.json``.  The
+    amortization measurement in ``results/bench/BENCH_solvers.json``
+    (``batched`` section) is produced by ``benchmarks/fig1.run_batched``
+    over the same compiled-program cache.
     """
 
     def __init__(self, cfg: SolverConfig | None = None, *,
-                 max_batch: int = 16):
+                 max_batch: int = 16,
+                 telemetry: ServeTelemetry | None = None):
         self.cfg = cfg or SolverConfig()
         self.max_batch = int(max_batch)
+        self.telemetry = telemetry or ServeTelemetry()
         self.stats = {"requests": 0, "batches": 0, "padded": 0,
-                      "signatures": 0}
+                      "signatures": 0, "occupancy": 0.0,
+                      "padding_waste": 0.0}
         self._seen: set = set()
+        # Running totals for the stats aggregates (cheaper than a full
+        # telemetry snapshot per wave, which sorts every latency seen).
+        self._row_iters = 0
+        self._pad_row_iters = 0
+        self._occupancy_sum = 0.0
 
     # ------------------------------------------------------------- #
     def _bucket(self, count: int) -> int:
@@ -233,28 +275,32 @@ class SolverServeEngine:
             b *= 2
         return min(b, self.max_batch)
 
-    def submit(self, requests: list[SolveRequest]) -> list[SolveResponse]:
+    def submit(self, requests: list[SolveRequest],
+               arrivals: list[float] | None = None
+               ) -> list[SolveResponse]:
         """Solve a wave of requests; responses align with request order.
 
         The whole wave is validated before any bucket runs, so a malformed
         request rejects the wave atomically (no partial stats/responses).
+        ``arrivals`` optionally backdates each request's telemetry arrival
+        timestamp (a request that waited for the server to go idle before
+        it could be submitted arrived *earlier* — latency must include
+        that wait, or saturated-regime percentiles understate reality).
         """
         by_spec: dict[BatchedProblemSpec, list[int]] = {}
         for i, r in enumerate(requests):
             spec = r.spec
-            needs_b = "b" in get_family(spec.family).data_keys
-            if needs_b and np.shape(r.b) != (spec.m,):
-                raise ValueError(
-                    f"request {i}: family {spec.family!r} needs b of shape "
-                    f"({spec.m},), got {np.shape(r.b)}")
-            if not needs_b and r.b is not None:
-                raise ValueError(
-                    f"request {i}: family {spec.family!r} takes no b")
-            if r.x0 is not None and np.shape(r.x0) != (spec.n,):
-                raise ValueError(
-                    f"request {i}: x0 must have shape ({spec.n},), got "
-                    f"{np.shape(r.x0)}")
+            validate_request(i, r, spec)
             by_spec.setdefault(spec, []).append(i)
+        if arrivals is not None and len(arrivals) != len(requests):
+            raise ValueError("arrivals must align with requests")
+
+        tele = self.telemetry
+        req_ids = [tele.next_request_id() for _ in requests]
+        for i, r in enumerate(requests):
+            tele.record_arrival(req_ids[i], r.spec.family, "wave",
+                                t=None if arrivals is None
+                                else arrivals[i])
 
         out: list[SolveResponse | None] = [None] * len(requests)
         for spec, idxs in by_spec.items():
@@ -275,8 +321,12 @@ class SolverServeEngine:
                     jnp.zeros((spec.n,), jnp.float32) if r.x0 is None
                     else jnp.asarray(r.x0, jnp.float32) for r in rows])
 
+                for i in chunk:
+                    tele.record_admit(req_ids[i])
+                t0 = time.perf_counter()
                 final, converged = run(data, c, x0)
-                xs = np.asarray(final.x)
+                xs = np.asarray(final.x)         # device sync: wave is done
+                wall = time.perf_counter() - t0
                 ks = np.asarray(final.k)
                 stats_ = np.asarray(final.stat)
                 conv = np.asarray(converged)
@@ -284,10 +334,24 @@ class SolverServeEngine:
                     out[i] = SolveResponse(
                         x=xs[j], iters=int(ks[j]), converged=bool(conv[j]),
                         stat=float(stats_[j]), bucket=B)
+                    tele.record_completion(req_ids[i], iters=int(ks[j]),
+                                           converged=bool(conv[j]))
+                tele.record_wave(bucket=B, n_real=len(chunk),
+                                 iters=ks[:len(chunk)], wall_s=wall,
+                                 device_iters_max=int(ks.max()))
 
                 self.stats["requests"] += len(chunk)
                 self.stats["batches"] += 1
                 self.stats["padded"] += pad
                 self._seen.add((spec, B))
+                self._row_iters += B * int(ks.max())
+                self._pad_row_iters += pad * int(ks.max())
+                self._occupancy_sum += len(chunk) / B
         self.stats["signatures"] = len(self._seen)
+        if self.stats["batches"]:
+            self.stats["occupancy"] = \
+                self._occupancy_sum / self.stats["batches"]
+        if self._row_iters:
+            self.stats["padding_waste"] = \
+                self._pad_row_iters / self._row_iters
         return out  # type: ignore[return-value]

@@ -1,0 +1,210 @@
+"""Serve telemetry: one recorder shared by the wave and continuous engines.
+
+The ROADMAP's serving goal is latency/throughput under heavy concurrent
+traffic, and until now the engines were flying blind: the wave engine's
+power-of-two padding cost was invisible, and there was no per-request
+latency at all.  :class:`ServeTelemetry` records
+
+* the **request lifecycle** — arrival (submit), admission (first device
+  iteration), completion — from which queue wait, service time and
+  end-to-end latency (p50/p99/mean) derive;
+* **chunk-level** counters for the continuous engine — chunks executed,
+  FLEXA iterations per second of device wall, slot occupancy (live slots /
+  slab capacity, weighted per chunk), padding waste (idle-slot row
+  iterations);
+* **wave-level** counters for the bucketed engine — bucket occupancy
+  (real requests / padded bucket), padding waste (row iterations spent on
+  padding clones) and freeze waste (row iterations spent stepping
+  already-converged instances while a straggler holds the while_loop
+  open) — the apples-to-apples baseline columns of ``BENCH_serve.json``;
+* the **compile caches** (``repro.solvers.cache``) — hit/miss/eviction/
+  size per cache, so a serving process can see whether its signatures fit
+  the ``REPRO_COMPILE_CACHE_SIZE`` budget.
+
+Timestamps come from an injectable ``clock`` (default
+``time.perf_counter``); the load generator swaps in a simulated clock so
+latency percentiles are reproducible under a virtual arrival timeline.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.solvers.cache import cache_stats
+
+
+def percentile(values, q: float):
+    """Linear-interpolation percentile; ``None`` on an empty sample."""
+    if not len(values):
+        return None
+    return float(np.percentile(np.asarray(values, np.float64), q))
+
+
+@dataclass
+class RequestTrace:
+    """Lifecycle timestamps and outcome of one solve request."""
+    req_id: int
+    family: str
+    arrival: float
+    admitted: float | None = None
+    completed: float | None = None
+    iters: int = 0
+    converged: bool = False
+    engine: str = ""                # "wave" | "continuous"
+
+    @property
+    def queue_wait(self) -> float | None:
+        if self.admitted is None:
+            return None
+        return self.admitted - self.arrival
+
+    @property
+    def latency(self) -> float | None:
+        if self.completed is None:
+            return None
+        return self.completed - self.arrival
+
+
+@dataclass
+class ServeTelemetry:
+    """Mutable counters an engine appends to as it serves."""
+    clock: object = time.perf_counter
+    requests: dict = field(default_factory=dict)    # req_id -> RequestTrace
+    _req_ids: object = field(default_factory=itertools.count)
+    # continuous-engine chunk counters
+    chunks: int = 0
+    chunk_iters: int = 0            # Σ K over chunks (per-slot iterations)
+    chunk_row_iters: int = 0        # Σ K·capacity (device row iterations)
+    chunk_live_iters: int = 0       # Σ K·live     (useful row iterations)
+    chunk_wall: float = 0.0
+    # wave-engine per-bucket records
+    waves: list = field(default_factory=list)
+
+    def now(self) -> float:
+        return float(self.clock())
+
+    def next_request_id(self) -> int:
+        """Allocate a request id unique within this telemetry.
+
+        Engines draw their ids from here so that a telemetry shared
+        between engines (the apples-to-apples comparison mode) never
+        sees two requests under one id; with a per-engine telemetry the
+        ids count from 0 exactly as before.
+        """
+        return next(self._req_ids)
+
+    # ------------------------------------------------------------- #
+    # request lifecycle
+    # ------------------------------------------------------------- #
+    def record_arrival(self, req_id: int, family: str, engine: str,
+                       t: float | None = None) -> None:
+        self.requests[req_id] = RequestTrace(
+            req_id=req_id, family=family, engine=engine,
+            arrival=self.now() if t is None else t)
+
+    def record_admit(self, req_id: int, t: float | None = None) -> None:
+        self.requests[req_id].admitted = self.now() if t is None else t
+
+    def record_completion(self, req_id: int, *, iters: int, converged: bool,
+                          t: float | None = None) -> None:
+        r = self.requests[req_id]
+        r.completed = self.now() if t is None else t
+        r.iters = int(iters)
+        r.converged = bool(converged)
+
+    # ------------------------------------------------------------- #
+    # engine-side counters
+    # ------------------------------------------------------------- #
+    def record_chunk(self, *, live: int, capacity: int, chunk_iters: int,
+                     wall_s: float) -> None:
+        self.chunks += 1
+        self.chunk_iters += chunk_iters
+        self.chunk_row_iters += chunk_iters * capacity
+        self.chunk_live_iters += chunk_iters * live
+        self.chunk_wall += wall_s
+
+    def record_wave(self, *, bucket: int, n_real: int, iters,
+                    wall_s: float, device_iters_max: int | None = None
+                    ) -> None:
+        """One wave bucket: ``iters`` are the per-row iteration counts of
+        the *real* requests; ``device_iters_max`` the max over ALL rows
+        including padding clones (under randomized selection a clone's
+        own PRNG stream can out-iterate every real request and keep the
+        while_loop open — the device executed *that* many iterations)."""
+        iters = [int(i) for i in iters]
+        iters_max = max(iters) if iters else 0
+        if device_iters_max is not None:
+            iters_max = max(iters_max, int(device_iters_max))
+        row_iters = bucket * iters_max          # what the device executed
+        useful = sum(iters)
+        self.waves.append({
+            "bucket": bucket, "n_real": n_real, "padded": bucket - n_real,
+            "occupancy": n_real / bucket if bucket else 0.0,
+            "iters_max": iters_max, "useful_row_iters": useful,
+            "row_iters": row_iters,
+            "padding_waste": ((bucket - n_real) * iters_max / row_iters
+                              if row_iters else 0.0),
+            "freeze_waste": ((n_real * iters_max - useful) / row_iters
+                             if row_iters else 0.0),
+            "wall_s": wall_s,
+        })
+
+    # ------------------------------------------------------------- #
+    # aggregation
+    # ------------------------------------------------------------- #
+    def latencies(self) -> list:
+        return [r.latency for r in self.requests.values()
+                if r.latency is not None]
+
+    def snapshot(self) -> dict:
+        """Everything a dashboard (or ``BENCH_serve.json``) wants."""
+        lats = self.latencies()
+        waits = [r.queue_wait for r in self.requests.values()
+                 if r.queue_wait is not None]
+        completed = [r for r in self.requests.values()
+                     if r.completed is not None]
+        out = {
+            "requests": len(self.requests),
+            "completed": len(completed),
+            "converged": sum(r.converged for r in completed),
+            "iters_total": sum(r.iters for r in completed),
+            "latency_p50": percentile(lats, 50),
+            "latency_p99": percentile(lats, 99),
+            "latency_mean": (float(np.mean(lats)) if lats else None),
+            "latency_max": (float(np.max(lats)) if lats else None),
+            "queue_wait_p50": percentile(waits, 50),
+            "queue_wait_p99": percentile(waits, 99),
+            "compile_cache": cache_stats(),
+        }
+        if self.chunks:
+            row = self.chunk_row_iters
+            out["continuous"] = {
+                "chunks": self.chunks,
+                "chunk_iters": self.chunk_iters,
+                "row_iters": row,
+                "occupancy_mean": (self.chunk_live_iters / row
+                                   if row else 0.0),
+                "padding_waste": ((row - self.chunk_live_iters) / row
+                                  if row else 0.0),
+                "chunk_wall_s": self.chunk_wall,
+                "iters_per_s": (self.chunk_live_iters / self.chunk_wall
+                                if self.chunk_wall > 0 else None),
+            }
+        if self.waves:
+            row = sum(w["row_iters"] for w in self.waves)
+            useful = sum(w["useful_row_iters"] for w in self.waves)
+            pad = sum(w["padded"] * w["iters_max"] for w in self.waves)
+            out["wave"] = {
+                "waves": len(self.waves),
+                "row_iters": row,
+                "occupancy_mean": (float(np.mean(
+                    [w["occupancy"] for w in self.waves]))),
+                "padding_waste": pad / row if row else 0.0,
+                "freeze_waste": ((row - useful - pad) / row
+                                 if row else 0.0),
+                "wall_s": sum(w["wall_s"] for w in self.waves),
+            }
+        return out

@@ -12,16 +12,24 @@ One import gives the whole algorithm family behind a single contract:
 * :func:`solve_batched` — the batched multi-instance FLEXA engine: B
   independent Lasso / group-Lasso instances advance in lock-step inside one
   compiled (vmap + while_loop) program (``batched.py``).
+* the resumable slab core (:func:`slab_alloc` / :func:`make_chunk_stepper`
+  / :func:`make_slot_writer`) — what the continuous-batching runtime
+  (``repro.serve.continuous``) schedules over.
 * :func:`register` / :func:`available_methods` — extend or inspect the
-  method registry.
+  method registry; :func:`cache_stats` — compile-cache counters.
 """
 from repro.solvers.api import solve
-from repro.solvers.batched import (BatchedProblemSpec, make_batched_solver,
+from repro.solvers.batched import (BatchedProblemSpec, SlabState,
+                                   make_batched_solver, make_chunk_stepper,
+                                   make_slot_writer, slab_alloc,
                                    solve_batched)
+from repro.solvers.cache import cache_stats
 from repro.solvers.registry import available_methods, get_solver, register
 from repro.solvers.result import SolverResult
 
 __all__ = [
     "solve", "solve_batched", "make_batched_solver", "BatchedProblemSpec",
+    "SlabState", "slab_alloc", "make_chunk_stepper", "make_slot_writer",
     "SolverResult", "register", "get_solver", "available_methods",
+    "cache_stats",
 ]

@@ -19,10 +19,22 @@ This module instead *vmaps Algorithm 1 itself* over a stack of instances:
   frozen (their state stops updating, their ``k`` stops counting) while
   stragglers keep iterating, and the program exits when every instance is
   done — one compilation, zero per-step host round trips;
-* compiled programs are cached on ``(spec, cfg)`` via ``lru_cache`` — one
-  compile cache entry per (family, shape, config) signature — so a serving
-  process pays compilation once per bucket
-  (``repro.serve.engine.SolverServeEngine`` builds on exactly this).
+* compiled programs are cached on ``(spec, cfg)`` via a bounded,
+  instrumented LRU (``repro.solvers.cache.CompileCache``, capacity from
+  ``REPRO_COMPILE_CACHE_SIZE``) — one compile cache entry per (family,
+  shape, config) signature — so a serving process pays compilation once
+  per bucket (``repro.serve.engine.SolverServeEngine`` builds on exactly
+  this).
+
+Besides the run-to-convergence wave program, this module exposes the
+*resumable* slab core the continuous-batching runtime
+(``repro.serve.continuous``) schedules over: :func:`slab_alloc` packs a
+fixed-capacity stack of instance buffers, :func:`make_slot_writer`
+compiles an in-place ``dynamic_update_slice`` admission of one new
+instance into a slot, and :func:`make_chunk_stepper` compiles "advance
+every live slot by K iterations" with the same freeze-on-convergence
+merge the wave driver uses — so a slot's trajectory is bit-identical
+whichever driver runs it.
 
 γ, τ, the PRNG key of the randomized selection rules, and the selection
 mask are per-instance state, so each instance follows the identical
@@ -43,8 +55,8 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from functools import lru_cache, partial
-from typing import Sequence
+from functools import partial
+from typing import NamedTuple, Sequence
 
 import numpy as np
 import jax
@@ -55,6 +67,7 @@ from repro.core import flexa as _flexa
 from repro.core.flexa import FlexaState, flexa_iteration
 from repro.problems.base import Problem
 from repro.problems.families import build_problem, get_family, infer_family
+from repro.solvers.cache import CompileCache
 from repro.solvers.result import SolverResult
 
 
@@ -140,8 +153,7 @@ def _freeze_done(done, new_state: FlexaState, old_state: FlexaState):
     return jax.tree_util.tree_map(merge, new_state, old_state)
 
 
-@lru_cache(maxsize=64)
-def make_batched_solver(spec: BatchedProblemSpec, cfg: SolverConfig):
+def _build_batched_solver(spec: BatchedProblemSpec, cfg: SolverConfig):
     """Compile ``run(data, c, x0) -> (final FlexaState, converged)``.
 
     ``data`` is the tuple of stacked family arrays (leading dim B — e.g.
@@ -179,6 +191,214 @@ def make_batched_solver(spec: BatchedProblemSpec, cfg: SolverConfig):
         return final, final.stat <= cfg.tol
 
     return run
+
+
+#: Bounded LRU over (spec, cfg) — the wave-serving compile cache.  Call it
+#: exactly like the old ``lru_cache``'d function: ``make_batched_solver(
+#: spec, cfg)``.  Counters surface via ``repro.serve.metrics``.
+make_batched_solver = CompileCache("batched_solver", _build_batched_solver)
+
+
+# ===================================================================== #
+# Resumable slab core (continuous batching)                             #
+# ===================================================================== #
+class SlabState(NamedTuple):
+    """Device buffers of one fixed-capacity slot slab (leading dim S).
+
+    This is the "packed" form the continuous runtime schedules over: the
+    per-slot family data, regularization weights, precomputed column
+    norms / base-τ vectors, and the stacked :class:`FlexaState`.  It is a
+    pytree, so one jitted program can consume and (with donation) reuse
+    the whole bundle in place.
+    """
+    data: tuple                 # family arrays, each (S, ...)
+    c: jnp.ndarray              # (S,)
+    col_sq: jnp.ndarray         # (S, n)
+    tau_base: jnp.ndarray       # (S, n)
+    state: FlexaState           # stacked, leading dim S
+
+    @property
+    def capacity(self) -> int:
+        return int(self.c.shape[0])
+
+
+def slab_data_shapes(spec: BatchedProblemSpec) -> tuple:
+    """Per-instance shapes of the family data arrays, in ``data_keys``
+    order: the leading key is the (m, n) design/feature matrix, ``b`` is
+    the (m,) observation vector."""
+    shapes = []
+    for j, key in enumerate(get_family(spec.family).data_keys):
+        if j == 0:
+            shapes.append((spec.m, spec.n))
+        elif key == "b":
+            shapes.append((spec.m,))
+        else:
+            raise NotImplementedError(
+                f"no slab layout for data key {key!r} of family "
+                f"{spec.family!r}")
+    return tuple(shapes)
+
+
+def slab_alloc(spec: BatchedProblemSpec, cfg: SolverConfig,
+               capacity: int) -> SlabState:
+    """Pack a zeroed slab of ``capacity`` slots.
+
+    Empty slots hold benign placeholders (unit column norms / τ, zero
+    data) so the chunk stepper can run them through the vmapped iteration
+    and throw the result away without manufacturing NaNs; their ``stat``
+    starts at +inf, so they can never read as converged.
+    """
+    S = int(capacity)
+    data = tuple(jnp.zeros((S,) + shp, jnp.float32)
+                 for shp in slab_data_shapes(spec))
+    c = jnp.ones((S,), jnp.float32)
+    col_sq = jnp.ones((S, spec.n), jnp.float32)
+    tau_base = jnp.ones((S, spec.n), jnp.float32)
+    state = jax.vmap(partial(_instance_init, spec, cfg))(
+        data, c, jnp.zeros((S, spec.n), jnp.float32), jnp.arange(S))
+    return SlabState(data=data, c=c, col_sq=col_sq, tau_base=tau_base,
+                     state=state)
+
+
+def _build_slot_writer(spec: BatchedProblemSpec, cfg: SolverConfig):
+    """Compile ``write(slab, slot, new_data, new_c, new_x0, key) -> slab``.
+
+    One new instance is spliced into slot ``slot`` of every stacked buffer
+    (``.at[slot].set`` on a traced index — a ``dynamic_update_slice``), its
+    column norms / base τ are recomputed, and its :class:`FlexaState` is
+    freshly initialized exactly as a solo solve would (``init_state`` on
+    the rebuilt family problem).  The slab is donated: admission is an
+    in-place splice, not a reallocation, however large the resident data.
+    """
+    fam = get_family(spec.family)
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def write(slab: SlabState, slot, new_data, new_c, new_x0, key):
+        problem = family_problem(new_data, new_c, spec)
+        inst = _flexa.init_state(problem, new_x0, cfg, key=key)
+        csq = fam.col_sq(*new_data)
+        tb = _tau_base(fam.half_curv(csq), cfg, spec.n)
+        return SlabState(
+            data=tuple(d.at[slot].set(nd.astype(d.dtype))
+                       for d, nd in zip(slab.data, new_data)),
+            c=slab.c.at[slot].set(new_c),
+            col_sq=slab.col_sq.at[slot].set(csq),
+            tau_base=slab.tau_base.at[slot].set(tb),
+            state=jax.tree_util.tree_map(
+                lambda s, v: s.at[slot].set(v.astype(s.dtype)),
+                slab.state, inst),
+        )
+
+    return write
+
+
+make_slot_writer = CompileCache("slot_writer", _build_slot_writer)
+
+
+def _bmask(mask, ndim: int):
+    """Broadcast a (S,) bool mask against an (S, ...) array."""
+    return mask.reshape((-1,) + (1,) * (ndim - 1))
+
+
+def _build_chunk_stepper(spec: BatchedProblemSpec, cfg: SolverConfig,
+                         chunk_iters: int):
+    """Compile one fused scheduler tick:
+
+        chunk(slab, stop, admit, new_data, new_c, new_x0, new_ids)
+            -> (slab, stop)
+
+    Phase 1 — **admission splice**: slots flagged in ``admit`` (an (S,)
+    bool mask) are overwritten in place from the staged full-slab
+    payload: family data rows, regularization weight, a freshly computed
+    column-norm / base-τ row, and a fresh :class:`FlexaState` initialized
+    exactly as a solo solve would (``_instance_init`` with the *request
+    id* folded into the PRNG stream, so a request's trajectory never
+    depends on its slot or neighbours).  Non-admitted payload rows are
+    ignored (masked select), so the host can leave stale bytes there.
+
+    Phase 2 — **K iterations** on every unstopped slot, with the wave
+    driver's exact freeze-on-convergence merge: a slot flips its own
+    ``stop`` bit the moment it converges (``stat ≤ tol``) or exhausts
+    ``max_iters`` and is frozen from the next inner iteration on, so its
+    final state is the state at first convergence — the same answer
+    :func:`make_batched_solver`'s while_loop produces, independent of
+    the chunk size K.
+
+    Fusing admission into the step matters operationally: a scheduler
+    tick is ONE device program and one (S,) mask readback, however many
+    requests were admitted — separate per-slot splice calls would pay
+    dispatch per admission and dominate the serving makespan at small
+    instance sizes.  The slab and stop mask are donated (in-place
+    advance).
+    """
+    fam = get_family(spec.family)
+    vstep = jax.vmap(partial(_instance_step, spec, cfg))
+    vinit = jax.vmap(partial(_instance_init, spec, cfg))
+    vtau = jax.vmap(lambda csq: _tau_base(fam.half_curv(csq), cfg, spec.n))
+
+    def splice(slab: SlabState, admit, new_data, new_c, new_x0,
+               new_ids) -> SlabState:
+        # Masked in-place splice of admitted rows.  The fresh per-row
+        # quantities are computed for every row and selected by the
+        # mask — cheaper than dynamic gathers at slab widths, and stale
+        # payload rows are finite so no NaNs can leak through the
+        # select.
+        data = tuple(
+            jnp.where(_bmask(admit, d.ndim), nd.astype(d.dtype), d)
+            for d, nd in zip(slab.data, new_data))
+        csq_new = jax.vmap(fam.col_sq)(*new_data)
+        init = vinit(new_data, new_c, new_x0, new_ids)
+        state = jax.tree_util.tree_map(
+            lambda s, v: jnp.where(_bmask(admit, s.ndim),
+                                   v.astype(s.dtype), s),
+            slab.state, init)
+        return SlabState(
+            data=data,
+            c=jnp.where(admit, new_c, slab.c),
+            col_sq=jnp.where(admit[:, None], csq_new, slab.col_sq),
+            tau_base=jnp.where(admit[:, None], vtau(csq_new),
+                               slab.tau_base),
+            state=state)
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def chunk(slab: SlabState, stop, admit, new_data, new_c, new_x0,
+              new_ids):
+        # Phase 1 under a cond: the steady-state tick between evictions
+        # admits nothing, and the splice's fresh-state/column-norm work
+        # (~one iteration's worth of matvecs) should not be paid then.
+        slab = jax.lax.cond(
+            jnp.any(admit),
+            lambda s: splice(s, admit, new_data, new_c, new_x0, new_ids),
+            lambda s: s,
+            slab)
+        stop = stop & ~admit
+
+        # Phase 2: K frozen-merge iterations.
+        def body(_, carry):
+            state, stop = carry
+            new_state, _ = vstep(slab.data, slab.c, slab.col_sq,
+                                 slab.tau_base, state)
+            merged = _freeze_done(stop, new_state, state)
+            stop = stop | (merged.stat <= cfg.tol) \
+                | (merged.k >= cfg.max_iters)
+            return merged, stop
+        state, stop = jax.lax.fori_loop(0, chunk_iters, body,
+                                        (slab.state, stop))
+        return slab._replace(state=state), stop
+
+    return chunk
+
+
+make_chunk_stepper = CompileCache("chunk_stepper", _build_chunk_stepper)
+
+
+def read_slots(state: FlexaState, slots) -> list[FlexaState]:
+    """Unpack single-instance states out of a stacked :class:`FlexaState`
+    (host-side; one small transfer per requested slot)."""
+    rows = jax.device_get(
+        jax.tree_util.tree_map(lambda a: a[jnp.asarray(slots)], state))
+    return [jax.tree_util.tree_map(lambda a: a[i], rows)
+            for i in range(len(slots))]
 
 
 def _stack_instances(problems: Sequence[Problem]):

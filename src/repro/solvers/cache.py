@@ -1,0 +1,101 @@
+"""Bounded, instrumented compile caches for the solver/serve layers.
+
+``functools.lru_cache`` hid two things the serving layer needs to see:
+whether a hot path is actually reusing compiled programs (hit/miss
+counters feed ``repro.serve.metrics``), and how big the cache is allowed
+to grow (a long-lived serving process accumulating one executable per
+(family × shape × config) signature must be *bounded*, and the bound must
+be tunable per deployment).
+
+:class:`CompileCache` is a plain LRU over hashable keys with:
+
+* a capacity resolved at *insertion* time from the
+  ``REPRO_COMPILE_CACHE_SIZE`` environment variable (falling back to the
+  per-cache default), so operators and tests can retune a running process
+  without re-importing modules;
+* ``hits`` / ``misses`` / ``evictions`` / ``size`` counters, aggregated
+  across every live cache by :func:`cache_stats` (surfaced through
+  ``repro.serve.metrics.snapshot``);
+* a module-level registry so telemetry can enumerate caches it never
+  imported (the batched-solver cache, the chunk-stepper cache, the
+  slot-writer cache, ...).
+
+Not thread-safe by design — the solver runtime is single-threaded per
+process (JAX dispatch itself serializes on the GIL for these workloads).
+"""
+from __future__ import annotations
+
+import os
+from collections import OrderedDict
+from typing import Callable
+
+#: Environment knob bounding every compile cache (int; empty/absent ⇒ the
+#: per-cache default given at construction).
+ENV_CACHE_SIZE = "REPRO_COMPILE_CACHE_SIZE"
+
+_REGISTRY: "OrderedDict[str, CompileCache]" = OrderedDict()
+
+
+class CompileCache:
+    """An LRU memo for ``builder(*key) -> compiled program`` factories."""
+
+    def __init__(self, name: str, builder: Callable, *,
+                 default_maxsize: int = 64):
+        if name in _REGISTRY:
+            raise ValueError(f"compile cache {name!r} already registered")
+        self.name = name
+        self.builder = builder
+        self.default_maxsize = int(default_maxsize)
+        self._store: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        _REGISTRY[name] = self
+
+    # ------------------------------------------------------------- #
+    def maxsize(self) -> int:
+        """Capacity, re-read from the environment on every insertion so a
+        runtime retune (or a test monkeypatch) takes effect immediately."""
+        raw = os.environ.get(ENV_CACHE_SIZE, "").strip()
+        if raw:
+            try:
+                return max(1, int(raw))
+            except ValueError:
+                pass  # malformed env var: fall back, never crash a solve
+        return self.default_maxsize
+
+    def __call__(self, *key):
+        if key in self._store:
+            self.hits += 1
+            self._store.move_to_end(key)
+            return self._store[key]
+        self.misses += 1
+        value = self.builder(*key)
+        self._store[key] = value
+        limit = self.maxsize()
+        while len(self._store) > limit:
+            self._store.popitem(last=False)   # least-recently-used first
+            self.evictions += 1
+        return value
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def clear(self) -> None:
+        self._store.clear()
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "size": len(self._store),
+                "maxsize": self.maxsize()}
+
+
+def cache_stats() -> dict:
+    """``{cache name: counters}`` for every registered compile cache."""
+    return {name: c.stats() for name, c in _REGISTRY.items()}
+
+
+def clear_all() -> None:
+    """Drop every cached executable (tests; counters are kept)."""
+    for c in _REGISTRY.values():
+        c.clear()

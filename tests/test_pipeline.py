@@ -10,10 +10,16 @@ import pytest
 
 # The GPipe path keeps `model` *auto* inside a partial-manual shard_map;
 # jaxlib < 0.6 lowers lax.axis_index there to a PartitionId instruction the
-# SPMD partitioner rejects.  `jax.shard_map` existing is the capability probe.
+# SPMD partitioner rejects (see ROADMAP "Open items").  Precise version
+# gate — NOT a capability probe — so bumping jax/jaxlib to >= 0.6
+# auto-unskips this module with no edit here; if it then fails, the
+# lowering bug survived the bump and the ROADMAP entry is still live.
+_JAX_VERSION = tuple(int(x) for x in jax.__version__.split(".")[:2])
 pytestmark = pytest.mark.skipif(
-    not hasattr(jax, "shard_map"),
-    reason="partial-manual shard_map (jax>=0.6) required by the pipeline path")
+    _JAX_VERSION < (0, 6),
+    reason=f"jax {jax.__version__} < 0.6: partial-manual shard_map lowers "
+           "axis_index to a PartitionId op this jaxlib's SPMD partitioner "
+           "rejects")
 
 SRC = textwrap.dedent("""
     import os, json

@@ -1,0 +1,428 @@
+"""Continuous-batching runtime: equivalence, scheduling properties,
+telemetry, and the bounded compile caches (the PR's acceptance criteria
+live here)."""
+import numpy as np
+import pytest
+
+from repro.config.base import ServeConfig, SolverConfig
+from repro.problems.group_lasso import nesterov_group_instance
+from repro.problems.lasso import nesterov_instance
+from repro.problems.logreg import random_logreg_instance
+from repro.problems.svm import random_svm_instance
+from repro.serve import (AdmissionQueue, ContinuousSolverEngine,
+                         QueueEntry, ServeTelemetry, SolveRequest,
+                         SolverServeEngine)
+from repro.solvers import solve
+from repro.solvers.cache import cache_stats
+import repro.solvers.batched as B
+
+
+def to_request(p, **kw):
+    """Problem -> SolveRequest (design matrix key varies per family)."""
+    fam = p.family
+    if fam in ("lasso", "group_lasso"):
+        return SolveRequest(A=np.asarray(p.data["A"]),
+                            b=np.asarray(p.data["b"]),
+                            c=float(p.g_weight),
+                            block_size=p.block_size, **kw)
+    return SolveRequest(A=np.asarray(p.data["Z"]), c=float(p.g_weight),
+                        family=fam, **kw)
+
+
+FAMILY_BATCHES = {
+    "lasso": lambda: [nesterov_instance(m=20, n=64, nnz_frac=0.15, c=1.0,
+                                        seed=s) for s in range(5)],
+    "group_lasso": lambda: [nesterov_group_instance(
+        m=24, n_blocks=16, block_size=4, nnz_frac=0.25, c=1.0, seed=s)
+        for s in range(5)],
+    "logreg": lambda: [random_logreg_instance(m=30, n=48, nnz_frac=0.2,
+                                              c=0.5, seed=s)
+                       for s in range(5)],
+    "svm": lambda: [random_svm_instance(m=30, n=40, nnz_frac=0.2, c=0.5,
+                                        seed=s) for s in range(5)],
+}
+
+
+# ------------------------------------------------------------------ #
+# Acceptance: slab-served == solo solve, all four families           #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("family", sorted(FAMILY_BATCHES))
+def test_continuous_matches_solo_all_families(family):
+    """Every request served through the slab matches its solo solve()
+    within 1e-5 — fixed iteration budget, tau_adapt off (the usual fp32
+    reduction-order caveat for cross-driver comparisons), capacity 2 for
+    five requests so eviction/backfill genuinely runs."""
+    probs = FAMILY_BATCHES[family]()
+    cfg = SolverConfig(max_iters=150, tol=-1.0, tau_adapt=False)
+    eng = ContinuousSolverEngine(
+        cfg, ServeConfig(slab_capacity=2, chunk_iters=16))
+    ids = [eng.submit(to_request(p)) for p in probs]
+    resps = eng.drain()
+    assert len(resps) == len(probs)
+    for i, p in zip(ids, probs):
+        assert resps[i].iters == 150
+        solo = solve(p, method="flexa", cfg=cfg)
+        np.testing.assert_allclose(np.asarray(resps[i].x),
+                                   np.asarray(solo.x), atol=1e-5,
+                                   err_msg=f"{family} request {i}")
+
+
+def test_continuous_convergence_eviction_matches_solo():
+    """Tol-based stopping: converged slots are evicted mid-stream and
+    still match their solo solves (tight tol keeps the fp32 stopping-time
+    noise inside 1e-5); iteration counts vary per request."""
+    probs = FAMILY_BATCHES["lasso"]()
+    cfg = SolverConfig(max_iters=1500, tol=1e-7, tau_adapt=False)
+    eng = ContinuousSolverEngine(
+        cfg, ServeConfig(slab_capacity=2, chunk_iters=32))
+    ids = [eng.submit(to_request(p)) for p in probs]
+    resps = eng.drain()
+    iters = [resps[i].iters for i in ids]
+    assert all(resps[i].converged for i in ids)
+    assert len(set(iters)) > 1          # not wave lock-step
+    for i, p in zip(ids, probs):
+        solo = solve(p, method="flexa", cfg=cfg)
+        np.testing.assert_allclose(np.asarray(resps[i].x),
+                                   np.asarray(solo.x), atol=1e-5)
+
+
+def test_chunk_stepper_matches_wave_program():
+    """A full slab chunk-stepped to completion reproduces the wave
+    while_loop program exactly (same freeze merge ⇒ same stopping
+    iteration, chunk size K irrelevant)."""
+    import jax.numpy as jnp
+
+    probs = FAMILY_BATCHES["lasso"]()[:4]
+    cfg = SolverConfig(max_iters=1000, tol=1e-6, tau_adapt=False)
+    spec = B.BatchedProblemSpec.of(probs[0])
+    data = tuple(jnp.stack([jnp.asarray(p.data[k], jnp.float32)
+                            for p in probs]) for k in ("A", "b"))
+    c = jnp.asarray([float(p.g_weight) for p in probs], jnp.float32)
+    x0 = jnp.zeros((4, spec.n), jnp.float32)
+
+    run = B.make_batched_solver(spec, cfg)
+    wave_final, wave_conv = run(data, c, x0)
+
+    eng = ContinuousSolverEngine(
+        cfg, ServeConfig(slab_capacity=4, chunk_iters=17))
+    ids = [eng.submit(to_request(p)) for p in probs]
+    resps = eng.drain()
+    for j, i in enumerate(ids):
+        # NB the wave program seeds per-instance keys by *slot*, the
+        # continuous runtime by *request id* — identical here because
+        # submission order fills slots 0..3 with ids 0..3.
+        assert resps[i].iters == int(np.asarray(wave_final.k)[j])
+        np.testing.assert_allclose(np.asarray(resps[i].x),
+                                   np.asarray(wave_final.x)[j],
+                                   atol=1e-6)
+
+
+# ------------------------------------------------------------------ #
+# Scheduler properties                                               #
+# ------------------------------------------------------------------ #
+def test_no_slot_double_booking_and_exactly_one_service():
+    probs = FAMILY_BATCHES["lasso"]()
+    cfg = SolverConfig(max_iters=400, tol=1e-6, tau_adapt=False)
+    eng = ContinuousSolverEngine(
+        cfg, ServeConfig(slab_capacity=2, chunk_iters=16))
+    ids = [eng.submit(to_request(p)) for p in probs]
+    eng.drain()
+
+    served = [rec["req_id"] for rec in eng.audit]
+    assert sorted(served) == sorted(ids)          # exactly once each
+    by_slot: dict = {}
+    for rec in eng.audit:
+        assert rec["evict_tick"] is not None
+        assert rec["admit_tick"] <= rec["evict_tick"]
+        by_slot.setdefault((rec["signature"], rec["slot"]),
+                           []).append((rec["admit_tick"],
+                                       rec["evict_tick"]))
+    for intervals in by_slot.values():
+        intervals.sort()
+        for (_, e1), (a2, _) in zip(intervals, intervals[1:]):
+            assert a2 > e1            # next tenancy starts after eviction
+
+
+def test_deterministic_under_fixed_seed_and_trace():
+    probs = FAMILY_BATCHES["lasso"]()
+
+    def run():
+        cfg = SolverConfig(max_iters=2000, tol=1e-6, selection="hybrid",
+                           sel_p=0.5, seed=3)
+        eng = ContinuousSolverEngine(
+            cfg, ServeConfig(slab_capacity=2, chunk_iters=16))
+        ids = [eng.submit(to_request(p)) for p in probs]
+        resps = eng.drain()
+        return ids, resps, eng.audit
+
+    ids1, r1, audit1 = run()
+    ids2, r2, audit2 = run()
+    assert ids1 == ids2
+    assert audit1 == audit2
+    for i in ids1:
+        assert r1[i].iters == r2[i].iters
+        np.testing.assert_array_equal(np.asarray(r1[i].x),
+                                      np.asarray(r2[i].x))
+
+
+def test_randomized_selection_stream_is_request_keyed():
+    """A request's randomized-selection trajectory must not depend on
+    what shares the slab: solo occupancy vs riding along with another
+    request gives bitwise-identical iterates (stream keyed by req_id)."""
+    p = nesterov_instance(m=20, n=64, nnz_frac=0.15, c=1.0, seed=0)
+    q = nesterov_instance(m=20, n=64, nnz_frac=0.15, c=1.0, seed=9)
+    cfg = SolverConfig(max_iters=120, tol=-1.0, tau_adapt=False,
+                       selection="random", sel_p=0.5, seed=5)
+    serve = ServeConfig(slab_capacity=2, chunk_iters=16)
+
+    eng1 = ContinuousSolverEngine(cfg, serve)
+    i1 = eng1.submit(to_request(p))
+    r1 = eng1.drain()[i1]
+
+    eng2 = ContinuousSolverEngine(cfg, serve)
+    i2 = eng2.submit(to_request(p))      # same req_id 0 ⇒ same stream
+    eng2.submit(to_request(q))           # neighbour must not perturb it
+    r2 = eng2.drain()[i2]
+    np.testing.assert_array_equal(np.asarray(r1.x), np.asarray(r2.x))
+
+
+# ------------------------------------------------------------------ #
+# Admission queue policies                                           #
+# ------------------------------------------------------------------ #
+def _entries():
+    r = SolveRequest(A=np.zeros((2, 2), np.float32),
+                     b=np.zeros(2, np.float32))
+    return [
+        QueueEntry(req_id=0, request=r, arrival=0.0, priority=0,
+                   deadline=9.0),
+        QueueEntry(req_id=1, request=r, arrival=1.0, priority=5,
+                   deadline=None),
+        QueueEntry(req_id=2, request=r, arrival=2.0, priority=5,
+                   deadline=1.0),
+        QueueEntry(req_id=3, request=r, arrival=3.0, priority=1,
+                   deadline=2.0),
+    ]
+
+
+def test_admission_queue_policies_order():
+    for policy, want in [("fifo", [0, 1, 2, 3]),
+                         ("priority", [1, 2, 3, 0]),
+                         ("deadline", [2, 3, 0, 1])]:
+        q = AdmissionQueue(policy)
+        for e in _entries():
+            q.push(e)
+        got = [q.pop().req_id for _ in range(len(_entries()))]
+        assert got == want, (policy, got)
+    with pytest.raises(ValueError, match="unknown admission policy"):
+        AdmissionQueue("lifo")
+
+
+def test_priority_policy_reorders_admissions_end_to_end():
+    probs = FAMILY_BATCHES["lasso"]()[:3]
+    cfg = SolverConfig(max_iters=60, tol=-1.0, tau_adapt=False)
+    eng = ContinuousSolverEngine(
+        cfg, ServeConfig(slab_capacity=1, chunk_iters=16,
+                         policy="priority"))
+    ids = [eng.submit(to_request(p, priority=pr))
+           for p, pr in zip(probs, (0, 1, 7))]
+    eng.drain()
+    admit_order = [rec["req_id"] for rec in eng.audit]
+    assert admit_order == [ids[2], ids[1], ids[0]]
+
+
+def test_deadline_policy_serves_earliest_deadline_first():
+    probs = FAMILY_BATCHES["lasso"]()[:3]
+    cfg = SolverConfig(max_iters=60, tol=-1.0, tau_adapt=False)
+    eng = ContinuousSolverEngine(
+        cfg, ServeConfig(slab_capacity=1, chunk_iters=16,
+                         policy="deadline"))
+    ids = [eng.submit(to_request(p, deadline=d))
+           for p, d in zip(probs, (5.0, None, 1.0))]
+    eng.drain()
+    admit_order = [rec["req_id"] for rec in eng.audit]
+    assert admit_order == [ids[2], ids[0], ids[1]]   # dated first, EDF
+
+
+def test_continuous_engine_rejects_malformed_requests():
+    eng = ContinuousSolverEngine(SolverConfig(max_iters=10))
+    Z = np.zeros((5, 4), np.float32)
+    with pytest.raises(ValueError, match="takes no b"):
+        eng.submit(SolveRequest(A=Z, b=np.zeros(5, np.float32),
+                                family="logreg"))
+    with pytest.raises(ValueError, match="needs b"):
+        eng.submit(SolveRequest(A=Z, c=1.0))
+    assert eng.pending == 0
+
+
+# ------------------------------------------------------------------ #
+# Slab pack/unpack API                                               #
+# ------------------------------------------------------------------ #
+def test_slot_writer_packs_one_instance():
+    import jax
+    import jax.numpy as jnp
+    from repro.core import flexa as _flexa
+
+    p = nesterov_instance(m=20, n=64, nnz_frac=0.15, c=1.0, seed=0)
+    cfg = SolverConfig()
+    spec = B.BatchedProblemSpec.of(p)
+    slab = B.slab_alloc(spec, cfg, capacity=3)
+    write = B.make_slot_writer(spec, cfg)
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), 42)
+    slab = write(slab, jnp.asarray(1, jnp.int32),
+                 (jnp.asarray(p.data["A"]), jnp.asarray(p.data["b"])),
+                 jnp.asarray(1.0, jnp.float32),
+                 jnp.zeros((spec.n,), jnp.float32), key)
+    np.testing.assert_allclose(np.asarray(slab.data[0][1]),
+                               np.asarray(p.data["A"]), atol=1e-6)
+    assert float(np.asarray(slab.c)[1]) == 1.0
+    (row,) = B.read_slots(slab.state, [1])
+    ref = _flexa.init_state(p, np.zeros(spec.n, np.float32), cfg,
+                            key=key)
+    np.testing.assert_allclose(row.v_prev, float(ref.v_prev), rtol=1e-6)
+    assert row.k == 0 and np.isinf(row.stat)
+    # untouched slots keep their empty-slab placeholders
+    assert float(np.asarray(slab.c)[0]) == 1.0
+    assert np.isinf(np.asarray(slab.state.stat)[0])
+
+
+# ------------------------------------------------------------------ #
+# Compile caches: bounded + instrumented                             #
+# ------------------------------------------------------------------ #
+def test_compile_cache_bounded_by_env(monkeypatch):
+    cache = B.make_chunk_stepper
+    cfg = SolverConfig(max_iters=7)
+    specs = [B.BatchedProblemSpec(m=4, n=8 + 2 * i) for i in range(3)]
+
+    monkeypatch.setenv("REPRO_COMPILE_CACHE_SIZE", "2")
+    for s in specs:
+        cache(s, cfg, 5)
+    assert len(cache) <= 2
+    stats = cache.stats()
+    assert stats["maxsize"] == 2
+    assert stats["evictions"] >= 1
+
+    # LRU behaviour: re-requesting the newest entry is a hit...
+    hits0 = cache.stats()["hits"]
+    cache(specs[-1], cfg, 5)
+    assert cache.stats()["hits"] == hits0 + 1
+    # ...the evicted oldest is a miss (rebuilt).
+    misses0 = cache.stats()["misses"]
+    cache(specs[0], cfg, 5)
+    assert cache.stats()["misses"] == misses0 + 1
+
+    monkeypatch.setenv("REPRO_COMPILE_CACHE_SIZE", "not-a-number")
+    assert cache.maxsize() == cache.default_maxsize
+
+    snap = cache_stats()
+    for name in ("batched_solver", "chunk_stepper", "slot_writer"):
+        assert {"hits", "misses", "evictions", "size",
+                "maxsize"} <= set(snap[name])
+
+
+def test_cache_counters_flow_through_serve_telemetry():
+    tele = ServeTelemetry()
+    snap = tele.snapshot()
+    assert "chunk_stepper" in snap["compile_cache"]
+
+
+# ------------------------------------------------------------------ #
+# Telemetry                                                          #
+# ------------------------------------------------------------------ #
+def test_wave_engine_reports_padding_and_occupancy():
+    probs = FAMILY_BATCHES["lasso"]()[:3]
+    cfg = SolverConfig(max_iters=300, tol=1e-6, tau_adapt=False)
+    eng = SolverServeEngine(cfg, max_batch=4)
+    eng.submit([to_request(p) for p in probs])     # 3 → bucket of 4
+
+    assert eng.stats["padded"] == 1
+    assert 0.0 < eng.stats["occupancy"] < 1.0
+    assert eng.stats["padding_waste"] == pytest.approx(0.25)
+    (wave,) = eng.telemetry.waves
+    assert wave["bucket"] == 4 and wave["n_real"] == 3
+    assert wave["occupancy"] == pytest.approx(0.75)
+    assert wave["padding_waste"] + wave["freeze_waste"] < 1.0
+    snap = eng.telemetry.snapshot()
+    assert snap["wave"]["waves"] == 1
+    assert snap["completed"] == 3
+    assert snap["latency_p99"] is not None
+
+
+def test_shared_telemetry_never_collides_request_ids():
+    """One telemetry shared by both engines (the apples-to-apples mode)
+    must keep every request distinct — ids are allocated by the
+    telemetry, not per-engine counters."""
+    probs = FAMILY_BATCHES["lasso"]()[:2]
+    cfg = SolverConfig(max_iters=50, tol=-1.0, tau_adapt=False)
+    tele = ServeTelemetry()
+    wave = SolverServeEngine(cfg, max_batch=2, telemetry=tele)
+    cont = ContinuousSolverEngine(
+        cfg, ServeConfig(slab_capacity=2, chunk_iters=16),
+        telemetry=tele)
+    wave.submit([to_request(p) for p in probs])
+    for p in probs:
+        cont.submit(to_request(p))
+    cont.drain()
+    assert len(tele.requests) == 4
+    assert sorted(r.engine for r in tele.requests.values()) == \
+        ["continuous", "continuous", "wave", "wave"]
+    assert all(r.completed is not None for r in tele.requests.values())
+
+
+def test_wave_submit_backdates_arrivals():
+    probs = FAMILY_BATCHES["lasso"]()[:2]
+    cfg = SolverConfig(max_iters=50, tol=-1.0, tau_adapt=False)
+    eng = SolverServeEngine(cfg, max_batch=2)
+    eng.submit([to_request(p) for p in probs], arrivals=[-3.0, -1.0])
+    waits = sorted(r.queue_wait for r in eng.telemetry.requests.values())
+    assert waits[0] >= 1.0 and waits[1] >= 3.0
+    with pytest.raises(ValueError, match="align"):
+        eng.submit([to_request(probs[0])], arrivals=[0.0, 1.0])
+
+
+def test_telemetry_latency_percentiles_explicit_clock():
+    tele = ServeTelemetry()
+    for i, (arr, adm, done) in enumerate([(0.0, 1.0, 2.0),
+                                          (0.0, 1.0, 3.0),
+                                          (1.0, 1.5, 11.0)]):
+        tele.record_arrival(i, "lasso", "continuous", t=arr)
+        tele.record_admit(i, t=adm)
+        tele.record_completion(i, iters=10, converged=True, t=done)
+    snap = tele.snapshot()
+    assert snap["latency_p50"] == pytest.approx(3.0)
+    assert snap["latency_max"] == pytest.approx(10.0)
+    assert snap["queue_wait_p50"] == pytest.approx(1.0)
+    assert snap["iters_total"] == 30
+
+
+# ------------------------------------------------------------------ #
+# Load generator                                                     #
+# ------------------------------------------------------------------ #
+def test_trace_generators_are_seeded_and_shaped():
+    import benchmarks.serve_load as SL
+
+    t1 = SL.TRACES["poisson"](16, 3)
+    t2 = SL.TRACES["poisson"](16, 3)
+    assert t1 == t2
+    assert all(a.arrival <= b.arrival for a, b in zip(t1, t1[1:]))
+    assert all(0.0 <= t.difficulty <= 1.0 for t in t1)
+
+    burst = SL.TRACES["bursty"](24, 0)
+    assert len({t.arrival for t in burst}) == 2    # 12-request bursts
+
+    rng_uniform = [t.difficulty for t in SL.TRACES["poisson"](400, 1)]
+    rng_pareto = [t.difficulty for t in SL.TRACES["heavy_tail"](400, 1)]
+    assert np.median(rng_pareto) < np.median(rng_uniform)   # mostly easy
+    assert np.max(rng_pareto) > 0.9                         # with a tail
+
+
+@pytest.mark.slow
+def test_serve_load_full_sweep(tmp_path, monkeypatch):
+    """The full trace sweep: continuous must beat the wave engine on the
+    heavy-tail trace (makespan, p99, device work) with solo-equivalent
+    responses — the BENCH_serve.json acceptance block."""
+    import benchmarks.serve_load as SL
+
+    monkeypatch.setattr(SL, "RESULTS", tmp_path)
+    art = SL.main()
+    assert all(art["acceptance"].values()), art["acceptance"]
+    assert (tmp_path / "BENCH_serve.json").exists()
