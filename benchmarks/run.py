@@ -10,12 +10,18 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * fig1 groups  — per-algorithm wall time; derived = time-to-1e-4 rel err
   * batched      — multi-instance engine; derived = warm speedup vs loop
   * ablations    — per-variant wall time; derived = final rel err
+  * serve_load   — continuous vs wave scheduling; derived = speedups
+  * path         — λ-path engine; derived = row-iteration ratio vs cold
   * lm_step      — per-arch train-step time; derived = decode-step time
 
-Full JSON artifacts land in ``results/bench/``; the headline one is
-``BENCH_solvers.json`` — written by ``fig1.main`` — which holds the full
-per-iteration (V, time) trajectories of every run (what Fig. 1 plots), the
-summary rows, and the ``batched`` amortization record.
+Full JSON artifacts land in ``results/bench/`` and every ``BENCH_*.json``
+is aggregated into the CSV: ``BENCH_solvers.json`` (written by
+``fig1.main`` — full per-iteration (V, time) trajectories, summary rows,
+the ``batched`` amortization record), ``BENCH_serve.json``
+(``serve_load.main`` — arrival-trace scheduling races) and
+``BENCH_path.json`` (``path_bench.main`` — regularization-path columns +
+the CV-over-serve scenario).  ``--skip-serve`` / ``--skip-path`` /
+``--skip-lm`` drop the slower sections.
 """
 from __future__ import annotations
 
@@ -34,6 +40,11 @@ def main() -> None:
                     help="instance divisor vs paper size (1 = paper size)")
     ap.add_argument("--max-iters", type=int, default=400)
     ap.add_argument("--skip-lm", action="store_true")
+    ap.add_argument("--skip-serve", action="store_true")
+    ap.add_argument("--skip-path", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the serve/path sections at their "
+                         "seconds-scale CI configuration")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -72,6 +83,36 @@ def main() -> None:
             print(f"ablate_{section}/{r['variant'].replace(' ', '_')},"
                   f"{r['wall_s'] * 1e6 / max(1, r['iters']):.0f},"
                   f"rel={'n/a' if rel is None else f'{rel:.2e}'}")
+
+    if not args.skip_serve:
+        # Continuous-vs-wave scheduling race (writes BENCH_serve.json).
+        from benchmarks import serve_load
+        art = serve_load.main(smoke=args.smoke)
+        for trace, rec in art["traces"].items():
+            s = rec["speedup"]
+            cont = rec["continuous"]
+            wall = cont.get("makespan_s") or 0.0
+            per_req = wall * 1e6 / max(1, cont.get("requests") or 1)
+            print(f"serve/{trace},{per_req:.0f},"
+                  f"makespan_x={s['makespan']} p99_x={s['p99_latency']} "
+                  f"row_iters_x={s['row_iters']}")
+
+    if not args.skip_path:
+        # λ-path engine columns + CV-over-serve (writes BENCH_path.json).
+        from benchmarks import path_bench
+        art = path_bench.main(smoke=args.smoke)
+        acc = art["path"]["accept"]
+        for mode, col in art["path"]["columns"].items():
+            per = col["wall_s"] * 1e6 / max(1, col["row_iters"])
+            print(f"path/{mode},{per:.1f},row_iters={col['row_iters']}")
+        print(f"path/accept,0,ratio={acc['ratio_vs_cold_batched']}x "
+              f"max_dev={acc['max_dev']:.1e} "
+              f"ok={art['accept_ok']}")
+        if "cv" in art:
+            cv = art["cv"]
+            print(f"path/cv,{cv['serve']['wall_s'] * 1e6:.0f},"
+                  f"best_lambda={cv['best_lambda']:.4g} "
+                  f"folds={cv['folds']}")
 
     if not args.skip_lm:
         from benchmarks import lm_step

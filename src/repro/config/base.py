@@ -263,6 +263,13 @@ class ServeConfig:
     # (higher SolveRequest.priority first) | "deadline" (earliest
     # SolveRequest.deadline first; deadline-less requests last).
     policy: str = "fifo"
+    # How many (family × shape) slabs one scheduler tick services, in
+    # round-robin rotation across ticks (0 = all of them).  With > 1
+    # distinct signatures live, the rotation guarantees every slab is
+    # serviced at least once every ceil(n_slabs / slabs_per_tick) ticks
+    # — no signature can starve behind a chatty one, whatever order the
+    # slabs were created in.
+    slabs_per_tick: int = 0
 
 
 @dataclass(frozen=True)

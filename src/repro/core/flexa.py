@@ -98,7 +98,8 @@ def init_state(problem: Problem, x0, cfg: SolverConfig,
 
 
 def flexa_iteration(problem: Problem, cfg: SolverConfig,
-                    tau_base: jnp.ndarray, state: FlexaState):
+                    tau_base: jnp.ndarray, state: FlexaState,
+                    active: jnp.ndarray | None = None):
     """One Algorithm-1 iteration ``state -> (state, info)`` — S.2–S.4 plus
     the §4 τ-controller.
 
@@ -107,11 +108,24 @@ def flexa_iteration(problem: Problem, cfg: SolverConfig,
     (:func:`solve_compiled`), and the batched multi-instance engine
     (``repro.solvers.batched`` vmaps it over a stack of problems, with the
     problem closures rebuilt from per-instance data inside the vmap).
+
+    ``active`` is an optional per-coordinate {0,1} *freeze mask* (the
+    regularization-path engine's safe-screening hook, ``repro.path``):
+    coordinates with ``active == 0`` are excluded from the selection set
+    Sᵏ, never updated, and excluded from the ‖x̂−x‖∞ termination measure —
+    the solver runs on the induced subproblem while the compiled program
+    keeps its full fixed shape.  ``None`` (the default) is bit-identical
+    to the unmasked iteration; a mask of all-ones multiplies by exact
+    fp32 1.0s, so it is bit-identical too.
     """
     x = state.x
     tau = tau_base * state.tau_scale
     grad = problem.grad_f(x)
     d = curvature(problem, tau, cfg.surrogate)
+    if active is not None:
+        active = jnp.asarray(active, jnp.float32)
+        active_b = active if problem.block_size == 1 \
+            else problem.blockify(active)[:, 0]
 
     # (S.2) best response; optionally inexact with the Thm-1(v) schedule.
     if cfg.inexact_alpha1 > 0 and problem.block_size > 1:
@@ -124,13 +138,20 @@ def flexa_iteration(problem: Problem, cfg: SolverConfig,
 
     # (S.3) error bound + selection rule (greedy by default; random/hybrid/
     # cyclic per cfg.selection — see repro.core.selection.make_mask).
+    # Screened-out blocks contribute E = 0, so the greedy threshold ρ·M is
+    # measured over the surviving subproblem, and the final mask multiply
+    # keeps them out of Sᵏ whatever the rule picked.
     E = problem.block_norms(zhat - x)
+    if active is not None:
+        E = E * active_b
     M = jnp.max(E)
     if selection.needs_key(cfg.selection) and not cfg.jacobi:
         key, sub = jax.random.split(state.key)
     else:
         key, sub = state.key, state.key
     mask_b = selection.make_mask(E, cfg, sub, state.k, M=M)
+    if active is not None:
+        mask_b = mask_b * active_b
     mask = mask_b if problem.block_size == 1 \
         else jnp.repeat(mask_b, problem.block_size)
 
@@ -151,7 +172,13 @@ def flexa_iteration(problem: Problem, cfg: SolverConfig,
     n_changes = state.n_tau_changes + increased.astype(jnp.int32) \
         + halve.astype(jnp.int32)
 
-    stat = jnp.max(jnp.abs(zhat - x))  # ‖x̂−x‖∞ termination measure
+    # ‖x̂−x‖∞ termination measure (over surviving coordinates only when a
+    # freeze mask is injected — frozen coordinates are certified by the
+    # screening KKT recheck, not by the solver).
+    step_err = jnp.abs(zhat - x)
+    if active is not None:
+        step_err = step_err * active
+    stat = jnp.max(step_err)
     new_state = FlexaState(
         x=xnew,
         gamma=stepsize.gamma_next(state.gamma, cfg.theta),
@@ -175,24 +202,34 @@ def flexa_iteration(problem: Problem, cfg: SolverConfig,
     return new_state, info
 
 
-def make_step(problem: Problem, cfg: SolverConfig):
-    """Build the jitted Algorithm-1 iteration ``state -> (state, info)``."""
+def make_step(problem: Problem, cfg: SolverConfig, active=None):
+    """Build the jitted Algorithm-1 iteration ``state -> (state, info)``.
+
+    ``active`` optionally bakes a per-coordinate freeze mask into the
+    compiled step (see :func:`flexa_iteration`)."""
     tau_base = _base_tau(problem, cfg)
+    if active is not None:
+        active = jnp.asarray(active, jnp.float32)
 
     @jax.jit
     def step(state: FlexaState):
-        return flexa_iteration(problem, cfg, tau_base, state)
+        return flexa_iteration(problem, cfg, tau_base, state,
+                               active=active)
 
     return step
 
 
 def solve(problem: Problem, x0=None, cfg: SolverConfig | None = None,
-          callback=None) -> FlexaResult:
-    """Python-loop driver with history recording (benchmark path)."""
+          callback=None, active=None) -> FlexaResult:
+    """Python-loop driver with history recording (benchmark path).
+
+    ``active`` restricts the solve to a fixed per-coordinate active set
+    (screening support for ``repro.path``); frozen coordinates keep their
+    ``x0`` value untouched."""
     cfg = cfg or SolverConfig()
     if x0 is None:
         x0 = jnp.zeros((problem.n,), jnp.float32)
-    step = make_step(problem, cfg)
+    step = make_step(problem, cfg, active=active)
     state = init_state(problem, x0, cfg)
 
     hist: dict[str, list] = {k: [] for k in

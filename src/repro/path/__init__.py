@@ -1,0 +1,31 @@
+"""``repro.path`` — warm-started regularization-path engine.
+
+The paper's headline workload is a single Lasso solve; real deployments
+sweep a λ-path for model selection.  This package is the homotopy layer
+over the existing solvers:
+
+* :mod:`repro.path.grid`      — λ_max computation + geometric grids;
+* :mod:`repro.path.screening` — sequential strong rules with the KKT
+  recheck that makes them safe (exact final solutions);
+* :mod:`repro.path.driver`    — :func:`solve_path` (one instance,
+  optionally λ-chunk-batched) and :func:`solve_path_batched` (B
+  same-signature instances in lockstep — the K-fold CV scenario),
+  returning :class:`PathResult`.
+
+The serving counterpart — ``PathRequest`` admitted point-by-point into
+the continuous-batching runtime — lives in ``repro.serve.continuous``.
+See ``docs/paths.md``.
+"""
+from repro.path.driver import (MAX_KKT_ROUNDS, PathResult, solve_path,
+                               solve_path_batched)
+from repro.path.grid import geometric_grid, lambda_max, validate_grid
+from repro.path.screening import (DEFAULT_KKT_SLACK, ScreenReport,
+                                  block_scores, kkt_violations,
+                                  strong_rule_active)
+
+__all__ = [
+    "PathResult", "solve_path", "solve_path_batched", "MAX_KKT_ROUNDS",
+    "geometric_grid", "lambda_max", "validate_grid",
+    "ScreenReport", "block_scores", "kkt_violations",
+    "strong_rule_active", "DEFAULT_KKT_SLACK",
+]

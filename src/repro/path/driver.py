@@ -1,0 +1,448 @@
+"""Homotopy driver: warm-started λ-path solving with safe screening.
+
+``solve_path`` sweeps a decreasing λ-grid (``repro.path.grid``) over one
+problem instance; every point runs through the existing batched engine
+(``repro.solvers.solve_batched`` — B = 1, or B = ``lam_batch`` for
+λ-chunked grids) with
+
+* **warm starts** — point k starts from the solution at point k−1 (the
+  canonical producer of "x0 from a related finished request");
+* **safe screening** — the sequential strong rule
+  (``repro.path.screening``) freezes blocks predicted zero at the new
+  weight via the solver's freeze-mask injection
+  (``flexa_iteration(active=...)``), so the *compiled program keeps its
+  full fixed shape* — one executable serves the whole path, no
+  per-support recompiles — while selection, updates and the termination
+  measure run only on the surviving subproblem;
+* a **KKT recheck** after every screened solve that re-admits violators
+  and re-solves, so every returned solution is exact (strong rules are
+  heuristic; the recheck restores safety).
+
+``solve_path_batched`` runs B instances that share one shape signature
+(the K-fold cross-validation scenario: one fold per instance) down the
+same grid in lockstep — one compiled batched program per point, with
+per-instance warm starts and per-instance screening masks.
+
+Work accounting matches the serve benchmarks: a **device row-iteration**
+is one instance-row advanced one FLEXA iteration (what the device
+actually executed, padding and stragglers included), the deterministic
+currency ``BENCH_serve.json`` and ``BENCH_path.json`` compare in.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.config.base import SolverConfig
+from repro.problems.base import Problem
+from repro.problems.families import get_family, infer_family
+from repro.path.grid import geometric_grid, lambda_max, validate_grid
+from repro.path.screening import (DEFAULT_KKT_SLACK, ScreenReport,
+                                  block_scores, expand_blocks,
+                                  kkt_violations, strong_rule_active)
+from repro.solvers.batched import solve_batched
+
+#: Screening falls back to an unscreened solve after this many KKT
+#: re-admission rounds at one path point (never observed > 2 in anger;
+#: the fallback guarantees exactness whatever the rule did).
+MAX_KKT_ROUNDS = 8
+
+
+@dataclass
+class PathResult:
+    """One solved regularization path (per-λ leading axis P)."""
+    lambdas: np.ndarray         # (P,) decreasing weights
+    x: np.ndarray               # (P, n) exact solutions
+    V: np.ndarray               # (P,) objective F + λ·G at the solution
+    iters: np.ndarray           # (P,) solver iterations spent (KKT rounds
+                                #      included; 0 for certified-trivial
+                                #      points at λ ≥ λ_max)
+    converged: np.ndarray       # (P,) bool
+    support: np.ndarray         # (P,) nonzero blocks of the solution
+    active_blocks: np.ndarray   # (P,) blocks the solver actually ran
+    screened: list = field(default_factory=list)   # per-λ ScreenReport
+    row_iters: int = 0          # Σ device row-iterations over the path
+    lam_max: float = 0.0
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def n_points(self) -> int:
+        return int(self.lambdas.shape[0])
+
+
+def _problem_at(problem: Problem, c: float) -> Problem:
+    """The same instance at regularization weight ``c`` (certificates for
+    the original weight are dropped — they no longer apply)."""
+    return dataclasses.replace(
+        problem, g_weight=float(c), v_star=None, x_star=None,
+        name=f"{problem.name}@c={c:.3g}")
+
+
+def _resolve_grid(problem: Problem, lambdas, n_points: int,
+                  lam_min_ratio: float) -> tuple[np.ndarray, float]:
+    lam_max = lambda_max(problem)
+    if lambdas is None:
+        grid = geometric_grid(lam_max, n_points=n_points,
+                              lam_min_ratio=lam_min_ratio)
+    else:
+        grid = validate_grid(lambdas)
+    return grid, lam_max
+
+
+def solve_path(problem: Problem, lambdas=None, *, n_points: int = 20,
+               lam_min_ratio: float = 0.01,
+               cfg: SolverConfig | None = None,
+               warm: bool = True, screen: bool = True,
+               kkt_slack: float = DEFAULT_KKT_SLACK,
+               lam_batch: int = 1) -> PathResult:
+    """Solve a decreasing λ-grid for one lasso/group-lasso instance.
+
+    Every point (and every KKT re-admission round) runs through the
+    *batched* engine (``repro.solvers.solve_batched``) with B = 1 or B =
+    ``lam_batch`` rows: the regularization weight, warm start and freeze
+    mask are all *arguments* of the compiled program, so ONE executable
+    (cached on the shape signature) serves the entire path — no
+    per-support, per-λ recompiles.
+
+    Parameters
+    ----------
+    problem       : template instance; its ``g_weight`` is overridden per
+                    grid point.
+    lambdas       : explicit decreasing grid, or ``None`` for a geometric
+                    ``n_points`` × ``lam_min_ratio`` grid from λ_max.
+    warm          : warm-start each point from the previous solution
+                    (``False`` = cold: every point starts at zero — the
+                    baseline column of ``BENCH_path.json``).
+    screen        : sequential strong rule + KKT recheck (needs a
+                    screenable family; exactness is restored by the
+                    recheck, so final solutions are identical to
+                    unscreened solves up to solver tolerance).
+    lam_batch     : > 1 solves the grid in consecutive chunks of this many
+                    λ-points through ONE ``solve_batched`` program per
+                    chunk (all points of a chunk warm-start and screen
+                    against the chunk's anchor — the last solved point
+                    before it), trading warm-start freshness for device
+                    parallelism.  ``lam_batch = P`` with ``warm=False,
+                    screen=False`` is exactly the *cold batched grid*:
+                    the whole path as one wave, the way the pre-path
+                    engines solve a known λ-grid — its device
+                    row-iteration count (P × slowest point, wave freeze
+                    waste included) is the baseline ``BENCH_path.json``
+                    gates against.
+
+    Note on randomized selection rules: the batched engine keys each
+    row's PRNG stream by its batch index, so random/hybrid trajectories
+    differ from a solo ``solve()`` of the same point (deterministic rules
+    — the default greedy — are identical).
+    """
+    cfg = cfg or SolverConfig()
+    family = infer_family(problem)
+    fam = get_family(family)
+    if screen and not fam.screenable:
+        raise ValueError(
+            f"family {family!r} has no screening hook; call with "
+            "screen=False or register ProblemFamily.screen_scores")
+    if lam_batch < 1:
+        raise ValueError("lam_batch must be >= 1")
+
+    grid, lam_max = _resolve_grid(problem, lambdas, n_points,
+                                  lam_min_ratio)
+    n, bs = problem.n, problem.block_size
+    n_blocks = problem.n_blocks
+    P = grid.shape[0]
+
+    xs = np.zeros((P, n), np.float32)
+    V = np.zeros(P); iters = np.zeros(P, np.int64)
+    conv = np.zeros(P, bool)
+    active_ct = np.zeros(P, np.int64)
+    screened: list[ScreenReport] = []
+    row_iters = 0
+
+    # The certified anchor: x(λ_max) = 0 exactly (definition of λ_max).
+    c_prev = lam_max
+    x_prev = np.zeros(n, np.float32)
+    scores_prev = (block_scores(fam, _problem_at(problem, lam_max),
+                                x_prev) if screen else None)
+
+    t0 = time.perf_counter()
+    k = 0
+    while k < P:
+        # Trivial points: every c ≥ λ_max has the exact solution 0.
+        if grid[k] >= lam_max * (1.0 - 1e-12):
+            ck = float(grid[k])
+            pk = _problem_at(problem, ck)
+            xs[k] = 0.0
+            V[k] = float(pk.v(jnp.zeros(n, jnp.float32)))
+            conv[k] = True
+            active_ct[k] = n_blocks
+            screened.append(ScreenReport(n_blocks=n_blocks,
+                                         screened_out=0))
+            c_prev, x_prev = ck, xs[k]
+            # scores at 0 are λ-independent for these families (x = 0),
+            # so scores_prev stays valid.
+            k += 1
+            continue
+
+        chunk = list(range(k, min(k + lam_batch, P)))
+        out = _solve_chunk(problem, fam, grid[chunk], c_prev,
+                           x_prev, scores_prev, cfg, warm=warm,
+                           screen=screen, kkt_slack=kkt_slack)
+        for j, kk in enumerate(chunk):
+            xs[kk] = out["x"][j]
+            V[kk] = out["V"][j]
+            iters[kk] = out["iters"][j]
+            conv[kk] = out["converged"][j]
+            active_ct[kk] = out["active_blocks"][j]
+            screened.append(out["reports"][j])
+        row_iters += out["row_iters"]
+        c_prev = float(grid[chunk[-1]])
+        x_prev = xs[chunk[-1]]
+        scores_prev = out["scores_last"]
+        k = chunk[-1] + 1
+
+    support = np.array([
+        int(np.count_nonzero(
+            np.linalg.norm(xs[p].reshape(n_blocks, bs), axis=-1)))
+        for p in range(P)], np.int64)
+    return PathResult(
+        lambdas=grid, x=xs, V=V, iters=iters, converged=conv,
+        support=support, active_blocks=active_ct, screened=screened,
+        row_iters=int(row_iters), lam_max=lam_max,
+        meta={"family": family, "warm": warm, "screen": screen,
+              "lam_batch": lam_batch,
+              "wall_s": time.perf_counter() - t0})
+
+
+def _screen_mask(fam, scores_prev, c_new, c_prev, x_warm, n_blocks, bs,
+                 screen: bool) -> np.ndarray:
+    if not screen:
+        return np.ones(n_blocks, np.float64)
+    warm_norms = np.linalg.norm(
+        np.asarray(x_warm, np.float64).reshape(n_blocks, bs), axis=-1)
+    return strong_rule_active(scores_prev, c_new, c_prev,
+                              warm_block_norms=warm_norms)
+
+
+def _kkt_round(fam, probs, cs, x_hat, active, rounds, violations,
+               kkt_slack):
+    """One KKT recheck round over a batch of solved points.
+
+    Computes the per-instance screening scores at the solutions, flags
+    frozen violators, and applies the shared re-admission policy
+    (re-admit violators; after :data:`MAX_KKT_ROUNDS` rounds fall back
+    to the full active set).  Mutates ``active``/``rounds``/
+    ``violations`` in place and returns ``(scores, done)`` — ``done``
+    True when no instance violates and the chunk may be accepted.  The
+    single definition all KKT loops share (sequential, lockstep; the
+    serve engine's event-driven variant mirrors it via the same
+    screening primitives and round cap).
+    """
+    B = len(probs)
+    scores = np.stack([block_scores(fam, probs[i], x_hat[i])
+                       for i in range(B)])
+    viol = np.stack([
+        kkt_violations(scores[i], active[i], float(cs[i]),
+                       slack=kkt_slack) for i in range(B)])
+    n_viol = viol.sum(axis=1).astype(int)
+    if not n_viol.any():
+        return scores, True
+    rounds[n_viol > 0] += 1
+    violations += n_viol
+    np.maximum(active, viol, out=active)
+    active[rounds >= MAX_KKT_ROUNDS] = 1.0
+    return scores, False
+
+
+def _solve_chunk(problem, fam, cs, c_prev, x_prev, scores_prev, cfg, *,
+                 warm, screen, kkt_slack) -> dict:
+    """A chunk of λ-points solved as ONE batched program (B = len(cs);
+    B = 1 is the plain sequential-homotopy step).
+
+    All points screen/warm-start against the chunk anchor (c_prev,
+    x_prev) — the sequential strong rule remains valid for every point
+    because each cᵢ < c_prev; the bound is just looser for the far end of
+    the chunk than point-by-point referencing would give.
+    """
+    n, bs, n_blocks = problem.n, problem.block_size, problem.n_blocks
+    B = len(cs)
+    probs = [_problem_at(problem, float(c)) for c in cs]
+    active = np.stack([
+        _screen_mask(fam, scores_prev, float(c), c_prev, x_prev,
+                     n_blocks, bs, screen) for c in cs])
+    screened_out0 = (n_blocks - active.sum(axis=1)).astype(int)
+    x_warm = (np.asarray(x_prev, np.float32) if warm
+              else np.zeros(n, np.float32))
+    x0 = np.broadcast_to(x_warm, (B, n)).copy()
+    total_iters = np.zeros(B, np.int64)
+    rounds = np.zeros(B, np.int64)
+    violations = np.zeros(B, np.int64)
+    row_iters = 0
+    while True:
+        mask_c = np.stack([expand_blocks(active[i], bs)
+                           for i in range(B)])
+        r = solve_batched(probs, x0=x0 * mask_c, cfg=cfg,
+                          active=jnp.asarray(mask_c) if screen else None)
+        it = np.asarray(r.iters, np.int64)
+        total_iters += it
+        # The batched while_loop runs every row until the slowest one
+        # stops — that is what the device executed.
+        row_iters += int(it.max()) * B
+        x_hat = np.asarray(r.x, np.float32)
+        if not screen:
+            scores = None
+            break
+        scores, done = _kkt_round(fam, probs, cs, x_hat, active, rounds,
+                                  violations, kkt_slack)
+        if done:
+            break
+        x0 = x_hat
+    return {
+        "x": list(x_hat),
+        "V": [float(probs[i].v(jnp.asarray(x_hat[i]))) for i in range(B)],
+        "iters": list(total_iters),
+        "converged": list(np.asarray(r.converged, bool)),
+        "active_blocks": [int(a.sum()) for a in active],
+        "reports": [ScreenReport(n_blocks=n_blocks,
+                                 screened_out=int(screened_out0[i]),
+                                 kkt_rounds=int(rounds[i]),
+                                 violations=int(violations[i]))
+                    for i in range(B)],
+        "row_iters": row_iters,
+        "scores_last": None if scores is None else scores[-1],
+    }
+
+
+def solve_path_batched(problems, lambdas=None, *, n_points: int = 20,
+                       lam_min_ratio: float = 0.01,
+                       cfg: SolverConfig | None = None,
+                       warm: bool = True, screen: bool = True,
+                       kkt_slack: float = DEFAULT_KKT_SLACK
+                       ) -> list[PathResult]:
+    """Sweep ONE λ-grid over B same-signature instances in lockstep.
+
+    The cross-validation workhorse: each fold is one instance; every grid
+    point is one ``solve_batched`` call over all folds (per-fold warm
+    start and screening mask), so the whole K-fold path sweep reuses a
+    single compiled program.  The shared grid is derived from the
+    *largest* per-instance λ_max, so every fold's path starts at a
+    certified zero solution.  Returns one :class:`PathResult` per
+    instance; ``row_iters`` (whole-sweep device total) is recorded on
+    each result's ``meta["sweep_row_iters"]`` as well as split per point.
+    """
+    if not problems:
+        raise ValueError("need at least one instance")
+    cfg = cfg or SolverConfig()
+    family = infer_family(problems[0])
+    fam = get_family(family)
+    if screen and not fam.screenable:
+        raise ValueError(f"family {family!r} has no screening hook")
+    B = len(problems)
+    n, bs = problems[0].n, problems[0].block_size
+    n_blocks = problems[0].n_blocks
+
+    lam_maxes = [lambda_max(p) for p in problems]
+    lam_max = max(lam_maxes)
+    if lambdas is None:
+        grid = geometric_grid(lam_max, n_points=n_points,
+                              lam_min_ratio=lam_min_ratio)
+    else:
+        grid = validate_grid(lambdas)
+    P = grid.shape[0]
+
+    xs = np.zeros((B, P, n), np.float32)
+    V = np.zeros((B, P)); iters = np.zeros((B, P), np.int64)
+    conv = np.zeros((B, P), bool)
+    active_ct = np.zeros((B, P), np.int64)
+    reports: list[list[ScreenReport]] = [[] for _ in range(B)]
+    sweep_row_iters = 0
+    per_point_rows = np.zeros(P, np.int64)
+
+    c_prev = lam_max
+    x_prev = np.zeros((B, n), np.float32)
+    scores_prev = (np.stack([
+        block_scores(fam, _problem_at(problems[i], lam_max), x_prev[i])
+        for i in range(B)]) if screen else None)
+
+    t0 = time.perf_counter()
+    for k in range(P):
+        ck = float(grid[k])
+        probs_k = [_problem_at(problems[i], ck) for i in range(B)]
+        # A fold whose own λ_max is below ck has the certified solution 0;
+        # its mask is emptied below (the solver confirms it in a handful
+        # of iterations from x0 = 0 rather than being mis-certified).
+        trivial = np.array([ck >= lam_maxes[i] * (1.0 - 1e-12)
+                            for i in range(B)])
+        active = np.stack([
+            np.ones(n_blocks, np.float64) if not screen else
+            _screen_mask(fam, scores_prev[i], ck, c_prev, x_prev[i],
+                         n_blocks, bs, screen)
+            if not trivial[i] else np.zeros(n_blocks, np.float64)
+            for i in range(B)])
+        # A fully-screened instance (trivial point) still needs a
+        # nonempty mask for the solver to terminate on: give it one block
+        # — it converges immediately at x = 0.
+        empty = active.sum(axis=1) == 0
+        active[empty, 0] = 1.0
+        screened_out0 = (n_blocks - active.sum(axis=1)).astype(int)
+
+        x0 = (x_prev if warm else np.zeros((B, n), np.float32)).copy()
+        total_iters = np.zeros(B, np.int64)
+        rounds = np.zeros(B, np.int64)
+        violations = np.zeros(B, np.int64)
+        while True:
+            mask_c = np.stack([expand_blocks(active[i], bs)
+                               for i in range(B)])
+            r = solve_batched(probs_k, x0=x0 * mask_c, cfg=cfg,
+                              active=jnp.asarray(mask_c)
+                              if screen else None)
+            it = np.asarray(r.iters, np.int64)
+            total_iters += it
+            sweep_row_iters += int(it.max()) * B
+            per_point_rows[k] += int(it.max()) * B
+            x_hat = np.asarray(r.x, np.float32)
+            if not screen:
+                scores = None
+                break
+            scores, done = _kkt_round(fam, probs_k, [ck] * B, x_hat,
+                                      active, rounds, violations,
+                                      kkt_slack)
+            if done:
+                break
+            x0 = x_hat
+
+        xs[:, k] = x_hat
+        iters[:, k] = total_iters
+        conv[:, k] = np.asarray(r.converged, bool)
+        active_ct[:, k] = active.sum(axis=1).astype(int)
+        for i in range(B):
+            V[i, k] = float(probs_k[i].v(jnp.asarray(x_hat[i])))
+            reports[i].append(ScreenReport(
+                n_blocks=n_blocks, screened_out=int(screened_out0[i]),
+                kkt_rounds=int(rounds[i]),
+                violations=int(violations[i])))
+        c_prev = ck
+        x_prev = x_hat
+        scores_prev = scores
+
+    wall = time.perf_counter() - t0
+    results = []
+    for i in range(B):
+        supp = np.array([
+            int(np.count_nonzero(np.linalg.norm(
+                xs[i, p].reshape(n_blocks, bs), axis=-1)))
+            for p in range(P)], np.int64)
+        results.append(PathResult(
+            lambdas=grid, x=xs[i], V=V[i], iters=iters[i],
+            converged=conv[i], support=supp, active_blocks=active_ct[i],
+            screened=reports[i],
+            row_iters=int(per_point_rows.sum()),
+            lam_max=lam_maxes[i],
+            meta={"family": family, "warm": warm, "screen": screen,
+                  "instances": B, "instance": i,
+                  "sweep_row_iters": int(sweep_row_iters),
+                  "wall_s": wall}))
+    return results

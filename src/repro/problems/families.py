@@ -44,6 +44,18 @@ class ProblemFamily:
     data_keys: tuple            # Problem.data arrays stacked per instance
     make_fns: Callable          # (*arrays, col_sq=None) -> (f, grad, curv)
     curv_scale: float           # diag_curv == curv_scale * col_sq
+    # Safe-screening hook (``repro.path.screening``): maps the gradient of
+    # F at a reference point to the per-block dual-correlation scores the
+    # sequential strong rule thresholds against the regularization weight
+    # (KKT: a block may be zero at weight c only if its score ≤ c).  None
+    # ⇒ the family opts out of screening (the unit-slope assumption of
+    # the strong rule has not been checked for it) and the path engine
+    # solves every block at every λ.
+    screen_scores: Callable | None = None   # (grad, block_size) -> (n_blocks,)
+
+    @property
+    def screenable(self) -> bool:
+        return self.screen_scores is not None
 
     def col_sq(self, *arrays) -> jnp.ndarray:
         """‖column‖² of the (m, n) design matrix (arrays[0]) — traceable."""
@@ -79,14 +91,32 @@ def available_families() -> tuple[str, ...]:
     return tuple(sorted(_FAMILIES))
 
 
+def _lasso_screen_scores(grad, block_size: int):
+    """ℓ1 correlation bound: |∇ⱼF(x)| = |2 aⱼᵀ(Ax − b)| per coordinate.
+
+    KKT for  min ‖Ax−b‖² + c‖x‖₁:  xⱼ = 0 is optimal only if |∇ⱼF| ≤ c,
+    so this is exactly the score the strong rule / KKT recheck threshold
+    against c (the repo's unnormalized factor-2 convention is absorbed
+    into the gradient itself)."""
+    return jnp.abs(grad)
+
+
+def _group_lasso_screen_scores(grad, block_size: int):
+    """Group-norm bound: ‖∇_g F(x)‖₂ per block (block KKT: a zero group is
+    optimal only if its gradient group-norm is ≤ c)."""
+    return jnp.linalg.norm(grad.reshape(-1, block_size), axis=-1)
+
+
 register_family(ProblemFamily(
     name="lasso", data_keys=("A", "b"),
-    make_fns=quadratic_fns, curv_scale=2.0))
+    make_fns=quadratic_fns, curv_scale=2.0,
+    screen_scores=_lasso_screen_scores))
 # Same smooth part as lasso; the group structure lives in the G side of the
 # shape signature (block_size > 1, g_kind="group_l2").
 register_family(ProblemFamily(
     name="group_lasso", data_keys=("A", "b"),
-    make_fns=quadratic_fns, curv_scale=2.0))
+    make_fns=quadratic_fns, curv_scale=2.0,
+    screen_scores=_group_lasso_screen_scores))
 register_family(ProblemFamily(
     name="logreg", data_keys=("Z",),
     make_fns=logistic_fns, curv_scale=0.25))

@@ -10,7 +10,7 @@
   (``repro.serve.metrics``).
 """
 from repro.serve.continuous import (AdmissionQueue, ContinuousSolverEngine,
-                                    QueueEntry)
+                                    PathRequest, QueueEntry)
 from repro.serve.engine import (GenerationResult, ServeEngine, SolveRequest,
                                 SolveResponse, SolverServeEngine)
 from repro.serve.metrics import RequestTrace, ServeTelemetry
@@ -19,5 +19,6 @@ __all__ = [
     "GenerationResult", "ServeEngine",
     "SolveRequest", "SolveResponse", "SolverServeEngine",
     "ContinuousSolverEngine", "AdmissionQueue", "QueueEntry",
+    "PathRequest",
     "RequestTrace", "ServeTelemetry",
 ]

@@ -53,6 +53,12 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.config.base import ServeConfig, SolverConfig
+from repro.path.driver import MAX_KKT_ROUNDS
+from repro.path.grid import geometric_grid, lambda_max, validate_grid
+from repro.path.screening import (DEFAULT_KKT_SLACK, block_scores,
+                                  expand_blocks, kkt_violations,
+                                  strong_rule_active)
+from repro.problems.families import build_problem, get_family
 from repro.serve.engine import SolveRequest, SolveResponse, validate_request
 from repro.serve.metrics import ServeTelemetry
 from repro.solvers.batched import (BatchedProblemSpec, make_chunk_stepper,
@@ -125,7 +131,8 @@ class _SlotSlab:
     """
 
     def __init__(self, spec: BatchedProblemSpec, cfg: SolverConfig,
-                 serve: ServeConfig, telemetry: ServeTelemetry):
+                 serve: ServeConfig, telemetry: ServeTelemetry,
+                 resolve_x0=None):
         self.spec = spec
         self.cfg = cfg
         self.capacity = int(serve.slab_capacity)
@@ -134,6 +141,9 @@ class _SlotSlab:
         self.queue = AdmissionQueue(serve.policy)
         self.slab = slab_alloc(spec, cfg, self.capacity)
         self._chunk = make_chunk_stepper(spec, cfg, self.chunk_iters)
+        # warm_from resolver: req_id -> finished solution (None = still
+        # in flight, defer admission).  Injected by the engine.
+        self._resolve_x0 = resolve_x0 or (lambda req_id: None)
         # Host mirrors: stop == "do not advance" (empty or finished slot).
         self.stop = np.ones(self.capacity, bool)
         self.active = np.zeros(self.capacity, bool)
@@ -146,6 +156,7 @@ class _SlotSlab:
                             for shp in slab_data_shapes(spec)]
         self._stage_c = np.zeros(S, np.float32)
         self._stage_x0 = np.zeros((S, spec.n), np.float32)
+        self._stage_active = np.ones((S, spec.n), np.float32)
         self._stage_ids = np.zeros(S, np.int32)
         self._admit = np.zeros(S, bool)
         # Device-resident copy of the last shipped stage, reused on
@@ -153,7 +164,8 @@ class _SlotSlab:
         self._payload = (tuple(jnp.asarray(a) for a in self._stage_data),
                          jnp.asarray(self._stage_c),
                          jnp.asarray(self._stage_x0),
-                         jnp.asarray(self._stage_ids))
+                         jnp.asarray(self._stage_ids),
+                         jnp.asarray(self._stage_active))
         self._no_admit = jnp.zeros(S, bool)
 
     # ------------------------------------------------------------- #
@@ -165,15 +177,17 @@ class _SlotSlab:
     def pending(self) -> int:
         return len(self.queue) + self.live
 
-    def _stage(self, slot: int, entry: QueueEntry, audit: list,
+    def _stage(self, slot: int, entry: QueueEntry, x0, audit: list,
                tick: int) -> None:
         r = entry.request
         for buf, arr in zip(self._stage_data,
                             r.data_arrays(self.spec)):
             buf[slot] = np.asarray(arr, np.float32)
         self._stage_c[slot] = r.c
-        self._stage_x0[slot] = 0.0 if r.x0 is None \
-            else np.asarray(r.x0, np.float32)
+        self._stage_x0[slot] = 0.0 if x0 is None \
+            else np.asarray(x0, np.float32)
+        self._stage_active[slot] = 1.0 if r.active_mask is None \
+            else np.asarray(r.active_mask, np.float32)
         self._stage_ids[slot] = entry.req_id
         self._admit[slot] = True
         self.active[slot] = True
@@ -186,10 +200,29 @@ class _SlotSlab:
         self._open_audit[entry.req_id] = rec
 
     def backfill(self, audit: list, tick: int) -> None:
-        for slot in np.flatnonzero(~self.active):
-            if not len(self.queue):
-                break
-            self._stage(int(slot), self.queue.pop(), audit, tick)
+        """Admit queued requests into free slots.
+
+        A request with ``warm_from`` pointing at a still-running request
+        is *deferred*: held aside for this tick and re-queued, so later
+        admissible requests can take the slot (no head-of-line blocking).
+        ``warm_from`` always references an earlier request id, so the
+        dependency graph is acyclic and deferral can never deadlock.
+        """
+        free = [int(s) for s in np.flatnonzero(~self.active)]
+        held: list[QueueEntry] = []
+        while free and len(self.queue):
+            entry = self.queue.pop()
+            r = entry.request
+            if r.warm_from is not None:
+                x0 = self._resolve_x0(r.warm_from)
+                if x0 is None:          # dependency still in flight
+                    held.append(entry)
+                    continue
+            else:
+                x0 = r.x0
+            self._stage(free.pop(0), entry, x0, audit, tick)
+        for entry in held:
+            self.queue.push(entry)
 
     def step(self, tick: int) -> list[tuple[int, SolveResponse]]:
         """One fused tick (admit + chunk); returns evictions."""
@@ -206,15 +239,16 @@ class _SlotSlab:
                 tuple(jnp.asarray(a.copy()) for a in self._stage_data),
                 jnp.asarray(self._stage_c.copy()),
                 jnp.asarray(self._stage_x0.copy()),
-                jnp.asarray(self._stage_ids.copy()))
+                jnp.asarray(self._stage_ids.copy()),
+                jnp.asarray(self._stage_active.copy()))
             admit = jnp.asarray(self._admit.copy())
             self._admit[:] = False
         else:
             admit = self._no_admit
-        new_data, new_c, new_x0, new_ids = self._payload
+        new_data, new_c, new_x0, new_ids, new_active = self._payload
         self.slab, stop_dev = self._chunk(
             self.slab, jnp.asarray(self.stop.copy()), admit,
-            new_data, new_c, new_x0, new_ids)
+            new_data, new_c, new_x0, new_ids, new_active)
         # The one per-chunk host sync (copy: the host mirror is mutated).
         stop = np.array(stop_dev)
         wall = time.perf_counter() - t0
@@ -246,6 +280,169 @@ class _SlotSlab:
                 self.slot_req[slot] = -1
         self.stop = stop
         return out
+
+
+@dataclass
+class PathRequest:
+    """A whole regularization path as ONE serve-level request.
+
+    The engine admits the path point by point: each λ is a normal
+    :class:`SolveRequest` warm-started from the previous point's
+    solution, with the sequential strong rule (``repro.path.screening``)
+    frozen in via ``active_mask`` and a KKT recheck on every completion
+    that re-admits violators before the path advances — the serving
+    counterpart of ``repro.path.solve_path``, and the ROADMAP's
+    "warm-start admission from a related finished request" made real.
+    Between points the path occupies **zero** slots, so K concurrent CV
+    folds interleave through one slab like any other traffic.
+
+    ``lambdas`` may be ``None`` (a geometric ``n_points`` ×
+    ``lam_min_ratio`` grid from the instance's λ_max) or an explicit
+    strictly-decreasing grid.  Quadratic families only (lasso /
+    group_lasso — the screenable ones).
+    """
+    A: np.ndarray
+    b: np.ndarray
+    lambdas: object = None      # explicit decreasing grid, or None
+    n_points: int = 20
+    lam_min_ratio: float = 0.01
+    block_size: int = 1
+    screen: bool = True
+    kkt_slack: float = DEFAULT_KKT_SLACK
+    priority: int = 0
+    deadline: float | None = None
+
+    @property
+    def family(self) -> str:
+        return "lasso" if self.block_size == 1 else "group_lasso"
+
+
+class _PathState:
+    """Engine-side progress of one in-flight :class:`PathRequest`."""
+
+    def __init__(self, path_id: int, preq: PathRequest):
+        self.path_id = path_id
+        self.preq = preq
+        fam = get_family(preq.family)
+        if preq.screen and not fam.screenable:
+            raise ValueError(
+                f"family {preq.family!r} has no screening hook")
+        self.fam = fam
+        n = int(preq.A.shape[1])
+        self.n = n
+        self.block_size = int(preq.block_size)
+        self.n_blocks = n // self.block_size
+        # Host-side template problem (only ``grad_f``/``block_norms`` are
+        # used — for λ_max and the screening scores).
+        self.problem = build_problem(
+            preq.family,
+            (jnp.asarray(preq.A, jnp.float32),
+             jnp.asarray(preq.b, jnp.float32)),
+            1.0, n=n, block_size=self.block_size,
+            g_kind="l1" if self.block_size == 1 else "group_l2")
+        self.lam_max = lambda_max(self.problem)
+        if preq.lambdas is None:
+            self.grid = geometric_grid(self.lam_max,
+                                       n_points=preq.n_points,
+                                       lam_min_ratio=preq.lam_min_ratio)
+        else:
+            self.grid = validate_grid(preq.lambdas)
+        P = self.grid.shape[0]
+        self.k = 0                              # next/current point index
+        self.c_prev = self.lam_max
+        self.x_prev = np.zeros(n, np.float32)
+        self.scores_prev = block_scores(self.fam, self.problem,
+                                        self.x_prev)
+        self.active_b = np.ones(self.n_blocks, np.float64)
+        self.kkt_rounds = 0
+        self.x = np.zeros((P, n), np.float32)
+        self.iters = np.zeros(P, np.int64)
+        self.converged = np.zeros(P, bool)
+        self.screened_out = np.zeros(P, np.int64)
+        self.kkt_rounds_per_point = np.zeros(P, np.int64)
+        self.req_ids: list[int] = []
+        self.done = False
+
+    # ------------------------------------------------------------- #
+    def next_request(self) -> SolveRequest:
+        """The SolveRequest for the current point (index ``k``), screened
+        against and warm-started from the previous point's solution."""
+        ck = float(self.grid[self.k])
+        if self.preq.screen and ck < self.c_prev:
+            warm_norms = np.linalg.norm(
+                self.x_prev.astype(np.float64).reshape(
+                    self.n_blocks, self.block_size), axis=-1)
+            self.active_b = strong_rule_active(
+                self.scores_prev, ck, self.c_prev,
+                warm_block_norms=warm_norms)
+        else:
+            self.active_b = np.ones(self.n_blocks, np.float64)
+        self.kkt_rounds = 0
+        mask = expand_blocks(self.active_b, self.block_size)
+        return SolveRequest(
+            A=self.preq.A, b=self.preq.b, c=ck,
+            block_size=self.block_size,
+            x0=(self.x_prev * mask).astype(np.float32),
+            active_mask=mask if self.preq.screen else None,
+            priority=self.preq.priority, deadline=self.preq.deadline)
+
+    def on_completion(self, resp: SolveResponse
+                      ) -> SolveRequest | None:
+        """Digest one finished point; return the follow-up request (a KKT
+        re-solve of the same point, or the next λ) — None if the path is
+        complete."""
+        ck = float(self.grid[self.k])
+        x_hat = np.asarray(resp.x, np.float32)
+        # Scores at the solution (∇F only — λ-independent) double as the
+        # next point's screening input and this point's KKT evidence.
+        scores = block_scores(self.fam, self.problem, x_hat)
+        if self.preq.screen:
+            viol = kkt_violations(scores, self.active_b, ck,
+                                  slack=self.preq.kkt_slack)
+            if viol.any():
+                self.kkt_rounds += 1
+                if self.kkt_rounds >= MAX_KKT_ROUNDS:
+                    self.active_b = np.ones(self.n_blocks, np.float64)
+                else:
+                    self.active_b = np.maximum(self.active_b, viol)
+                self.kkt_rounds_per_point[self.k] = self.kkt_rounds
+                mask = expand_blocks(self.active_b, self.block_size)
+                self.iters[self.k] += int(resp.iters)
+                return SolveRequest(
+                    A=self.preq.A, b=self.preq.b, c=ck,
+                    block_size=self.block_size,
+                    x0=(x_hat * mask).astype(np.float32),
+                    active_mask=mask,
+                    priority=self.preq.priority,
+                    deadline=self.preq.deadline)
+        # Point accepted.
+        self.x[self.k] = x_hat
+        self.iters[self.k] += int(resp.iters)
+        self.converged[self.k] = bool(resp.converged)
+        self.screened_out[self.k] = self.n_blocks - int(
+            self.active_b.sum())
+        self.c_prev = ck
+        self.x_prev = x_hat
+        self.scores_prev = scores
+        self.k += 1
+        if self.k >= self.grid.shape[0]:
+            self.done = True
+            return None
+        return self.next_request()
+
+    def result(self) -> dict:
+        return {
+            "path_id": self.path_id,
+            "lambdas": self.grid.copy(),
+            "lam_max": float(self.lam_max),
+            "x": self.x.copy(),
+            "iters": self.iters.copy(),
+            "converged": self.converged.copy(),
+            "screened_out": self.screened_out.copy(),
+            "kkt_rounds": self.kkt_rounds_per_point.copy(),
+            "req_ids": list(self.req_ids),
+            "done": self.done,
+        }
 
 
 class ContinuousSolverEngine:
@@ -284,11 +481,18 @@ class ContinuousSolverEngine:
         self.telemetry = telemetry or ServeTelemetry()
         self._slabs: dict[BatchedProblemSpec, _SlotSlab] = {}
         self._responses: dict[int, SolveResponse] = {}
+        self._spec_of: dict[int, BatchedProblemSpec] = {}
         #: Flat audit log of slot assignments (one record per admission,
         #: closed at eviction) — the substrate of the no-double-booking
         #: and determinism property tests.
         self.audit: list[dict] = []
         self._tick = 0
+        # Round-robin cursor over slabs (multi-signature fairness).
+        self._rr = 0
+        # In-flight regularization paths (PathRequest).
+        self._paths: dict[int, _PathState] = {}
+        self._path_of_req: dict[int, int] = {}
+        self._path_ids = itertools.count()
 
     # ------------------------------------------------------------- #
     @property
@@ -301,34 +505,102 @@ class ContinuousSolverEngine:
         """Enqueue one request; returns its request id."""
         spec = request.spec
         validate_request(None, request, spec)
+        if request.warm_from is not None:
+            ref_spec = self._spec_of.get(request.warm_from)
+            if ref_spec is None:
+                raise ValueError(
+                    f"warm_from={request.warm_from}: unknown request id "
+                    "(must reference an earlier request of this engine)")
+            if ref_spec != spec:
+                raise ValueError(
+                    f"warm_from={request.warm_from}: signature mismatch "
+                    f"({ref_spec} vs {spec}) — a warm start only makes "
+                    "sense within one (family × shape) signature")
         # Ids come from the telemetry so a telemetry shared between
         # engines (apples-to-apples comparisons) never collides.
         req_id = self.telemetry.next_request_id()
         t = self.telemetry.now() if arrival is None else arrival
         self.telemetry.record_arrival(req_id, spec.family, "continuous",
                                       t=t)
+        self._spec_of[req_id] = spec
         slab = self._slabs.get(spec)
         if slab is None:
             slab = self._slabs[spec] = _SlotSlab(
-                spec, self.cfg, self.serve, self.telemetry)
+                spec, self.cfg, self.serve, self.telemetry,
+                resolve_x0=self._warm_solution)
         slab.queue.push(QueueEntry(
             req_id=req_id, request=request, arrival=t,
             priority=request.priority, deadline=request.deadline))
         return req_id
 
+    def _warm_solution(self, req_id: int):
+        """x0 for a ``warm_from`` admission (None = still in flight)."""
+        resp = self._responses.get(req_id)
+        return None if resp is None else resp.x
+
+    def submit_path(self, preq: PathRequest, *,
+                    arrival: float | None = None) -> int:
+        """Enqueue a whole λ-path; returns its *path id*.
+
+        Only the first λ-point is submitted now; each completion triggers
+        the KKT recheck and then the next point's warm-started, screened
+        admission (all inside :meth:`step`).  Progress/result:
+        :meth:`path_result`.
+        """
+        path_id = next(self._path_ids)
+        st = _PathState(path_id, preq)
+        self._paths[path_id] = st
+        req_id = self.submit(st.next_request(), arrival=arrival)
+        st.req_ids.append(req_id)
+        self._path_of_req[req_id] = path_id
+        return path_id
+
+    def path_result(self, path_id: int) -> dict:
+        """Snapshot of one path's progress (``done``, per-λ solutions,
+        iterations, screening counters, request ids)."""
+        return self._paths[path_id].result()
+
     def step(self) -> list[int]:
-        """One scheduler tick over every slab: backfill → chunk → evict.
+        """One scheduler tick: backfill → chunk → evict, over the slabs
+        this tick services.
+
+        Slabs are visited in round-robin rotation; with
+        ``ServeConfig.slabs_per_tick = k > 0`` only k slabs are serviced
+        per tick (every slab is reached within ⌈n_slabs/k⌉ ticks — the
+        fairness guarantee the starvation test pins).  Completions
+        belonging to a :class:`PathRequest` trigger the KKT recheck and
+        the next point's admission before the tick returns.
 
         Returns the request ids completed this tick (their responses are
         available in :attr:`responses`).
         """
         self._tick += 1
         done = []
-        for slab in self._slabs.values():
-            slab.backfill(self.audit, self._tick)
-            for req_id, resp in slab.step(self._tick):
-                self._responses[req_id] = resp
-                done.append(req_id)
+        slabs = list(self._slabs.values())
+        if slabs:
+            per_tick = self.serve.slabs_per_tick or len(slabs)
+            start = self._rr % len(slabs)
+            order = slabs[start:] + slabs[:start]
+            serviced = order[:per_tick]
+            self._rr = (start + per_tick) % len(slabs)
+            for slab in serviced:
+                slab.backfill(self.audit, self._tick)
+                for req_id, resp in slab.step(self._tick):
+                    self._responses[req_id] = resp
+                    done.append(req_id)
+        # Path advancement happens after the slab sweep: it may submit
+        # follow-up requests (possibly creating new slabs), which must
+        # not mutate the dict mid-iteration.
+        for req_id in done:
+            path_id = self._path_of_req.get(req_id)
+            if path_id is None:
+                continue
+            st = self._paths[path_id]
+            follow_up = st.on_completion(self._responses[req_id])
+            if follow_up is not None:
+                new_id = self.submit(follow_up)
+                st.req_ids.append(new_id)
+                self._path_of_req[new_id] = path_id
         return done
 
     def drain(self) -> dict[int, SolveResponse]:

@@ -140,6 +140,15 @@ class SolveRequest:
     ``priority``/``deadline`` are scheduling hints consumed by the
     continuous runtime's admission queue (``repro.serve.continuous``);
     the wave engine serves in submission order and ignores them.
+
+    Warm starts: ``x0`` is spliced into the slab/bucket on admission
+    (zeros if unset).  ``warm_from`` is continuous-engine sugar — "use
+    the solution of that finished request as my x0"; admission is
+    deferred until the referenced request completes (it must be an
+    earlier, same-signature request of the same engine).  ``active_mask``
+    is a per-coordinate {0,1} freeze mask (safe-screening support —
+    ``repro.path``): zero coordinates are excluded from selection,
+    updates and the termination measure.
     """
     A: np.ndarray               # (m, n) design / signed-feature matrix
     b: np.ndarray | None = None  # (m,) observations (quadratic families)
@@ -149,6 +158,8 @@ class SolveRequest:
     x0: np.ndarray | None = None  # optional warm start
     priority: int = 0           # higher = admitted first ("priority" policy)
     deadline: float | None = None  # absolute time ("deadline" policy)
+    warm_from: int | None = None   # req_id whose solution becomes x0
+    active_mask: np.ndarray | None = None  # (n,) freeze mask (1 = live)
 
     @property
     def spec(self) -> BatchedProblemSpec:
@@ -211,6 +222,13 @@ def validate_request(i: "int | None", r: SolveRequest,
         raise ValueError(
             f"{where}: x0 must have shape ({spec.n},), got "
             f"{np.shape(r.x0)}")
+    if r.active_mask is not None and np.shape(r.active_mask) != (spec.n,):
+        raise ValueError(
+            f"{where}: active_mask must have shape ({spec.n},), got "
+            f"{np.shape(r.active_mask)}")
+    if r.warm_from is not None and r.x0 is not None:
+        raise ValueError(
+            f"{where}: warm_from and x0 are mutually exclusive")
 
 
 class SolverServeEngine:
@@ -291,6 +309,11 @@ class SolverServeEngine:
         for i, r in enumerate(requests):
             spec = r.spec
             validate_request(i, r, spec)
+            if r.warm_from is not None:
+                raise ValueError(
+                    f"request {i}: warm_from is a continuous-engine "
+                    "feature (the wave engine keeps no per-id results "
+                    "to warm from); pass x0 explicitly")
             by_spec.setdefault(spec, []).append(i)
         if arrivals is not None and len(arrivals) != len(requests):
             raise ValueError("arrivals must align with requests")
@@ -320,11 +343,19 @@ class SolverServeEngine:
                 x0 = jnp.stack([
                     jnp.zeros((spec.n,), jnp.float32) if r.x0 is None
                     else jnp.asarray(r.x0, jnp.float32) for r in rows])
+                if any(r.active_mask is not None for r in rows):
+                    active = jnp.stack([
+                        jnp.ones((spec.n,), jnp.float32)
+                        if r.active_mask is None
+                        else jnp.asarray(r.active_mask, jnp.float32)
+                        for r in rows])
+                else:
+                    active = None
 
                 for i in chunk:
                     tele.record_admit(req_ids[i])
                 t0 = time.perf_counter()
-                final, converged = run(data, c, x0)
+                final, converged = run(data, c, x0, active)
                 xs = np.asarray(final.x)         # device sync: wave is done
                 wall = time.perf_counter() - t0
                 ks = np.asarray(final.k)

@@ -133,9 +133,13 @@ def _tau_base(half_curv, cfg: SolverConfig, n: int) -> jnp.ndarray:
 
 
 def _instance_step(spec: BatchedProblemSpec, cfg: SolverConfig,
-                   arrays, c, col_sq, tau_base, state: FlexaState):
+                   arrays, c, col_sq, tau_base, active,
+                   state: FlexaState):
+    """One per-instance iteration; ``active`` is the (n,) freeze mask
+    (all-ones ⇒ bit-identical to the unmasked iteration — the multiplies
+    are by exact fp32 1.0s)."""
     problem = family_problem(arrays, c, spec, col_sq=col_sq)
-    return flexa_iteration(problem, cfg, tau_base, state)
+    return flexa_iteration(problem, cfg, tau_base, state, active=active)
 
 
 def _instance_init(spec: BatchedProblemSpec, cfg: SolverConfig,
@@ -158,7 +162,9 @@ def _build_batched_solver(spec: BatchedProblemSpec, cfg: SolverConfig):
 
     ``data`` is the tuple of stacked family arrays (leading dim B — e.g.
     ``(A: (B, m, n), b: (B, m))`` for the quadratic families, ``(Z: (B, m,
-    n),)`` for logreg/svm), ``c``: (B,), ``x0``: (B, n).  The cache key is
+    n),)`` for logreg/svm), ``c``: (B,), ``x0``: (B, n).  ``active`` is an
+    optional (B, n) per-instance freeze mask (``None`` ⇒ all coordinates
+    live — the pre-screening behaviour, bit for bit).  The cache key is
     (spec, cfg); jit handles distinct B by recompiling per batch bucket,
     which is why the serve engine pads requests into fixed buckets.
     """
@@ -168,10 +174,12 @@ def _build_batched_solver(spec: BatchedProblemSpec, cfg: SolverConfig):
     vtau = jax.vmap(lambda csq: _tau_base(fam.half_curv(csq), cfg, spec.n))
 
     @jax.jit
-    def run(data, c, x0):
+    def run(data, c, x0, active=None):
         col_sq = jax.vmap(fam.col_sq)(*data)     # (B, n), once per solve
         tau_base = vtau(col_sq)                  # (B, n)
         B = x0.shape[0]
+        if active is None:
+            active = jnp.ones((B, spec.n), jnp.float32)
         state = vinit(data, c, x0, jnp.arange(B))
         done = jnp.zeros((B,), bool)
 
@@ -181,7 +189,7 @@ def _build_batched_solver(spec: BatchedProblemSpec, cfg: SolverConfig):
 
         def body(carry):
             state, done = carry
-            new_state, _ = vstep(data, c, col_sq, tau_base, state)
+            new_state, _ = vstep(data, c, col_sq, tau_base, active, state)
             merged = _freeze_done(done, new_state, state)
             done = done | (merged.stat <= cfg.tol) \
                 | (merged.k >= cfg.max_iters)
@@ -216,6 +224,7 @@ class SlabState(NamedTuple):
     col_sq: jnp.ndarray         # (S, n)
     tau_base: jnp.ndarray       # (S, n)
     state: FlexaState           # stacked, leading dim S
+    active: jnp.ndarray = None  # (S, n) per-slot freeze mask (1 = live)
 
     @property
     def capacity(self) -> int:
@@ -257,7 +266,8 @@ def slab_alloc(spec: BatchedProblemSpec, cfg: SolverConfig,
     state = jax.vmap(partial(_instance_init, spec, cfg))(
         data, c, jnp.zeros((S, spec.n), jnp.float32), jnp.arange(S))
     return SlabState(data=data, c=c, col_sq=col_sq, tau_base=tau_base,
-                     state=state)
+                     state=state,
+                     active=jnp.ones((S, spec.n), jnp.float32))
 
 
 def _build_slot_writer(spec: BatchedProblemSpec, cfg: SolverConfig):
@@ -273,11 +283,14 @@ def _build_slot_writer(spec: BatchedProblemSpec, cfg: SolverConfig):
     fam = get_family(spec.family)
 
     @partial(jax.jit, donate_argnums=(0,))
-    def write(slab: SlabState, slot, new_data, new_c, new_x0, key):
+    def write(slab: SlabState, slot, new_data, new_c, new_x0, key,
+              new_active=None):
         problem = family_problem(new_data, new_c, spec)
         inst = _flexa.init_state(problem, new_x0, cfg, key=key)
         csq = fam.col_sq(*new_data)
         tb = _tau_base(fam.half_curv(csq), cfg, spec.n)
+        if new_active is None:
+            new_active = jnp.ones((spec.n,), jnp.float32)
         return SlabState(
             data=tuple(d.at[slot].set(nd.astype(d.dtype))
                        for d, nd in zip(slab.data, new_data)),
@@ -287,6 +300,7 @@ def _build_slot_writer(spec: BatchedProblemSpec, cfg: SolverConfig):
             state=jax.tree_util.tree_map(
                 lambda s, v: s.at[slot].set(v.astype(s.dtype)),
                 slab.state, inst),
+            active=slab.active.at[slot].set(new_active),
         )
 
     return write
@@ -337,7 +351,7 @@ def _build_chunk_stepper(spec: BatchedProblemSpec, cfg: SolverConfig,
     vtau = jax.vmap(lambda csq: _tau_base(fam.half_curv(csq), cfg, spec.n))
 
     def splice(slab: SlabState, admit, new_data, new_c, new_x0,
-               new_ids) -> SlabState:
+               new_ids, new_active) -> SlabState:
         # Masked in-place splice of admitted rows.  The fresh per-row
         # quantities are computed for every row and selected by the
         # mask — cheaper than dynamic gathers at slab widths, and stale
@@ -358,17 +372,21 @@ def _build_chunk_stepper(spec: BatchedProblemSpec, cfg: SolverConfig,
             col_sq=jnp.where(admit[:, None], csq_new, slab.col_sq),
             tau_base=jnp.where(admit[:, None], vtau(csq_new),
                                slab.tau_base),
-            state=state)
+            state=state,
+            active=jnp.where(admit[:, None], new_active, slab.active))
 
     @partial(jax.jit, donate_argnums=(0, 1))
     def chunk(slab: SlabState, stop, admit, new_data, new_c, new_x0,
-              new_ids):
+              new_ids, new_active=None):
+        if new_active is None:
+            new_active = jnp.ones_like(slab.active)
         # Phase 1 under a cond: the steady-state tick between evictions
         # admits nothing, and the splice's fresh-state/column-norm work
         # (~one iteration's worth of matvecs) should not be paid then.
         slab = jax.lax.cond(
             jnp.any(admit),
-            lambda s: splice(s, admit, new_data, new_c, new_x0, new_ids),
+            lambda s: splice(s, admit, new_data, new_c, new_x0, new_ids,
+                             new_active),
             lambda s: s,
             slab)
         stop = stop & ~admit
@@ -377,7 +395,7 @@ def _build_chunk_stepper(spec: BatchedProblemSpec, cfg: SolverConfig,
         def body(_, carry):
             state, stop = carry
             new_state, _ = vstep(slab.data, slab.c, slab.col_sq,
-                                 slab.tau_base, state)
+                                 slab.tau_base, slab.active, state)
             merged = _freeze_done(stop, new_state, state)
             stop = stop | (merged.stat <= cfg.tol) \
                 | (merged.k >= cfg.max_iters)
@@ -419,7 +437,8 @@ def _stack_instances(problems: Sequence[Problem]):
 
 def solve_batched(problems: Sequence[Problem], x0=None,
                   cfg: SolverConfig | None = None,
-                  record_history: bool = False) -> SolverResult:
+                  record_history: bool = False,
+                  active=None) -> SolverResult:
     """Solve B independent instances in one compiled FLEXA program.
 
     The instances may come from any registered problem family (lasso,
@@ -433,6 +452,11 @@ def solve_batched(problems: Sequence[Problem], x0=None,
     batched trajectory (``history["V"]`` etc. are lists of (B,) arrays) —
     the benchmark path; the default compiled driver records nothing and
     never syncs with the host until convergence — the serving path.
+
+    ``active`` is an optional (B, n) per-instance freeze mask: coordinates
+    with mask 0 are excluded from selection, updates and the termination
+    measure (the regularization-path engine's screening hook — see
+    ``repro.path``).
     """
     cfg = cfg or SolverConfig()
     spec, data, c = _stack_instances(problems)
@@ -443,11 +467,15 @@ def solve_batched(problems: Sequence[Problem], x0=None,
         x0 = jnp.asarray(x0, jnp.float32)
         if x0.shape != (B, spec.n):
             raise ValueError(f"x0 must be (B, n) = {(B, spec.n)}")
+    if active is not None:
+        active = jnp.asarray(active, jnp.float32)
+        if active.shape != (B, spec.n):
+            raise ValueError(f"active must be (B, n) = {(B, spec.n)}")
 
     t0 = time.perf_counter()
     if not record_history:
         run = make_batched_solver(spec, cfg)
-        final, converged = run(data, c, x0)
+        final, converged = run(data, c, x0, active)
         return SolverResult(
             x=final.x, iters=np.asarray(final.k),
             converged=np.asarray(converged), state=final,
@@ -462,6 +490,8 @@ def solve_batched(problems: Sequence[Problem], x0=None,
     col_sq = jax.vmap(fam.col_sq)(*data)
     tau_base = jax.vmap(
         lambda csq: _tau_base(fam.half_curv(csq), cfg, spec.n))(col_sq)
+    if active is None:
+        active = jnp.ones((B, spec.n), jnp.float32)
     state = jax.vmap(partial(_instance_init, spec, cfg))(
         data, c, x0, jnp.arange(B))
     done = np.zeros((B,), bool)
@@ -469,7 +499,7 @@ def solve_batched(problems: Sequence[Problem], x0=None,
                              ("V", "stat", "E_max", "sel_frac", "gamma",
                               "tau_scale", "time")}
     while not done.all():
-        new_state, info = vstep(data, c, col_sq, tau_base, state)
+        new_state, info = vstep(data, c, col_sq, tau_base, active, state)
         state = _freeze_done(jnp.asarray(done), new_state, state)
         stat = np.asarray(state.stat)
         done = done | (stat <= cfg.tol) | (np.asarray(state.k)

@@ -74,10 +74,14 @@ def _reject_unknown(options: dict, allowed: tuple = ()):
 @register("flexa")
 def _solve_flexa(problem: Problem, x0, cfg: SolverConfig,
                  **options) -> SolverResult:
-    """Algorithm 1, greedy ρ-selection (the paper's FPA configuration)."""
-    _reject_unknown(options, ("callback",))
+    """Algorithm 1, greedy ρ-selection (the paper's FPA configuration).
+
+    ``active=`` injects a per-coordinate freeze mask (safe-screening
+    support for the regularization-path engine, ``repro.path``)."""
+    _reject_unknown(options, ("callback", "active"))
     return _flexa.solve(problem, x0=x0, cfg=cfg,
-                        callback=options.get("callback"))
+                        callback=options.get("callback"),
+                        active=options.get("active"))
 
 
 @register("flexa_compiled")

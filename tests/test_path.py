@@ -1,0 +1,293 @@
+"""Regularization-path engine tests (``repro.path``).
+
+Covers the tentpole's correctness obligations:
+
+* λ_max is the exact all-zero threshold;
+* warm-vs-cold equivalence ≤ 1e-5 at every grid point (screening
+  exactness — the strong rule + KKT recheck may only change *work*,
+  never answers);
+* the screening-safety property: no block carrying signal in the cold
+  reference solution is ever left frozen in the final answer (every
+  strong-rule rejection is KKT-rechecked);
+* the fold-batched lockstep sweep matches per-instance sequential paths;
+* a golden fixed-seed path trajectory (per-λ objective values) guarding
+  the homotopy/screening plumbing against silent drift — regenerate
+  after an intentional change with:
+
+      PYTHONPATH=src python tests/test_path.py --regen
+"""
+import dataclasses
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.config.base import SolverConfig
+from repro.path import (geometric_grid, lambda_max, solve_path,
+                        solve_path_batched, validate_grid)
+from repro.path.screening import kkt_violations, strong_rule_active
+from repro.problems.lasso import nesterov_instance
+from repro.solvers import solve
+
+GOLDEN_DIR = Path(__file__).resolve().parent / "golden"
+GOLDEN = GOLDEN_DIR / "path_lasso_V.json"
+
+#: One small planted instance + a budget every test shares.  Fixed τ and
+#: tol 1e-7: honest stationarity at stopping (see docs/paths.md), so the
+#: 1e-5 equivalence assertions have margin over the fp32 noise floor.
+INSTANCE = dict(m=30, n=96, nnz_frac=0.1, c=1.0, seed=0)
+CFG = SolverConfig(tol=1e-7, max_iters=4000, tau_adapt=False)
+GRID = dict(n_points=10, lam_min_ratio=0.05)
+
+
+@pytest.fixture(scope="module")
+def lasso():
+    return nesterov_instance(**INSTANCE)
+
+
+@pytest.fixture(scope="module")
+def cold_path(lasso):
+    return solve_path(lasso, cfg=CFG, warm=False, screen=False, **GRID)
+
+
+@pytest.fixture(scope="module")
+def ws_path(lasso):
+    return solve_path(lasso, cfg=CFG, warm=True, screen=True, **GRID)
+
+
+# ------------------------------------------------------------------ #
+# Grid layer                                                         #
+# ------------------------------------------------------------------ #
+def test_lambda_max_is_zero_threshold(lasso):
+    lm = lambda_max(lasso)
+    above = solve(dataclasses.replace(lasso, g_weight=1.01 * lm), cfg=CFG)
+    assert float(np.abs(np.asarray(above.x)).max()) == 0.0
+    below = solve(dataclasses.replace(lasso, g_weight=0.9 * lm), cfg=CFG)
+    assert float(np.abs(np.asarray(below.x)).max()) > 0.0
+
+
+def test_geometric_grid_properties():
+    g = geometric_grid(10.0, n_points=7, lam_min_ratio=0.01)
+    assert g.shape == (7,) and g[0] == pytest.approx(10.0)
+    assert g[-1] == pytest.approx(0.1)
+    assert np.all(np.diff(g) < 0)
+    g2 = geometric_grid(10.0, n_points=7, lam_min_ratio=0.01,
+                        include_max=False)
+    assert g2[0] < 10.0 and np.all(np.diff(g2) < 0)
+
+
+def test_validate_grid_rejects_bad_grids():
+    with pytest.raises(ValueError):
+        validate_grid([1.0, 2.0])           # increasing
+    with pytest.raises(ValueError):
+        validate_grid([1.0, -0.5])          # nonpositive
+    with pytest.raises(ValueError):
+        validate_grid([])
+
+
+# ------------------------------------------------------------------ #
+# Screening rules (unit level)                                       #
+# ------------------------------------------------------------------ #
+def test_strong_rule_keeps_warm_support_and_hot_scores():
+    scores = np.array([5.0, 0.1, 2.9, 0.0])
+    # threshold 2*2 - 3 = 1: keep blocks 0 and 2...
+    act = strong_rule_active(scores, c_new=2.0, c_prev=3.0)
+    np.testing.assert_array_equal(act, [1, 0, 1, 0])
+    # ...and anything nonzero in the warm start, whatever its score.
+    act = strong_rule_active(scores, 2.0, 3.0,
+                             warm_block_norms=np.array([0, 0, 0, 7.0]))
+    np.testing.assert_array_equal(act, [1, 0, 1, 1])
+    with pytest.raises(ValueError):
+        strong_rule_active(scores, 3.0, 2.0)    # not decreasing
+
+
+def test_kkt_violations_only_flags_frozen_blocks():
+    scores = np.array([9.0, 1.5, 0.5, 3.0])
+    active = np.array([1.0, 0.0, 0.0, 0.0])
+    viol = kkt_violations(scores, active, c=1.0, slack=1e-3)
+    # block 0 is active (solver's job), 1 and 3 are frozen violators,
+    # 2 is frozen but satisfies KKT.
+    np.testing.assert_array_equal(viol, [0, 1, 0, 1])
+
+
+# ------------------------------------------------------------------ #
+# Path driver: exactness + safety                                    #
+# ------------------------------------------------------------------ #
+def test_warm_vs_cold_equivalence_per_lambda(cold_path, ws_path):
+    dev = np.max(np.abs(ws_path.x - cold_path.x), axis=1)
+    assert dev.max() <= 1e-5, dev
+    # Both ends actually did something: first point is the certified
+    # zero solution, later supports grow.
+    assert ws_path.support[0] == 0
+    assert ws_path.support[-1] > 0
+    assert np.all(ws_path.converged)
+
+
+def test_path_trivial_head_is_exact_zero(ws_path):
+    assert ws_path.lambdas[0] == pytest.approx(ws_path.lam_max)
+    assert ws_path.iters[0] == 0
+    assert float(np.abs(ws_path.x[0]).max()) == 0.0
+
+
+@pytest.mark.parametrize("seed", [1, 2, 3])
+def test_screening_safety_no_signal_block_left_frozen(seed):
+    """Property: every block carrying signal in the cold reference is
+    live (unfrozen, correctly valued) in the screened path — the strong
+    rule's mistakes must all be caught by the KKT recheck."""
+    p = nesterov_instance(**{**INSTANCE, "seed": seed})
+    cold = solve_path(p, cfg=CFG, warm=False, screen=False, **GRID)
+    ws = solve_path(p, cfg=CFG, warm=True, screen=True, **GRID)
+    for k in range(cold.n_points):
+        signal = np.abs(cold.x[k]) > 1e-4
+        # a frozen block sits exactly at zero; signal blocks must not
+        assert not np.any(signal & (ws.x[k] == 0.0)), (
+            f"λ[{k}]: screened path froze a signal block")
+        np.testing.assert_allclose(ws.x[k], cold.x[k], atol=1e-5)
+    # screening actually screened (the property is vacuous otherwise)
+    assert sum(r.screened_out for r in ws.screened) > 0
+
+
+def test_final_solutions_satisfy_kkt(lasso, ws_path):
+    """Exactness certificate independent of the cold reference: at every
+    λ, frozen/zero blocks satisfy |∇F| ≤ c (with the documented slack)
+    and the solver drove the live blocks' stationarity below tol."""
+    import jax.numpy as jnp
+    for k in range(ws_path.n_points):
+        ck = float(ws_path.lambdas[k])
+        g = np.asarray(lasso.grad_f(jnp.asarray(ws_path.x[k])))
+        zero = ws_path.x[k] == 0.0
+        assert np.all(np.abs(g[zero]) <= ck * (1 + 2e-3) + 1e-5), k
+
+
+def test_group_lasso_path_equivalence():
+    # Grid stops at 0.15·λ_max: deeper grids grow borderline groups
+    # whose norms sit at ~2e-5 — both solves converge at tol but group
+    # soft-threshold membership of such groups is not pinned at fp32
+    # (same class of boundary noise PR 1 documented for τ branching).
+    p = nesterov_instance(m=48, n=96, nnz_frac=0.1, c=1.0, seed=1,
+                          block_size=4)
+    cold = solve_path(p, cfg=CFG, n_points=6, lam_min_ratio=0.15,
+                      warm=False, screen=False)
+    ws = solve_path(p, cfg=CFG, n_points=6, lam_min_ratio=0.15,
+                    warm=True, screen=True)
+    np.testing.assert_allclose(ws.x, cold.x, atol=1e-5)
+    assert sum(r.screened_out for r in ws.screened) > 0
+
+
+def test_lam_batch_chunked_matches_sequential(lasso, ws_path):
+    chunked = solve_path(lasso, cfg=CFG, warm=True, screen=True,
+                         lam_batch=4, **GRID)
+    np.testing.assert_allclose(chunked.x, ws_path.x, atol=1e-5)
+    # chunk device accounting: B rows × slowest point in each chunk
+    assert chunked.row_iters >= int(chunked.iters.sum())
+
+
+def test_unscreenable_family_rejected():
+    from repro.problems.logreg import random_logreg_instance
+
+    p = random_logreg_instance(m=20, n=32, nnz_frac=0.2, seed=0)
+    with pytest.raises(ValueError, match="screening hook"):
+        solve_path(p, cfg=CFG, n_points=4)
+    # ...but an unscreened path is allowed for any family.
+    r = solve_path(p, cfg=CFG, n_points=4, lam_min_ratio=0.2,
+                   screen=False)
+    assert np.all(r.converged)
+
+
+# ------------------------------------------------------------------ #
+# Fold-batched lockstep sweep (the CV substrate)                     #
+# ------------------------------------------------------------------ #
+def test_path_batched_matches_sequential_paths():
+    ps = [nesterov_instance(**{**INSTANCE, "seed": s}) for s in (0, 1)]
+    lam = max(lambda_max(p) for p in ps)
+    grid = geometric_grid(lam, n_points=6, lam_min_ratio=0.1)
+    batched = solve_path_batched(ps, lambdas=grid, cfg=CFG)
+    for p, r in zip(ps, batched):
+        solo = solve_path(p, lambdas=grid, cfg=CFG)
+        np.testing.assert_allclose(r.x, solo.x, atol=1e-5)
+        assert np.all(r.converged)
+    # one fold's λ_max is below the shared grid head: its head points
+    # must come out (near) zero, not garbage
+    i_small = int(np.argmin([lambda_max(p) for p in ps]))
+    assert float(np.abs(batched[i_small].x[0]).max()) <= 1e-5
+
+
+# ------------------------------------------------------------------ #
+# Golden fixed-seed trajectory                                       #
+# ------------------------------------------------------------------ #
+# V values are O(1..10); 5e-4 relative sits ~1000x above fp32
+# reduction-order noise and far below any real math change (same
+# rationale as tests/test_golden_convergence.py).
+GOLDEN_RTOL = 5e-4
+
+
+def _golden_record(ws):
+    return {
+        "instance": INSTANCE,
+        "grid": GRID,
+        "cfg": {"tol": CFG.tol, "max_iters": CFG.max_iters,
+                "tau_adapt": CFG.tau_adapt},
+        "lam_max": float(ws.lam_max),
+        "lambdas": [float(l) for l in ws.lambdas],
+        "V": [float(v) for v in ws.V],
+        "support": [int(s) for s in ws.support],
+        "screened_out": [r.screened_out for r in ws.screened],
+    }
+
+
+def test_path_trajectory_matches_golden(ws_path):
+    assert GOLDEN.exists(), (
+        f"golden file {GOLDEN} missing — regenerate with "
+        "`PYTHONPATH=src python tests/test_path.py --regen`")
+    gold = json.loads(GOLDEN.read_text())
+    assert gold["instance"] == INSTANCE and gold["grid"] == GRID, \
+        "golden file was generated for a different instance/grid"
+    assert gold["lam_max"] == pytest.approx(ws_path.lam_max, rel=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(ws_path.V), np.asarray(gold["V"]), rtol=GOLDEN_RTOL,
+        err_msg="per-λ objective trajectory drifted from tests/golden — "
+                "if the homotopy/screening math changed intentionally, "
+                "regenerate (see module docstring)")
+    # Support sizes are integers with healthy margins at this seed; a
+    # drift here means the screening/prox plumbing changed.
+    assert gold["support"] == [int(s) for s in ws_path.support]
+
+
+# ------------------------------------------------------------------ #
+# Full-scale sweep (slow tier)                                       #
+# ------------------------------------------------------------------ #
+@pytest.mark.slow
+def test_path_bench_full_acceptance():
+    """The full BENCH_path gate: ≥20-point grid, ≥2× device
+    row-iterations vs the cold batched grid, ≤1e-5 per-λ deviation, and
+    the CV-over-serve sweep matching the lockstep driver."""
+    import sys
+    from pathlib import Path as _P
+    sys.path.insert(0, str(_P(__file__).resolve().parent.parent))
+    from benchmarks import path_bench
+
+    art = path_bench.main()
+    acc = art["path"]["accept"]
+    assert art["accept_ok"], acc
+    assert acc["grid_points"] >= 20
+    assert acc["ratio_vs_cold_batched"] >= 2.0
+    assert acc["max_dev"] <= 1e-5
+    assert art["cv"]["serve_matches_lockstep"]
+
+
+def regenerate() -> None:
+    p = nesterov_instance(**INSTANCE)
+    ws = solve_path(p, cfg=CFG, warm=True, screen=True, **GRID)
+    GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
+    GOLDEN.write_text(json.dumps(_golden_record(ws), indent=1))
+    print(f"wrote {GOLDEN} ({ws.n_points} points, "
+          f"supports {list(ws.support)})")
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        regenerate()
+    else:
+        print(__doc__)
