@@ -15,18 +15,22 @@ from pathlib import Path
 
 import numpy as np
 
+from repro.client import FlexaClient, SoloSpec
 from repro.config.base import SolverConfig
 from repro.problems.group_lasso import nesterov_group_instance
 from repro.problems.lasso import nesterov_instance
-from repro.solvers import solve
 
 RESULTS = Path(__file__).resolve().parent.parent / "results" / "bench"
 
+#: --smoke divides the instance dimensions / iteration budgets so the
+#: whole ablation table runs in seconds on CI (rankings, not numbers).
+SMOKE_DIV = 8
+
 
 def _run(problem, cfg: SolverConfig) -> dict:
-    """One facade solve, timed; rel err needs the instance's planted V*."""
+    """One client solo solve, timed; rel err needs the planted V*."""
     t0 = time.perf_counter()
-    r = solve(problem, method="flexa", cfg=cfg)
+    r = FlexaClient(solver=cfg).run(SoloSpec(problem=problem))
     wall = time.perf_counter() - t0
     rel = (r.history["V"][-1] - problem.v_star) / problem.v_star \
         if problem.v_star else None
@@ -35,8 +39,9 @@ def _run(problem, cfg: SolverConfig) -> dict:
             "sel_frac_mean": float(np.mean(r.history["sel_frac"]))}
 
 
-def ablate_rho(max_iters=400) -> list[dict]:
-    p = nesterov_instance(m=400, n=2000, nnz_frac=0.1, c=1.0, seed=0)
+def ablate_rho(max_iters=400, div=1) -> list[dict]:
+    p = nesterov_instance(m=400 // div, n=2000 // div, nnz_frac=0.1,
+                          c=1.0, seed=0)
     rows = []
     for rho in (0.1, 0.5, 0.9):
         rows.append({"variant": f"greedy rho={rho}",
@@ -48,8 +53,9 @@ def ablate_rho(max_iters=400) -> list[dict]:
     return rows
 
 
-def ablate_tau(max_iters=400) -> list[dict]:
-    p = nesterov_instance(m=400, n=2000, nnz_frac=0.1, c=1.0, seed=0)
+def ablate_tau(max_iters=400, div=1) -> list[dict]:
+    p = nesterov_instance(m=400 // div, n=2000 // div, nnz_frac=0.1,
+                          c=1.0, seed=0)
     return [
         {"variant": "tau adaptive (paper §4)",
          **_run(p, SolverConfig(max_iters=max_iters, tol=0))},
@@ -59,8 +65,9 @@ def ablate_tau(max_iters=400) -> list[dict]:
     ]
 
 
-def ablate_inexact(max_iters=600) -> list[dict]:
-    p = nesterov_group_instance(m=200, n_blocks=160, block_size=5,
+def ablate_inexact(max_iters=600, div=1) -> list[dict]:
+    p = nesterov_group_instance(m=200 // div, n_blocks=160 // div,
+                                block_size=5,
                                 nnz_frac=0.15, c=1.0, seed=0)
     return [
         {"variant": "exact subproblems",
@@ -72,8 +79,9 @@ def ablate_inexact(max_iters=600) -> list[dict]:
     ]
 
 
-def ablate_surrogate(max_iters=400) -> list[dict]:
-    p = nesterov_instance(m=400, n=2000, nnz_frac=0.1, c=1.0, seed=0)
+def ablate_surrogate(max_iters=400, div=1) -> list[dict]:
+    p = nesterov_instance(m=400 // div, n=2000 // div, nnz_frac=0.1,
+                          c=1.0, seed=0)
     return [
         {"variant": "exact_block (choice (6))",
          **_run(p, SolverConfig(max_iters=max_iters, tol=0))},
@@ -83,13 +91,15 @@ def ablate_surrogate(max_iters=400) -> list[dict]:
     ]
 
 
-def main() -> dict:
+def main(smoke: bool = False) -> dict:
     RESULTS.mkdir(parents=True, exist_ok=True)
+    div = SMOKE_DIV if smoke else 1
+    iters = (lambda n: max(50, n // (4 if smoke else 1)))
     out = {
-        "rho": ablate_rho(),
-        "tau": ablate_tau(),
-        "inexact": ablate_inexact(),
-        "surrogate": ablate_surrogate(),
+        "rho": ablate_rho(iters(400), div),
+        "tau": ablate_tau(iters(400), div),
+        "inexact": ablate_inexact(iters(600), div),
+        "surrogate": ablate_surrogate(iters(400), div),
     }
     (RESULTS / "ablations.json").write_text(json.dumps(out, indent=2))
     return out

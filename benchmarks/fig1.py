@@ -6,9 +6,9 @@ Four instance groups exactly as in §4:
   (c) medium size, high sparsity   — n=10000, m=2000,  5% nnz
   (d) large size, high sparsity    — n=100000, m=5000,  5% nnz
 
-Every algorithm now runs through the unified facade
-(``repro.solvers.solve``), so the race is a single loop over registry
-method names — same Problem, same iteration/tolerance budget, same
+Every algorithm now runs through the client front door
+(``repro.client.FlexaClient`` — inline backend, one ``SoloSpec`` per
+run), so the race is a single loop over registry method names — same Problem, same iteration/tolerance budget, same
 ``SolverResult`` contract.  Metric: relative error (V−V*)/V* vs wall time
 (V* is exact — planted instances), plus time/iterations to reach
 1e-2/1e-4/1e-6.
@@ -38,9 +38,9 @@ from pathlib import Path
 
 import numpy as np
 
+from repro.client import BatchSpec, FlexaClient, SoloSpec
 from repro.config.base import SolverConfig
 from repro.problems.lasso import nesterov_instance
-from repro.solvers import solve, solve_batched
 
 RESULTS = Path(__file__).resolve().parent.parent / "results" / "bench"
 
@@ -93,7 +93,8 @@ def run_group(name: str, spec: dict, scale: int, max_iters: int,
                 else max_iters
             cfg = SolverConfig(max_iters=iters, tol=0)
             t0 = time.perf_counter()
-            r = solve(p, method=method, cfg=cfg, **options)
+            r = FlexaClient(solver=cfg).run(SoloSpec(
+                problem=p, method=method, options=options))
             wall = time.perf_counter() - t0
             rel_final = (r.history["V"][-1] - p.v_star) / p.v_star
             row = {"group": name, "seed": seed, "algo": algo,
@@ -130,15 +131,16 @@ def run_batched(scale: int, n_instances: int = 8,
     probs = [nesterov_instance(m=m, n=n, nnz_frac=0.1, c=1.0, seed=s)
              for s in range(n_instances)]
 
+    client = FlexaClient(solver=cfg)          # inline session
     t0 = time.perf_counter()
-    seq = [solve(p, method="flexa", cfg=cfg) for p in probs]
+    seq = [client.run(SoloSpec(problem=p)) for p in probs]
     t_seq = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    rb = solve_batched(probs, cfg=cfg)        # includes compilation
+    rb = client.run(BatchSpec(problems=probs))   # includes compilation
     t_batched_cold = time.perf_counter() - t0
     t0 = time.perf_counter()
-    rb = solve_batched(probs, cfg=cfg)        # compiled-program reuse
+    rb = client.run(BatchSpec(problems=probs))   # compiled-program reuse
     t_batched_warm = time.perf_counter() - t0
 
     max_dx = max(
@@ -180,7 +182,7 @@ def run_selection_ablation(scale: int, max_iters: int = 4000,
         cfg = SolverConfig(max_iters=max_iters, tol=tol, selection=rule,
                            sel_k=max(8, n // 16), sel_p=0.25, seed=0)
         t0 = time.perf_counter()
-        r = solve(p, method="flexa", cfg=cfg)
+        r = FlexaClient(solver=cfg).run(SoloSpec(problem=p))
         wall = time.perf_counter() - t0
         rel = (r.history["V"][-1] - p.v_star) / p.v_star
         rows.append({

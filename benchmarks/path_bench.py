@@ -59,10 +59,9 @@ from pathlib import Path
 
 import numpy as np
 
+from repro.client import CVSpec, FlexaClient, PathSpec
 from repro.config.base import ServeConfig, SolverConfig
-from repro.path import solve_path, solve_path_batched
 from repro.problems.lasso import make_lasso, nesterov_instance
-from repro.serve import ContinuousSolverEngine, PathRequest
 
 RESULTS = Path(__file__).resolve().parent.parent / "results" / "bench"
 
@@ -85,11 +84,14 @@ def _col(r, name: str) -> dict:
 def run_path_columns(m: int, n: int, nnz: float, seed: int, P: int,
                      ratio: float, cfg: SolverConfig) -> dict:
     p = nesterov_instance(m=m, n=n, nnz_frac=nnz, c=1.0, seed=seed)
-    kw = dict(n_points=P, lam_min_ratio=ratio, cfg=cfg)
-    cold_b = solve_path(p, warm=False, screen=False, lam_batch=P, **kw)
-    cold_s = solve_path(p, warm=False, screen=False, **kw)
-    warm = solve_path(p, warm=True, screen=False, **kw)
-    ws = solve_path(p, warm=True, screen=True, **kw)
+    client = FlexaClient(solver=cfg)
+    kw = dict(n_points=P, lam_min_ratio=ratio)
+    cold_b = client.run(PathSpec(problem=p, warm=False, screen=False,
+                                 lam_batch=P, **kw))
+    cold_s = client.run(PathSpec(problem=p, warm=False, screen=False,
+                                 **kw))
+    warm = client.run(PathSpec(problem=p, warm=True, screen=False, **kw))
+    ws = client.run(PathSpec(problem=p, warm=True, screen=True, **kw))
 
     dev = np.max(np.abs(ws.x - cold_s.x), axis=1)
     dev_cb = float(np.max(np.abs(ws.x - cold_b.x)))
@@ -165,41 +167,32 @@ def run_cv(m_total: int, n: int, s: int, K: int, P: int, ratio: float,
     folds, _ = make_cv_folds(m_total, n, s, K, seed)
     train_probs = [make_lasso(A, b, c=1.0, name=f"cv_fold{i}")
                    for i, (A, b, _, _) in enumerate(folds)]
+    validation = [(Av, bv) for (_, _, Av, bv) in folds]
+    spec = CVSpec(problems=train_probs, validation=validation,
+                  n_points=P, lam_min_ratio=ratio)
 
     # Lockstep sweep: one compiled batched program, all folds per point.
     t0 = time.perf_counter()
-    paths = solve_path_batched(train_probs, n_points=P,
-                               lam_min_ratio=ratio, cfg=cfg)
+    cv_lock = FlexaClient(solver=cfg).run(spec)
     lock_wall = time.perf_counter() - t0
-    grid = paths[0].lambdas
+    grid = cv_lock.lambdas
 
-    # The same sweep as K concurrent PathRequests through the continuous
-    # engine (each fold chains its own warm-started, screened points;
-    # the slab interleaves them).
-    eng = ContinuousSolverEngine(cfg, serve)
+    # The same spec through the continuous backend (each fold chains its
+    # own warm-started, screened points; the slab interleaves them) —
+    # one CVSpec, two schedulers, identical answers.
+    serve_client = FlexaClient(backend="continuous", solver=cfg,
+                               serve=serve)
     t0 = time.perf_counter()
-    pids = [eng.submit_path(PathRequest(
-        A=np.asarray(p.data["A"], np.float32),
-        b=np.asarray(p.data["b"], np.float32),
-        lambdas=grid)) for p in train_probs]
-    eng.drain()
+    cv_serve = serve_client.run(spec)
     serve_wall = time.perf_counter() - t0
-    serve_res = [eng.path_result(pid) for pid in pids]
-    tele = eng.telemetry.snapshot()
+    tele = serve_client.telemetry.snapshot()
 
-    # Model selection: mean validation MSE per λ.
-    val_mse = np.zeros((K, len(grid)))
-    dev_serve_vs_lockstep = 0.0
-    for i, (res, path) in enumerate(zip(serve_res, paths)):
-        _, _, Av, bv = folds[i]
-        for k in range(len(grid)):
-            r = Av @ res["x"][k] - bv
-            val_mse[i, k] = float(r @ r) / Av.shape[0]
-        dev_serve_vs_lockstep = max(
-            dev_serve_vs_lockstep,
-            float(np.max(np.abs(res["x"] - path.x))))
-    mean_mse = val_mse.mean(axis=0)
-    best = int(np.argmin(mean_mse))
+    dev_serve_vs_lockstep = max(
+        float(np.max(np.abs(cv_serve.folds[i].x - cv_lock.folds[i].x)))
+        for i in range(K))
+    mean_mse = cv_lock.scores_mean
+    best = cv_lock.best_index
+    assert cv_serve.best_index == best
 
     return {
         "folds": K, "m_total": m_total, "n": n, "true_support": s,
@@ -209,7 +202,8 @@ def run_cv(m_total: int, n: int, s: int, K: int, P: int, ratio: float,
         "best_lambda": float(grid[best]),
         "best_lambda_index": best,
         "lockstep": {
-            "sweep_row_iters": int(paths[0].meta["sweep_row_iters"]),
+            "sweep_row_iters": int(
+                cv_lock.folds[0].meta["sweep_row_iters"]),
             "wall_s": round(lock_wall, 3),
         },
         "serve": {

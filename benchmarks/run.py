@@ -43,14 +43,25 @@ def main() -> None:
     ap.add_argument("--skip-serve", action="store_true")
     ap.add_argument("--skip-path", action="store_true")
     ap.add_argument("--smoke", action="store_true",
-                    help="run the serve/path sections at their "
-                         "seconds-scale CI configuration")
+                    help="run every section at its seconds-scale CI "
+                         "configuration (fig1 shrinks to one group, "
+                         "ablations divide their instances, serve/path "
+                         "use their smoke gates)")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit nonzero if any section's deterministic "
+                         "acceptance criteria failed (checked at the "
+                         "END, so one miss never truncates the run)")
     args = ap.parse_args()
+    failures: list[str] = []
 
     print("name,us_per_call,derived")
 
     from benchmarks import fig1
-    rows = fig1.main(scale=args.scale, max_iters=args.max_iters)
+    if args.smoke:
+        rows = fig1.main(scale=32, max_iters=150,
+                         groups=("fig1b_med_mid",), with_selection=False)
+    else:
+        rows = fig1.main(scale=args.scale, max_iters=args.max_iters)
     for r in rows:
         t4 = r.get("t_1e-04")
         derived = f"t(1e-4)={t4}s" if t4 is not None else \
@@ -76,7 +87,7 @@ def main() -> None:
                   f"iters={r['iters']} rel={r['rel_err_final']:.2e}")
 
     from benchmarks import ablations
-    out = ablations.main()
+    out = ablations.main(smoke=args.smoke)
     for section, rows in out.items():
         for r in rows:
             rel = r.get("rel_err")
@@ -88,6 +99,8 @@ def main() -> None:
         # Continuous-vs-wave scheduling race (writes BENCH_serve.json).
         from benchmarks import serve_load
         art = serve_load.main(smoke=args.smoke)
+        failures += [f"serve:{k}" for k in art["gate"]
+                     if not art["acceptance"][k]]
         for trace, rec in art["traces"].items():
             s = rec["speedup"]
             cont = rec["continuous"]
@@ -101,6 +114,8 @@ def main() -> None:
         # λ-path engine columns + CV-over-serve (writes BENCH_path.json).
         from benchmarks import path_bench
         art = path_bench.main(smoke=args.smoke)
+        if not art["accept_ok"]:
+            failures.append("path:accept_ok")
         acc = art["path"]["accept"]
         for mode, col in art["path"]["columns"].items():
             per = col["wall_s"] * 1e6 / max(1, col["row_iters"])
@@ -119,6 +134,9 @@ def main() -> None:
         for r in lm_step.main():
             print(f"lm_step/{r['arch']},{r['train_us']},"
                   f"decode_us={r['decode_us']}")
+
+    if args.gate and failures:
+        raise SystemExit(f"acceptance failed: {failures}")
 
 
 if __name__ == "__main__":

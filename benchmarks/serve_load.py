@@ -53,11 +53,10 @@ from pathlib import Path
 
 import numpy as np
 
+from repro.client import FlexaClient, SoloSpec
 from repro.config.base import ServeConfig, SolverConfig
 from repro.problems.lasso import nesterov_instance
-from repro.serve import (ContinuousSolverEngine, ServeTelemetry,
-                         SolveRequest, SolverServeEngine)
-from repro.solvers import solve
+from repro.serve import ServeTelemetry
 
 RESULTS = Path(__file__).resolve().parent.parent / "results" / "bench"
 
@@ -153,26 +152,25 @@ def calibrate_unit(cfg: SolverConfig, serve: ServeConfig, m: int,
     """
     items = [TraceItem(0.0, 0.0, 900_000 + i)
              for i in range(serve.slab_capacity)]
-    reqs = [build_request(it, m, n) for it in items]
     probe_cfg = dataclasses.replace(cfg, max_iters=10_000, tol=-1.0)
-    eng = ContinuousSolverEngine(probe_cfg, serve)
-    for r in reqs:
-        eng.submit(r)
-    eng.step()                    # compiles the fused chunk, fills slab
-    eng.step()
+    client = FlexaClient(backend="continuous", solver=probe_cfg,
+                         serve=serve)
+    for it in items:
+        client.submit(SoloSpec(problem=build_instance(it, m, n)))
+    client.step()                 # compiles the fused chunk, fills slab
+    client.step()
     walls = []
     for _ in range(5):
         t0 = time.perf_counter()
-        eng.step()
+        client.step()
         walls.append(time.perf_counter() - t0)
     return float(np.median(walls)) / serve.chunk_iters
 
 
-def build_request(item: TraceItem, m: int, n: int) -> SolveRequest:
+def build_instance(item: TraceItem, m: int, n: int):
     nnz = NNZ_EASY + (NNZ_HARD - NNZ_EASY) * item.difficulty
-    p = nesterov_instance(m=m, n=n, nnz_frac=nnz, c=1.0, seed=item.seed)
-    return SolveRequest(A=np.asarray(p.data["A"]),
-                        b=np.asarray(p.data["b"]), c=float(p.g_weight))
+    return nesterov_instance(m=m, n=n, nnz_frac=nnz, c=1.0,
+                             seed=item.seed)
 
 
 # ------------------------------------------------------------------ #
@@ -196,49 +194,54 @@ class SimClock:
 # ------------------------------------------------------------------ #
 # Replay drivers                                                     #
 # ------------------------------------------------------------------ #
-def replay_wave(trace, requests, cfg: SolverConfig,
+def replay_wave(trace, problems, cfg: SolverConfig,
                 serve: ServeConfig) -> ServeTelemetry:
     """Wave policy: when the server goes idle, everything that has
-    arrived forms the next wave (padded power-of-two buckets inside)."""
+    arrived forms the next wave (padded power-of-two buckets inside).
+    The client buffers submissions and ``step()`` dispatches one wave —
+    exactly the old hand-rolled loop, now through the front door."""
     clock = SimClock()
     tele = ServeTelemetry(clock=clock)
-    eng = SolverServeEngine(cfg, max_batch=serve.max_batch, telemetry=tele)
+    client = FlexaClient(backend="wave", solver=cfg, serve=serve,
+                         telemetry=tele)
     i = 0
     while i < len(trace):
         clock.advance_to(trace[i].arrival)
         now = clock()
-        wave, arrivals = [], []
         while i < len(trace) and trace[i].arrival <= now:
-            wave.append(requests[i])
-            arrivals.append(trace[i].arrival)
+            # True trace arrivals: a request that queued up while the
+            # previous wave held the device arrived before this submit
+            # — its latency must include that wait (same definition as
+            # the continuous side).
+            client.submit(SoloSpec(problem=problems[i]),
+                          arrival=trace[i].arrival)
             i += 1
-        # True trace arrivals: a request that queued up while the
-        # previous wave held the device arrived before this submit —
-        # its latency must include that wait (same definition as the
-        # continuous side).
-        eng.submit(wave, arrivals=arrivals)  # clock flows during the wave
+        client.step()                # clock flows during the wave
     return tele
 
 
-def replay_continuous(trace, requests, cfg: SolverConfig,
+def replay_continuous(trace, problems, cfg: SolverConfig,
                       serve: ServeConfig):
     """Continuous policy: admit on arrival, chunk-step, evict, backfill.
-    Returns ``(engine, telemetry)`` — the engine for per-request
-    responses (the equivalence check), the telemetry for metrics."""
+    Returns ``(client, telemetry)`` — the client for per-request
+    results (the equivalence check), the telemetry for metrics."""
     clock = SimClock()
     tele = ServeTelemetry(clock=clock)
-    eng = ContinuousSolverEngine(cfg, serve, telemetry=tele)
+    client = FlexaClient(backend="continuous", solver=cfg, serve=serve,
+                         telemetry=tele)
+    tickets = []
     i = 0
-    while i < len(trace) or eng.pending:
-        if i < len(trace) and not eng.pending:
+    while i < len(trace) or client.pending:
+        if i < len(trace) and not client.pending:
             clock.advance_to(trace[i].arrival)
         now = clock()
         while i < len(trace) and trace[i].arrival <= now:
-            eng.submit(requests[i], arrival=trace[i].arrival)
+            tickets.append(client.submit(SoloSpec(problem=problems[i]),
+                                         arrival=trace[i].arrival))
             i += 1
-        if eng.pending:
-            eng.step()
-    return eng, tele
+        if client.pending:
+            client.step()
+    return (client, tickets), tele
 
 
 def summarize(tele: ServeTelemetry, engine: str) -> dict:
@@ -273,7 +276,7 @@ def run_trace(name: str, n_requests: int, seed: int, m: int, n: int,
               cfg: SolverConfig, serve: ServeConfig, unit: float,
               check_solo: bool) -> dict:
     raw = TRACES[name](n_requests, seed)
-    requests = [build_request(t, m, n) for t in raw]
+    problems = [build_instance(t, m, n) for t in raw]
     # Scale iteration-unit arrivals to seconds on this machine.
     trace = [dataclasses.replace(t, arrival=t.arrival * unit)
              for t in raw]
@@ -281,11 +284,12 @@ def run_trace(name: str, n_requests: int, seed: int, m: int, n: int,
     # Untimed warmup replays populate every compile cache (fused chunk
     # stepper, per-bucket wave programs) so the timed replays compare
     # schedules, not compilation.
-    replay_wave(trace, requests, cfg, serve)
-    replay_continuous(trace, requests, cfg, serve)
+    replay_wave(trace, problems, cfg, serve)
+    replay_continuous(trace, problems, cfg, serve)
 
-    wave_tele = replay_wave(trace, requests, cfg, serve)
-    cont_eng, cont_tele = replay_continuous(trace, requests, cfg, serve)
+    wave_tele = replay_wave(trace, problems, cfg, serve)
+    (cont_client, cont_tickets), cont_tele = \
+        replay_continuous(trace, problems, cfg, serve)
 
     record = {
         "trace": name, "requests": n_requests, "seed": seed,
@@ -304,18 +308,17 @@ def run_trace(name: str, n_requests: int, seed: int, m: int, n: int,
     }
 
     if check_solo:
-        # Per-request equivalence: every continuous response must match
-        # its solo solve() (identical cfg) within 1e-5.  The solo driver
+        # Per-request equivalence: every continuous result must match
+        # its solo solve (identical cfg) within 1e-5.  The solo driver
         # is the compiled while_loop (same flexa_iteration, same stopping
         # rule, no per-step host dispatch — seconds instead of minutes
         # over the whole trace).
+        solo_client = FlexaClient(solver=cfg)
         max_diff = 0.0
-        for req_id, trace_item in enumerate(trace):
-            resp = cont_eng.responses[req_id]
-            nnz = NNZ_EASY + (NNZ_HARD - NNZ_EASY) * trace_item.difficulty
-            p = nesterov_instance(m=m, n=n, nnz_frac=nnz, c=1.0,
-                                  seed=trace_item.seed)
-            solo = solve(p, method="flexa_compiled", cfg=cfg)
+        for i, trace_item in enumerate(trace):
+            resp = cont_client.result(cont_tickets[i])
+            solo = solo_client.run(SoloSpec(problem=problems[i],
+                                            method="flexa_compiled"))
             max_diff = max(max_diff, float(
                 np.abs(np.asarray(resp.x) - np.asarray(solo.x)).max()))
         record["equivalence"] = {"max_abs_diff_vs_solo": max_diff,

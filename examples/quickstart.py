@@ -1,24 +1,27 @@
-"""Quickstart: the paper's FLEXA vs the field on a planted Lasso instance.
+"""Quickstart: the paper's FLEXA vs the field, through the one front door.
 
-Everything goes through the unified facade — one loop over method names:
+Everything goes through ``repro.client.FlexaClient`` — one session, one
+spec per workload, any backend:
 
     PYTHONPATH=src python examples/quickstart.py
 
 Runs in ~30 s on one CPU core.  Also demos the batched multi-instance
-engine: several independent instances solved by ONE compiled program.
+engine (several independent instances in ONE compiled program) and the
+continuous-batching backend serving the same work — identical answers,
+different scheduler.
 """
 import numpy as np
 
+from repro.client import BatchSpec, FlexaClient, SoloSpec
 from repro.config.base import SolverConfig
 from repro.problems.lasso import nesterov_instance
-from repro.solvers import solve, solve_batched
 
 
 def main():
     p = nesterov_instance(m=400, n=2000, nnz_frac=0.1, c=1.0, seed=0)
     print(f"instance: {p.name},  V* = {p.v_star:.4f} (planted optimum)\n")
 
-    # (method, label, cfg, method-specific options)
+    # (method, label, cfg, method-specific options) — one client call each.
     runs = [
         ("flexa", "FPA (FLEXA, paper cfg)",
          SolverConfig(max_iters=1000, tol=1e-8), {}),
@@ -33,12 +36,14 @@ def main():
     ]
     print(f"{'algorithm':24s} {'iters':>6s} {'rel err':>12s}")
     for method, label, cfg, options in runs:
-        r = solve(p, method=method, cfg=cfg, **options)
+        r = FlexaClient(solver=cfg).run(
+            SoloSpec(problem=p, method=method, options=options))
         rel = (r.history["V"][-1] - p.v_star) / p.v_star
         print(f"{label:24s} {r.iters:6d} {rel:12.3e}")
 
     # sparsity recovery
-    r = solve(p, method="flexa", cfg=SolverConfig(max_iters=800, tol=1e-8))
+    r = FlexaClient(solver=SolverConfig(max_iters=800, tol=1e-8)).run(
+        SoloSpec(problem=p))
     x = np.asarray(r.x)
     xs = np.asarray(p.x_star)
     print(f"\nFPA support recovery: planted nnz={int((xs != 0).sum())}, "
@@ -47,11 +52,20 @@ def main():
     # batched multi-instance engine: 4 instances, one compiled program
     probs = [nesterov_instance(m=100, n=500, nnz_frac=0.1, c=1.0, seed=s)
              for s in range(4)]
-    rb = solve_batched(probs, cfg=SolverConfig(max_iters=1000, tol=1e-6))
-    print(f"\nbatched solve of B={len(probs)} instances: "
+    client = FlexaClient(solver=SolverConfig(max_iters=1000, tol=1e-6))
+    rb = client.run(BatchSpec(problems=probs))
+    print(f"\nbatched solve of B={len(rb)} instances: "
           f"iters={[int(v) for v in np.asarray(rb.iters)]}, "
-          f"all converged={bool(np.asarray(rb.converged).all())}, "
-          f"wall={rb.meta['wall_s']:.2f}s (one compiled program)")
+          f"all converged={bool(np.asarray(rb.converged).all())} "
+          f"(one compiled program)")
+
+    # the same batch through the continuous-batching backend: slot-slab
+    # scheduling, same answers — backends change *how*, never *what*.
+    cont = FlexaClient(backend="continuous",
+                       solver=SolverConfig(max_iters=1000, tol=1e-6))
+    rc = cont.run(BatchSpec(problems=probs))
+    dev = float(np.abs(np.asarray(rc.x) - np.asarray(rb.x)).max())
+    print(f"continuous backend, same batch: max |Δx| vs inline = {dev:.1e}")
 
 
 if __name__ == "__main__":

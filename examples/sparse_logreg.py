@@ -1,12 +1,15 @@
-"""Sparse logistic regression + ℓ1-SVM with FLEXA (paper §2 instances),
-including the inexact-subproblem feature on group-structured data.
+"""Sparse logistic regression + ℓ1-SVM through the client front door
+(paper §2 instances), including the inexact-subproblem feature on
+group-structured data and a *screened* logreg regularization path —
+the strong-rule hooks for the nonquadratic families landed with the
+client PR.
 
     PYTHONPATH=src python examples/sparse_logreg.py
 """
 import numpy as np
 
+from repro.client import FlexaClient, PathSpec, SoloSpec
 from repro.config.base import SolverConfig
-from repro.core import flexa
 from repro.problems.group_lasso import nesterov_group_instance
 from repro.problems.logreg import random_logreg_instance
 from repro.problems.svm import random_svm_instance
@@ -16,17 +19,17 @@ def main():
     print("— sparse logistic regression (F nonquadratic, Newton-diag "
           "surrogate) —")
     p = random_logreg_instance(m=300, n=600, nnz_frac=0.08, c=0.5, seed=0)
-    r = flexa.solve(p, cfg=SolverConfig(max_iters=1200, tol=1e-7))
+    r = FlexaClient(solver=SolverConfig(max_iters=1200, tol=1e-7)).run(
+        SoloSpec(problem=p))
     x = np.asarray(r.x)
-    print(f"  iters={r.iters}  stationarity="
-          f"{float(p.stationarity(r.x)):.2e}  "
+    print(f"  iters={r.iters}  stationarity={r.stat:.2e}  "
           f"zeros={np.mean(np.abs(x) < 1e-6):.0%}")
 
     print("— ℓ1-regularized ℓ2-SVM —")
     p = random_svm_instance(m=250, n=400, nnz_frac=0.1, c=0.5, seed=0)
-    r = flexa.solve(p, cfg=SolverConfig(max_iters=2000, tol=1e-7))
-    print(f"  iters={r.iters}  stationarity="
-          f"{float(p.stationarity(r.x)):.2e}")
+    r = FlexaClient(solver=SolverConfig(max_iters=2000, tol=1e-7)).run(
+        SoloSpec(problem=p))
+    print(f"  iters={r.iters}  stationarity={r.stat:.2e}")
 
     print("— group Lasso, exact vs inexact block solves (Thm 1(v)) —")
     p = nesterov_group_instance(m=150, n_blocks=120, block_size=5,
@@ -36,9 +39,20 @@ def main():
             ("inexact", SolverConfig(max_iters=600, tol=1e-8,
                                      surrogate="newton_cg",
                                      inexact_alpha1=0.5))]:
-        r = flexa.solve(p, cfg=cfg)
+        r = FlexaClient(solver=cfg).run(SoloSpec(problem=p))
         rel = (r.history["V"][-1] - p.v_star) / p.v_star
         print(f"  {label:8s} iters={r.iters}  rel_err={rel:.2e}")
+
+    print("— screened logreg λ-path (strong rule + KKT recheck) —")
+    p = random_logreg_instance(m=120, n=240, nnz_frac=0.1, c=0.5, seed=0)
+    path = FlexaClient(solver=SolverConfig(max_iters=4000, tol=1e-7,
+                                           tau_adapt=False)).run(
+        PathSpec(problem=p, n_points=8, lam_min_ratio=0.05))
+    frozen = [rep.screened_out for rep in path.screened]
+    print(f"  λ_max={path.lam_max:.3f}  "
+          f"support per λ={[int(s) for s in path.support]}")
+    print(f"  blocks frozen by screening per λ={frozen} "
+          f"(KKT-rechecked, solutions exact)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,680 @@
+"""Pluggable execution backends behind the one client front door.
+
+A backend is *how* a normalized :class:`~repro.client.specs.WorkItem`
+gets executed — never *what* it computes.  All three registered
+backends run the same Algorithm-1 mathematics over the same compiled
+programs, so switching ``ClientConfig.backend`` changes scheduling,
+latency and device utilization, but results agree with the inline
+reference (≤1e-5 under tol-stopping; bit-identical where the very same
+compiled program runs — the equivalence matrix in
+``tests/test_client.py`` pins this):
+
+* ``inline``     — in-process: the method registry for solos, the
+  batched vmap+while_loop engine for batches, the homotopy driver for
+  paths/CV.  Lowest latency for one-shot work; no admission control.
+* ``wave``       — :class:`~repro.serve.engine.SolverServeEngine`:
+  buffered submissions are packed into padded power-of-two buckets and
+  dispatched as waves.  Paths/CV run the engine-agnostic
+  :class:`~repro.serve.pathstate.PathState` protocol, one wave per
+  λ-point across every in-flight path (K CV folds share one bucket).
+* ``continuous`` — :class:`~repro.serve.continuous.
+  ContinuousSolverEngine`: slot-slab continuous batching with
+  eviction/backfill; paths/CV ride the engine's native point-by-point
+  admission.  The backend for sustained concurrent traffic.
+
+Backends construct the legacy engines under
+:func:`repro.deprecation.internal_use`, so the client never triggers
+the legacy-entry-point FutureWarnings it exists to retire.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.client.errors import (UnknownBackendError,
+                                 UnsupportedWorkloadError)
+from repro.client.specs import (SERVE_PATH_FAMILIES, BatchResult, CVResult,
+                                SoloResult, WorkItem, mse_score,
+                                solve_request_of)
+from repro.config.base import ClientConfig, SolverConfig
+from repro.deprecation import internal_use
+from repro.path.driver import (PathResult, _problem_at, _solve_path,
+                               _solve_path_batched)
+from repro.path.grid import geometric_grid, lambda_max, validate_grid
+from repro.path.screening import ScreenReport
+from repro.serve.metrics import ServeTelemetry
+
+
+# ------------------------------------------------------------------ #
+# Shared result plumbing                                             #
+# ------------------------------------------------------------------ #
+def _solo_result(resp, backend: str) -> SoloResult:
+    """Normalize a serve ``SolveResponse`` onto the client contract."""
+    return SoloResult(x=np.asarray(resp.x), iters=int(resp.iters),
+                      converged=bool(resp.converged),
+                      stat=float(resp.stat), backend=backend, raw=resp)
+
+
+def _batch_result(resps, backend: str) -> BatchResult:
+    return BatchResult(
+        x=np.stack([np.asarray(r.x) for r in resps]),
+        iters=np.asarray([int(r.iters) for r in resps], np.int64),
+        converged=np.asarray([bool(r.converged) for r in resps], bool),
+        stat=np.asarray([float(r.stat) for r in resps]),
+        backend=backend, raw=list(resps))
+
+
+def _path_result_from_serve(problem, d: dict, backend: str) -> PathResult:
+    """Assemble the shared :class:`PathResult` contract from the serve
+    path protocol's progress dict (``PathState.result()``)."""
+    lambdas = np.asarray(d["lambdas"], np.float64)
+    xs = np.asarray(d["x"], np.float32)
+    P = lambdas.shape[0]
+    n_blocks, bs = problem.n_blocks, problem.block_size
+    V = np.array([float(_problem_at(problem, float(lambdas[k])).v(
+        jnp.asarray(xs[k]))) for k in range(P)])
+    support = np.array([
+        int(np.count_nonzero(np.linalg.norm(
+            xs[k].reshape(n_blocks, bs), axis=-1)))
+        for k in range(P)], np.int64)
+    screened_out = np.asarray(d["screened_out"], np.int64)
+    kkt_rounds = np.asarray(d["kkt_rounds"], np.int64)
+    return PathResult(
+        lambdas=lambdas, x=xs, V=V,
+        iters=np.asarray(d["iters"], np.int64),
+        converged=np.asarray(d["converged"], bool),
+        support=support,
+        active_blocks=n_blocks - screened_out,
+        screened=[ScreenReport(n_blocks=n_blocks,
+                               screened_out=int(screened_out[k]),
+                               kkt_rounds=int(kkt_rounds[k]))
+                  for k in range(P)],
+        # Per-request iteration total; slab/bucket device accounting
+        # (padding + freeze waste) lives in the session telemetry.
+        row_iters=int(np.asarray(d["iters"]).sum()),
+        lam_max=float(d["lam_max"]),
+        meta={"backend": backend, "source": "serve"})
+
+
+def _scorer(spec):
+    if spec.score is not None:
+        return spec.score
+    if spec.validation is not None:
+        return mse_score(spec.validation)
+    return None
+
+
+def _cv_select(item: WorkItem, folds: list) -> dict:
+    """Score a finished sweep; returns scores/best or empties."""
+    score = _scorer(item.spec)
+    if score is None:
+        return {"scores": None, "scores_mean": None, "best_index": None,
+                "best_lambda": None}
+    K, P = len(folds), int(folds[0].lambdas.shape[0])
+    scores = np.array([[score(i, k, folds[i].x[k]) for k in range(P)]
+                       for i in range(K)])
+    mean = scores.mean(axis=0)
+    best = int(np.argmin(mean))
+    return {"scores": scores, "scores_mean": mean, "best_index": best,
+            "best_lambda": float(folds[0].lambdas[best])}
+
+
+def _resolve_cv_grid(item: WorkItem) -> np.ndarray:
+    """The shared fold grid (anchored at the largest fold λ_max), the
+    same resolution rule as the lockstep driver."""
+    spec = item.spec
+    if spec.lambdas is not None:
+        return validate_grid(spec.lambdas)
+    lam = max(lambda_max(p) for p in item.problems)
+    return geometric_grid(lam, n_points=spec.n_points,
+                          lam_min_ratio=spec.lam_min_ratio)
+
+
+def _winner_problems(item: WorkItem, best_lambda: float) -> list:
+    return [_problem_at(p, best_lambda) for p in item.problems]
+
+
+def _finish_cv(item: WorkItem, folds: list, backend: str,
+               x_best: np.ndarray | None, select: dict,
+               meta: dict) -> CVResult:
+    if select["best_index"] is not None and x_best is None:
+        # Full-tolerance sweep: the winner column IS the answer.
+        x_best = np.stack([f.x[select["best_index"]] for f in folds])
+    return CVResult(folds=folds, lambdas=folds[0].lambdas,
+                    backend=backend, x_best=x_best,
+                    meta={**meta,
+                          "tol_coarse": item.spec.tol_coarse}, **select)
+
+
+# ------------------------------------------------------------------ #
+# Backend protocol + registry                                        #
+# ------------------------------------------------------------------ #
+class Backend:
+    """Execution strategy for normalized work items.
+
+    Contract: ``submit`` may complete eagerly (returns the tickets it
+    finished); ``step`` advances asynchronous work one scheduler round
+    and returns the tickets completed by that round; ``pending`` counts
+    accepted-but-unfinished tickets; ``result`` returns a completed
+    ticket's normalized result (``None`` while in flight).  ``validate``
+    rejects workloads this strategy cannot execute — *before* any state
+    changes.
+    """
+
+    name = "?"
+
+    def __init__(self, config: ClientConfig, telemetry: ServeTelemetry):
+        self.config = config
+        self.telemetry = telemetry
+        self._results: dict[int, object] = {}
+
+    # -- protocol -------------------------------------------------- #
+    def validate(self, item: WorkItem) -> None:
+        pass
+
+    def submit(self, item: WorkItem, arrival=None) -> list[int]:
+        raise NotImplementedError
+
+    def step(self) -> list[int]:
+        return []
+
+    @property
+    def pending(self) -> int:
+        return 0
+
+    def result(self, ticket: int):
+        return self._results.get(ticket)
+
+    def stats(self) -> dict:
+        return {"backend": self.name}
+
+    def close(self) -> None:
+        pass
+
+    # -- shared serve-side helpers --------------------------------- #
+    def _sweep_cfg(self, item: WorkItem) -> SolverConfig:
+        """Solver config of a CV sweep (``tol_coarse`` continuation)."""
+        tc = getattr(item.spec, "tol_coarse", None)
+        return (self.config.solver if tc is None
+                else dataclasses.replace(self.config.solver, tol=tc))
+
+    @staticmethod
+    def _path_request(spec, problem, grid):
+        """The serve path protocol's request for one instance — the one
+        construction both serve backends share, so a new PathSpec field
+        can never be threaded through only one of them."""
+        from repro.serve.pathstate import PathRequest
+        return PathRequest(
+            A=np.asarray(problem.data["A"], np.float32),
+            b=np.asarray(problem.data["b"], np.float32),
+            lambdas=grid, n_points=spec.n_points,
+            lam_min_ratio=spec.lam_min_ratio,
+            block_size=int(problem.block_size), warm=spec.warm,
+            screen=spec.screen, kkt_slack=spec.kkt_slack)
+
+    # -- shared validation helpers --------------------------------- #
+    def _require_registry_family(self, item: WorkItem) -> None:
+        if item.family is None:
+            raise UnsupportedWorkloadError(
+                f"the {self.name!r} backend serves registered problem "
+                "families only (its payload is the raw family data "
+                "arrays); ad-hoc or mixed-family problems run on the "
+                "'inline' backend")
+
+    def _require_flexa_solo(self, item: WorkItem) -> None:
+        spec = item.spec
+        if spec.method != "flexa" or spec.options:
+            raise UnsupportedWorkloadError(
+                f"the {self.name!r} backend executes the paper's FLEXA "
+                f"solver; method={spec.method!r} with options="
+                f"{spec.options!r} runs on the 'inline' backend")
+
+    def _require_serveable_path(self, item: WorkItem) -> None:
+        self._require_registry_family(item)
+        if item.family not in SERVE_PATH_FAMILIES:
+            raise UnsupportedWorkloadError(
+                f"the serve-side path protocol covers the quadratic "
+                f"screenable families {SERVE_PATH_FAMILIES}; family "
+                f"{item.family!r} paths run on the 'inline' backend")
+        spec = item.spec
+        if getattr(spec, "lam_batch", 1) != 1:
+            raise UnsupportedWorkloadError(
+                "lam_batch chunking is an inline-backend feature (the "
+                "serving engines admit paths point by point)")
+        if spec.tol_schedule is not None:
+            raise UnsupportedWorkloadError(
+                "per-point tol_schedule is an inline-backend feature; "
+                "serve backends support the tol_coarse continuation "
+                "(CVSpec) instead")
+
+
+_BACKENDS: dict[str, type] = {}
+
+
+def register_backend(cls: type) -> type:
+    """Register a :class:`Backend` subclass under ``cls.name``."""
+    if cls.name in _BACKENDS:
+        raise ValueError(f"backend {cls.name!r} already registered")
+    _BACKENDS[cls.name] = cls
+    return cls
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+def make_backend(config: ClientConfig,
+                 telemetry: ServeTelemetry) -> Backend:
+    try:
+        cls = _BACKENDS[config.backend]
+    except KeyError:
+        raise UnknownBackendError(
+            f"unknown backend {config.backend!r}; available: "
+            f"{available_backends()}") from None
+    return cls(config, telemetry)
+
+
+# ------------------------------------------------------------------ #
+# Inline backend                                                     #
+# ------------------------------------------------------------------ #
+@register_backend
+class InlineBackend(Backend):
+    """In-process execution: the reference semantics every other
+    backend is measured against."""
+
+    name = "inline"
+
+    def submit(self, item: WorkItem, arrival=None) -> list[int]:
+        cfg = self.config.solver
+        spec = item.spec
+        if item.kind == "solo":
+            from repro.solvers.api import _solve
+            r = _solve(spec.problem, method=spec.method, cfg=cfg,
+                       x0=spec.x0, **spec.options)
+            stat = getattr(r, "state", None)
+            self._results[item.ticket] = SoloResult(
+                x=np.asarray(r.x), iters=int(r.iters),
+                converged=bool(np.asarray(r.converged).all()),
+                stat=None if stat is None or not hasattr(stat, "stat")
+                else float(np.asarray(stat.stat)),
+                backend=self.name, raw=r)
+        elif item.kind == "batch":
+            from repro.solvers.batched import _solve_batched
+            r = _solve_batched(item.problems, x0=spec.x0, cfg=cfg,
+                               record_history=spec.record_history,
+                               active=spec.active)
+            self._results[item.ticket] = BatchResult(
+                x=np.asarray(r.x), iters=np.asarray(r.iters),
+                converged=np.asarray(r.converged),
+                stat=np.asarray(r.state.stat) if r.state is not None
+                else None,
+                backend=self.name, raw=r)
+        elif item.kind == "path":
+            self._results[item.ticket] = _solve_path(
+                spec.problem, spec.lambdas, n_points=spec.n_points,
+                lam_min_ratio=spec.lam_min_ratio, cfg=cfg,
+                warm=spec.warm, screen=spec.screen,
+                kkt_slack=spec.kkt_slack, lam_batch=spec.lam_batch,
+                tol_schedule=spec.tol_schedule)
+        elif item.kind == "cv":
+            self._results[item.ticket] = self._run_cv(item, cfg)
+        return [item.ticket]
+
+    def _run_cv(self, item: WorkItem, cfg: SolverConfig) -> CVResult:
+        spec = item.spec
+        sweep_cfg = (cfg if spec.tol_coarse is None
+                     else dataclasses.replace(cfg, tol=spec.tol_coarse))
+        folds = _solve_path_batched(
+            item.problems, spec.lambdas, n_points=spec.n_points,
+            lam_min_ratio=spec.lam_min_ratio, cfg=sweep_cfg,
+            warm=spec.warm, screen=spec.screen,
+            kkt_slack=spec.kkt_slack, tol_schedule=spec.tol_schedule)
+        select = _cv_select(item, folds)
+        x_best = None
+        if select["best_index"] is not None \
+                and spec.tol_coarse is not None:
+            # Coarse-to-fine continuation: only the winner gets the
+            # full-accuracy re-solve, warm-started from its coarse
+            # solution (unscreened, so exactness needs no KKT loop).
+            from repro.solvers.batched import _solve_batched
+            probs = _winner_problems(item, select["best_lambda"])
+            x0 = np.stack([f.x[select["best_index"]] for f in folds])
+            r = _solve_batched(probs, x0=x0, cfg=cfg)
+            x_best = np.asarray(r.x)
+        return _finish_cv(item, folds, self.name, x_best, select,
+                          meta={"mode": "lockstep"})
+
+
+# ------------------------------------------------------------------ #
+# Serve-side path jobs (wave backend)                                #
+# ------------------------------------------------------------------ #
+class _PathJob:
+    """One path/cv ticket driven through wave submissions.
+
+    Holds one :class:`PathState` per fold; each wave round submits the
+    live folds' current requests together (they share a signature, so
+    they ride one bucket) and feeds the responses back until every fold
+    is done.
+    """
+
+    def __init__(self, item: WorkItem, grid):
+        from repro.serve.pathstate import PathState
+        self.item = item
+        self.states = [
+            PathState(i, Backend._path_request(item.spec, p, grid))
+            for i, p in enumerate(item.problems)]
+        self.pending_req = [st.next_request() for st in self.states]
+        self.resolving = False          # cv winner re-solve in flight
+        self.winner_resps: list = []
+        self.folds = None
+        self.select = None
+
+    @property
+    def done(self) -> bool:
+        return all(st.done for st in self.states)
+
+
+# ------------------------------------------------------------------ #
+# Wave backend                                                       #
+# ------------------------------------------------------------------ #
+@register_backend
+class WaveBackend(Backend):
+    """Buffered wave dispatch over :class:`SolverServeEngine`.
+
+    ``submit`` only buffers; each ``step`` packs everything admissible —
+    buffered solos/batches plus every in-flight path's current λ-point —
+    into ONE engine wave.  ``run``/``result`` loop ``step`` until the
+    ticket completes, so one-shot callers never see the buffering.
+    """
+
+    name = "wave"
+
+    def __init__(self, config, telemetry):
+        super().__init__(config, telemetry)
+        self._engines: dict[SolverConfig, object] = {}
+        self._queue: list[tuple[WorkItem, object]] = []
+        self._jobs: dict[int, _PathJob] = {}
+
+    def _engine(self, cfg: SolverConfig):
+        eng = self._engines.get(cfg)
+        if eng is None:
+            from repro.serve.engine import SolverServeEngine
+            with internal_use():
+                eng = SolverServeEngine(cfg, self.config.serve,
+                                        telemetry=self.telemetry)
+            self._engines[cfg] = eng
+        return eng
+
+    # -- protocol -------------------------------------------------- #
+    def validate(self, item: WorkItem) -> None:
+        if item.kind == "solo":
+            self._require_flexa_solo(item)
+            self._require_registry_family(item)
+        elif item.kind == "batch":
+            self._require_registry_family(item)
+            if item.spec.record_history:
+                raise UnsupportedWorkloadError(
+                    "record_history is an inline-backend feature (the "
+                    "serving engines never sync per iteration)")
+        else:
+            self._require_serveable_path(item)
+
+    def submit(self, item: WorkItem, arrival=None) -> list[int]:
+        if item.kind in ("solo", "batch"):
+            self._queue.append((item, arrival))
+        else:
+            spec = item.spec
+            grid = (_resolve_cv_grid(item) if item.kind == "cv"
+                    else spec.lambdas)
+            self._jobs[item.ticket] = _PathJob(item, grid)
+        return []
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue) + len(self._jobs)
+
+    def step(self) -> list[int]:
+        """One wave round: everything admissible rides one submission
+        per solver config (sweeps at coarse tol and full-tol work can
+        coexist; each config has its own engine)."""
+        waves: dict[SolverConfig, list] = {}
+
+        def enqueue(cfg, req, arrival, route):
+            waves.setdefault(cfg, []).append((req, arrival, route))
+
+        queue, self._queue = self._queue, []
+        for item, arrival in queue:
+            if item.kind == "solo":
+                enqueue(self.config.solver,
+                        solve_request_of(item.problems[0],
+                                         x0=item.spec.x0),
+                        arrival, ("solo", item, 0))
+            else:
+                x0 = item.spec.x0
+                act = item.spec.active
+                for i, p in enumerate(item.problems):
+                    enqueue(self.config.solver, solve_request_of(
+                        p, x0=None if x0 is None else x0[i],
+                        active=None if act is None else act[i]),
+                        arrival, ("batch", item, i))
+        for ticket, job in self._jobs.items():
+            cfg = (self.config.solver if job.resolving
+                   else self._sweep_cfg(job.item))
+            for i, req in enumerate(job.pending_req):
+                if req is not None:
+                    enqueue(cfg, req, None, ("path", job, i))
+
+        done = []
+        partial: dict[int, dict] = {}       # batch ticket -> responses
+        for cfg, entries in waves.items():
+            reqs = [e[0] for e in entries]
+            now = self.telemetry.now()
+            arrivals = [now if e[1] is None else e[1] for e in entries]
+            resps = self._engine(cfg).submit(reqs, arrivals=arrivals)
+            for (req, _, route), resp in zip(entries, resps):
+                kind = route[0]
+                if kind == "solo":
+                    _, item, _ = route
+                    self._results[item.ticket] = _solo_result(resp,
+                                                              self.name)
+                    done.append(item.ticket)
+                elif kind == "batch":
+                    _, item, i = route
+                    partial.setdefault(item.ticket,
+                                       {"item": item, "resps": {}})[
+                        "resps"][i] = resp
+                else:
+                    _, job, i = route
+                    if job.resolving:
+                        job.winner_resps[i] = resp
+                        job.pending_req[i] = None
+                    else:
+                        job.pending_req[i] = \
+                            job.states[i].on_completion(resp)
+
+        for ticket, rec in partial.items():
+            item, resps = rec["item"], rec["resps"]
+            self._results[ticket] = _batch_result(
+                [resps[i] for i in range(len(item.problems))], self.name)
+            done.append(ticket)
+
+        for ticket in list(self._jobs):
+            job = self._jobs[ticket]
+            if job.resolving:
+                if all(r is not None for r in job.winner_resps):
+                    folds = job.folds
+                    x_best = np.stack([np.asarray(r.x)
+                                       for r in job.winner_resps])
+                    self._results[ticket] = _finish_cv(
+                        job.item, folds, self.name, x_best, job.select,
+                        meta={"mode": "wave"})
+                    del self._jobs[ticket]
+                    done.append(ticket)
+                continue
+            if not job.done:
+                continue
+            folds = [_path_result_from_serve(job.item.problems[i],
+                                             st.result(), self.name)
+                     for i, st in enumerate(job.states)]
+            if job.item.kind == "path":
+                self._results[ticket] = folds[0]
+                del self._jobs[ticket]
+                done.append(ticket)
+                continue
+            select = _cv_select(job.item, folds)
+            if select["best_index"] is not None \
+                    and job.item.spec.tol_coarse is not None:
+                # Phase 2: full-tol winner re-solve as one more wave.
+                job.resolving = True
+                job.folds, job.select = folds, select
+                best = select["best_index"]
+                probs = _winner_problems(job.item,
+                                         select["best_lambda"])
+                job.pending_req = [
+                    solve_request_of(p, x0=folds[i].x[best])
+                    for i, p in enumerate(probs)]
+                job.winner_resps = [None] * len(probs)
+            else:
+                self._results[ticket] = _finish_cv(
+                    job.item, folds, self.name, None, select,
+                    meta={"mode": "wave"})
+                del self._jobs[ticket]
+                done.append(ticket)
+        return done
+
+    def stats(self) -> dict:
+        return {"backend": self.name,
+                "engines": [dict(eng.stats)
+                            for eng in self._engines.values()]}
+
+
+# ------------------------------------------------------------------ #
+# Continuous backend                                                 #
+# ------------------------------------------------------------------ #
+class _ContTicket:
+    """Per-ticket progress over the continuous engine."""
+
+    def __init__(self, item: WorkItem):
+        self.item = item
+        self.req_ids: list[int] = []        # solo/batch requests
+        self.path_ids: list[int] = []       # path/cv paths
+        self.grid = None
+        self.phase = "run"                  # "run" | "resolve"
+        self.folds = None
+        self.select = None
+        self.resolve_ids: list[int] = []
+
+
+@register_backend
+class ContinuousBackend(Backend):
+    """Slot-slab continuous batching over
+    :class:`ContinuousSolverEngine` — admit on submit, advance on
+    ``step``, results as slots converge and are evicted."""
+
+    name = "continuous"
+
+    def __init__(self, config, telemetry):
+        super().__init__(config, telemetry)
+        self._engines: dict[SolverConfig, object] = {}
+        self._live: dict[int, _ContTicket] = {}
+
+    def _engine(self, cfg: SolverConfig):
+        eng = self._engines.get(cfg)
+        if eng is None:
+            from repro.serve.continuous import ContinuousSolverEngine
+            with internal_use():
+                eng = ContinuousSolverEngine(cfg, self.config.serve,
+                                             telemetry=self.telemetry)
+            self._engines[cfg] = eng
+        return eng
+
+    validate = WaveBackend.validate
+
+    def submit(self, item: WorkItem, arrival=None) -> list[int]:
+        rec = _ContTicket(item)
+        eng = self._engine(self.config.solver)
+        if item.kind == "solo":
+            rec.req_ids = [eng.submit(
+                solve_request_of(item.problems[0], x0=item.spec.x0),
+                arrival=arrival)]
+        elif item.kind == "batch":
+            x0, act = item.spec.x0, item.spec.active
+            rec.req_ids = [eng.submit(solve_request_of(
+                p, x0=None if x0 is None else x0[i],
+                active=None if act is None else act[i]),
+                arrival=arrival) for i, p in enumerate(item.problems)]
+        else:
+            spec = item.spec
+            sweep = self._engine(self._sweep_cfg(item))
+            grid = (_resolve_cv_grid(item) if item.kind == "cv"
+                    else spec.lambdas)
+            rec.grid = grid
+            rec.path_ids = [sweep.submit_path(
+                self._path_request(spec, p, grid), arrival=arrival)
+                for p in item.problems]
+        self._live[item.ticket] = rec
+        return []
+
+    @property
+    def pending(self) -> int:
+        return len(self._live)
+
+    def step(self) -> list[int]:
+        for eng in self._engines.values():
+            if eng.pending:
+                eng.step()
+        done = []
+        for ticket in list(self._live):
+            rec = self._live[ticket]
+            result = self._advance(rec)
+            if result is not None:
+                self._results[ticket] = result
+                del self._live[ticket]
+                done.append(ticket)
+        return done
+
+    def _advance(self, rec: _ContTicket):
+        item = rec.item
+        eng = self._engine(self.config.solver)
+        if item.kind in ("solo", "batch"):
+            resps = [eng.responses.get(r) for r in rec.req_ids]
+            if any(r is None for r in resps):
+                return None
+            if item.kind == "solo":
+                return _solo_result(resps[0], self.name)
+            return _batch_result(resps, self.name)
+
+        sweep = self._engine(self._sweep_cfg(item))
+        if rec.phase == "run":
+            results = [sweep.path_result(pid) for pid in rec.path_ids]
+            if not all(r["done"] for r in results):
+                return None
+            folds = [_path_result_from_serve(item.problems[i],
+                                             results[i], self.name)
+                     for i in range(len(results))]
+            if item.kind == "path":
+                return folds[0]
+            select = _cv_select(item, folds)
+            if select["best_index"] is None \
+                    or item.spec.tol_coarse is None:
+                return _finish_cv(item, folds, self.name, None, select,
+                                  meta={"mode": "continuous"})
+            # Phase 2: full-tol winner re-solve through the main engine.
+            rec.phase, rec.folds, rec.select = "resolve", folds, select
+            best = select["best_index"]
+            probs = _winner_problems(item, select["best_lambda"])
+            rec.resolve_ids = [eng.submit(solve_request_of(
+                p, x0=folds[i].x[best])) for i, p in enumerate(probs)]
+            return None
+        resps = [eng.responses.get(r) for r in rec.resolve_ids]
+        if any(r is None for r in resps):
+            return None
+        x_best = np.stack([np.asarray(r.x) for r in resps])
+        return _finish_cv(item, rec.folds, self.name, x_best,
+                          rec.select, meta={"mode": "continuous"})
+
+    def stats(self) -> dict:
+        return {"backend": self.name,
+                "pending": self.pending}

@@ -244,14 +244,14 @@ class SolverConfig:
 class ServeConfig:
     """Settings for the solver serving runtimes (``repro.serve``).
 
-    The continuous-batching runtime (``ContinuousSolverEngine``) takes
-    this config directly and reads the slab/scheduler knobs.  The wave
-    engine (``SolverServeEngine``) takes a plain ``max_batch=``
-    constructor argument instead — ``max_batch`` here is the matching
-    knob for callers (e.g. ``benchmarks/serve_load.py``) that configure
-    both engines from one place and thread it through themselves.
-    Frozen + hashable so a config can ride inside compile-cache keys if
-    a runtime ever specializes on it.
+    Both runtimes take this config directly: the continuous-batching
+    engine (``ContinuousSolverEngine``) reads the slab/scheduler knobs,
+    the wave engine (``SolverServeEngine``) reads ``max_batch`` (a plain
+    ``max_batch=`` constructor kwarg remains as a back-compat override).
+    Callers configuring both engines from one place — the client
+    backends, ``benchmarks/serve_load.py`` — just hand the same config
+    to each.  Frozen + hashable so a config can ride inside
+    compile-cache keys if a runtime ever specializes on it.
     """
 
     # --- wave engine ---
@@ -270,6 +270,31 @@ class ServeConfig:
     # — no signature can starve behind a chatty one, whatever order the
     # slabs were created in.
     slabs_per_tick: int = 0
+
+
+@dataclass(frozen=True)
+class ClientConfig:
+    """One config for the one front door (``repro.client.FlexaClient``).
+
+    Composes the two concerns every execution backend shares — the
+    solver hyperparameters/budget (:class:`SolverConfig`) and the
+    serving-runtime knobs (:class:`ServeConfig`) — plus the backend
+    choice itself, so a workload is fully described by (spec, config)
+    and switching ``backend`` can never change anything else.  This is
+    what retires the old pattern of every caller hand-threading
+    ``ServeConfig.max_batch`` into ``SolverServeEngine(max_batch=...)``.
+    """
+
+    solver: SolverConfig = field(default_factory=SolverConfig)
+    serve: ServeConfig = field(default_factory=ServeConfig)
+    # Execution backend: "inline" (facade / solve_batched in-process) |
+    # "wave" (SolverServeEngine buckets) | "continuous"
+    # (ContinuousSolverEngine slot slabs).  repro.client.available_backends()
+    # lists the registry.
+    backend: str = "inline"
+
+    def replace(self, **kw: Any) -> "ClientConfig":
+        return dataclasses.replace(self, **kw)
 
 
 @dataclass(frozen=True)

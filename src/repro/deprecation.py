@@ -1,0 +1,61 @@
+"""One-shot deprecation machinery for the legacy entry points.
+
+PR 5 makes ``repro.client.FlexaClient`` the single front door to the
+solver stack; the historical entry points (``repro.solvers.solve`` /
+``solve_batched``, ``repro.path.solve_path`` / ``solve_path_batched``,
+direct construction of the serve engines) keep working as thin shims
+that delegate to the client, but each announces itself ONCE per process
+with a :class:`FutureWarning` pointing at the client-call replacement.
+
+This module is a dependency leaf (stdlib only): both the legacy modules
+and ``repro.client`` import it, so it must import neither.
+
+* :func:`warn_legacy` — emit the one-shot warning for a named entry
+  point (no-op on repeat calls and inside :func:`internal_use`);
+* :func:`internal_use` — context manager the client backends (and any
+  other infrastructure code) wrap around legacy calls so that the
+  *delegation target* never warns about itself;
+* :func:`reset_warnings` — forget which warnings fired (test support
+  for the "exactly once per process" contract).
+"""
+from __future__ import annotations
+
+import warnings
+from contextlib import contextmanager
+
+_warned: set[str] = set()
+_suppress_depth: int = 0
+
+
+def warn_legacy(entry_point: str, replacement: str) -> None:
+    """FutureWarning for ``entry_point``, at most once per process.
+
+    ``replacement`` is the client-call spelling (shown verbatim in the
+    message).  Calls made under :func:`internal_use` never warn — the
+    client's own backends run on the legacy machinery by design.
+    """
+    if _suppress_depth or entry_point in _warned:
+        return
+    _warned.add(entry_point)
+    warnings.warn(
+        f"{entry_point} is a legacy entry point; use {replacement} "
+        "(see docs/client.md for the migration table). "
+        "This shim keeps delegating, so behaviour is unchanged.",
+        FutureWarning, stacklevel=3)
+
+
+@contextmanager
+def internal_use():
+    """Suppress legacy warnings for calls made by the framework itself
+    (client backends constructing engines, shims delegating inward)."""
+    global _suppress_depth
+    _suppress_depth += 1
+    try:
+        yield
+    finally:
+        _suppress_depth -= 1
+
+
+def reset_warnings() -> None:
+    """Forget fired warnings (tests of the once-per-process contract)."""
+    _warned.clear()

@@ -41,10 +41,11 @@ from repro.config.base import SolverConfig
 from repro.problems.base import Problem
 from repro.problems.families import get_family, infer_family
 from repro.path.grid import geometric_grid, lambda_max, validate_grid
+from repro.deprecation import warn_legacy
 from repro.path.screening import (DEFAULT_KKT_SLACK, ScreenReport,
                                   block_scores, expand_blocks,
                                   kkt_violations, strong_rule_active)
-from repro.solvers.batched import solve_batched
+from repro.solvers.batched import _solve_batched
 
 #: Screening falls back to an unscreened solve after this many KKT
 #: re-admission rounds at one path point (never observed > 2 in anger;
@@ -93,12 +94,12 @@ def _resolve_grid(problem: Problem, lambdas, n_points: int,
     return grid, lam_max
 
 
-def solve_path(problem: Problem, lambdas=None, *, n_points: int = 20,
-               lam_min_ratio: float = 0.01,
-               cfg: SolverConfig | None = None,
-               warm: bool = True, screen: bool = True,
-               kkt_slack: float = DEFAULT_KKT_SLACK,
-               lam_batch: int = 1) -> PathResult:
+def _solve_path(problem: Problem, lambdas=None, *, n_points: int = 20,
+                lam_min_ratio: float = 0.01,
+                cfg: SolverConfig | None = None,
+                warm: bool = True, screen: bool = True,
+                kkt_slack: float = DEFAULT_KKT_SLACK,
+                lam_batch: int = 1, tol_schedule=None) -> PathResult:
     """Solve a decreasing λ-grid for one lasso/group-lasso instance.
 
     Every point (and every KKT re-admission round) runs through the
@@ -134,6 +135,17 @@ def solve_path(problem: Problem, lambdas=None, *, n_points: int = 20,
                     waste included) is the baseline ``BENCH_path.json``
                     gates against.
 
+    tol_schedule  : optional per-point stopping tolerances (length-P
+                    array-like aligned with the resolved grid) — the
+                    coarse-to-fine continuation knob for CV sweeps: run
+                    the whole grid at a loose tol, then re-solve only
+                    the selected λ at full accuracy (the client's
+                    ``CVSpec.tol_coarse`` does exactly this).  ``None``
+                    keeps ``cfg.tol`` everywhere.  Points sharing a
+                    ``lam_batch`` chunk run at the *tightest* tolerance
+                    in the chunk (never looser than asked).  Each
+                    distinct tolerance is one extra compile-cache entry.
+
     Note on randomized selection rules: the batched engine keys each
     row's PRNG stream by its batch index, so random/hybrid trajectories
     differ from a solo ``solve()`` of the same point (deterministic rules
@@ -154,6 +166,7 @@ def solve_path(problem: Problem, lambdas=None, *, n_points: int = 20,
     n, bs = problem.n, problem.block_size
     n_blocks = problem.n_blocks
     P = grid.shape[0]
+    tols = _resolve_tol_schedule(tol_schedule, cfg, P)
 
     xs = np.zeros((P, n), np.float32)
     V = np.zeros(P); iters = np.zeros(P, np.int64)
@@ -188,8 +201,11 @@ def solve_path(problem: Problem, lambdas=None, *, n_points: int = 20,
             continue
 
         chunk = list(range(k, min(k + lam_batch, P)))
+        # Chunk-mates share one compiled program, so they run at the
+        # tightest tolerance in the chunk (never looser than asked).
+        cfg_k = _cfg_at_tol(cfg, float(tols[chunk].min()))
         out = _solve_chunk(problem, fam, grid[chunk], c_prev,
-                           x_prev, scores_prev, cfg, warm=warm,
+                           x_prev, scores_prev, cfg_k, warm=warm,
                            screen=screen, kkt_slack=kkt_slack)
         for j, kk in enumerate(chunk):
             xs[kk] = out["x"][j]
@@ -214,7 +230,28 @@ def solve_path(problem: Problem, lambdas=None, *, n_points: int = 20,
         row_iters=int(row_iters), lam_max=lam_max,
         meta={"family": family, "warm": warm, "screen": screen,
               "lam_batch": lam_batch,
+              "tol_schedule": (None if tol_schedule is None
+                               else [float(t) for t in tols]),
               "wall_s": time.perf_counter() - t0})
+
+
+def _resolve_tol_schedule(tol_schedule, cfg: SolverConfig,
+                          P: int) -> np.ndarray:
+    """Per-point stopping tolerances (``cfg.tol`` where unspecified)."""
+    if tol_schedule is None:
+        return np.full(P, float(cfg.tol))
+    tols = np.asarray(tol_schedule, np.float64).ravel()
+    if tols.shape != (P,):
+        raise ValueError(
+            f"tol_schedule must align with the λ-grid: expected shape "
+            f"({P},), got {tols.shape}")
+    return tols
+
+
+def _cfg_at_tol(cfg: SolverConfig, tol: float) -> SolverConfig:
+    """``cfg`` with ``tol`` overridden (identity when unchanged, so the
+    compile cache sees the very same key)."""
+    return cfg if tol == cfg.tol else dataclasses.replace(cfg, tol=tol)
 
 
 def _screen_mask(fam, scores_prev, c_new, c_prev, x_warm, n_blocks, bs,
@@ -284,7 +321,7 @@ def _solve_chunk(problem, fam, cs, c_prev, x_prev, scores_prev, cfg, *,
     while True:
         mask_c = np.stack([expand_blocks(active[i], bs)
                            for i in range(B)])
-        r = solve_batched(probs, x0=x0 * mask_c, cfg=cfg,
+        r = _solve_batched(probs, x0=x0 * mask_c, cfg=cfg,
                           active=jnp.asarray(mask_c) if screen else None)
         it = np.asarray(r.iters, np.int64)
         total_iters += it
@@ -316,12 +353,12 @@ def _solve_chunk(problem, fam, cs, c_prev, x_prev, scores_prev, cfg, *,
     }
 
 
-def solve_path_batched(problems, lambdas=None, *, n_points: int = 20,
-                       lam_min_ratio: float = 0.01,
-                       cfg: SolverConfig | None = None,
-                       warm: bool = True, screen: bool = True,
-                       kkt_slack: float = DEFAULT_KKT_SLACK
-                       ) -> list[PathResult]:
+def _solve_path_batched(problems, lambdas=None, *, n_points: int = 20,
+                        lam_min_ratio: float = 0.01,
+                        cfg: SolverConfig | None = None,
+                        warm: bool = True, screen: bool = True,
+                        kkt_slack: float = DEFAULT_KKT_SLACK,
+                        tol_schedule=None) -> list[PathResult]:
     """Sweep ONE λ-grid over B same-signature instances in lockstep.
 
     The cross-validation workhorse: each fold is one instance; every grid
@@ -352,6 +389,7 @@ def solve_path_batched(problems, lambdas=None, *, n_points: int = 20,
     else:
         grid = validate_grid(lambdas)
     P = grid.shape[0]
+    tols = _resolve_tol_schedule(tol_schedule, cfg, P)
 
     xs = np.zeros((B, P, n), np.float32)
     V = np.zeros((B, P)); iters = np.zeros((B, P), np.int64)
@@ -370,6 +408,7 @@ def solve_path_batched(problems, lambdas=None, *, n_points: int = 20,
     t0 = time.perf_counter()
     for k in range(P):
         ck = float(grid[k])
+        cfg_k = _cfg_at_tol(cfg, float(tols[k]))
         probs_k = [_problem_at(problems[i], ck) for i in range(B)]
         # A fold whose own λ_max is below ck has the certified solution 0;
         # its mask is emptied below (the solver confirms it in a handful
@@ -396,7 +435,7 @@ def solve_path_batched(problems, lambdas=None, *, n_points: int = 20,
         while True:
             mask_c = np.stack([expand_blocks(active[i], bs)
                                for i in range(B)])
-            r = solve_batched(probs_k, x0=x0 * mask_c, cfg=cfg,
+            r = _solve_batched(probs_k, x0=x0 * mask_c, cfg=cfg_k,
                               active=jnp.asarray(mask_c)
                               if screen else None)
             it = np.asarray(r.iters, np.int64)
@@ -444,5 +483,49 @@ def solve_path_batched(problems, lambdas=None, *, n_points: int = 20,
             meta={"family": family, "warm": warm, "screen": screen,
                   "instances": B, "instance": i,
                   "sweep_row_iters": int(sweep_row_iters),
+                  "tol_schedule": (None if tol_schedule is None
+                                   else [float(t) for t in tols]),
                   "wall_s": wall}))
     return results
+
+
+# ===================================================================== #
+# Legacy front doors (thin deprecation shims over the client)           #
+# ===================================================================== #
+def solve_path(problem: Problem, lambdas=None, *, n_points: int = 20,
+               lam_min_ratio: float = 0.01,
+               cfg: SolverConfig | None = None,
+               warm: bool = True, screen: bool = True,
+               kkt_slack: float = DEFAULT_KKT_SLACK,
+               lam_batch: int = 1, tol_schedule=None) -> PathResult:
+    """Legacy spelling of a path workload — delegates to the client
+    (``FlexaClient().run(PathSpec(...))``); see :func:`_solve_path` for
+    the parameter documentation.  Emits a one-shot :class:`FutureWarning`
+    per process."""
+    warn_legacy("repro.path.solve_path",
+                "FlexaClient().run(PathSpec(problem, ...))")
+    from repro.client import FlexaClient, PathSpec
+    return FlexaClient(solver=cfg).run(PathSpec(
+        problem=problem, lambdas=lambdas, n_points=n_points,
+        lam_min_ratio=lam_min_ratio, warm=warm, screen=screen,
+        kkt_slack=kkt_slack, lam_batch=lam_batch,
+        tol_schedule=tol_schedule))
+
+
+def solve_path_batched(problems, lambdas=None, *, n_points: int = 20,
+                       lam_min_ratio: float = 0.01,
+                       cfg: SolverConfig | None = None,
+                       warm: bool = True, screen: bool = True,
+                       kkt_slack: float = DEFAULT_KKT_SLACK,
+                       tol_schedule=None) -> list[PathResult]:
+    """Legacy spelling of a lockstep fold sweep — delegates to the client
+    (``FlexaClient().run(CVSpec(...))`` without a scoring stage); see
+    :func:`_solve_path_batched` for parameters.  Emits a one-shot
+    :class:`FutureWarning` per process."""
+    warn_legacy("repro.path.solve_path_batched",
+                "FlexaClient().run(CVSpec(problems, ...))")
+    from repro.client import CVSpec, FlexaClient
+    return FlexaClient(solver=cfg).run(CVSpec(
+        problems=list(problems), lambdas=lambdas, n_points=n_points,
+        lam_min_ratio=lam_min_ratio, warm=warm, screen=screen,
+        kkt_slack=kkt_slack, tol_schedule=tol_schedule)).folds

@@ -1,24 +1,35 @@
 """Serving layer: LM generation + two solver-serving runtimes.
 
+The solver engines here are the *backends* behind the client front door
+(``repro.client.FlexaClient`` with ``backend="wave"``/``"continuous"``);
+constructing them directly still works but emits a one-shot
+``FutureWarning`` (see ``docs/client.md``).
+
 * :class:`ServeEngine` — LM prefill/decode with static KV-cache buckets.
 * :class:`SolverServeEngine` — wave-batched solver serving (padded
-  power-of-two buckets over cached compiled programs).
+  power-of-two buckets over cached compiled programs); takes a
+  :class:`ServeConfig` directly (``max_batch=`` kwarg remains as a
+  back-compat override).
 * :class:`ContinuousSolverEngine` — continuous batching: slot slabs,
   chunked compiled steps, eviction/backfill from a policy-ordered
   admission queue (``repro.serve.continuous``).
+* :class:`PathRequest` / :class:`PathState` — the engine-agnostic
+  point-by-point path protocol (``repro.serve.pathstate``), driven by
+  the continuous engine natively and by the client's wave backend.
 * :class:`ServeTelemetry` — shared latency/occupancy/cache telemetry
   (``repro.serve.metrics``).
 """
 from repro.serve.continuous import (AdmissionQueue, ContinuousSolverEngine,
-                                    PathRequest, QueueEntry)
+                                    QueueEntry)
 from repro.serve.engine import (GenerationResult, ServeEngine, SolveRequest,
                                 SolveResponse, SolverServeEngine)
 from repro.serve.metrics import RequestTrace, ServeTelemetry
+from repro.serve.pathstate import PathRequest, PathState
 
 __all__ = [
     "GenerationResult", "ServeEngine",
     "SolveRequest", "SolveResponse", "SolverServeEngine",
     "ContinuousSolverEngine", "AdmissionQueue", "QueueEntry",
-    "PathRequest",
+    "PathRequest", "PathState",
     "RequestTrace", "ServeTelemetry",
 ]

@@ -37,7 +37,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.config.base import ModelConfig, ShapeConfig, SolverConfig
+from repro.config.base import (ModelConfig, ServeConfig, ShapeConfig,
+                               SolverConfig)
+from repro.deprecation import warn_legacy
 from repro.models import io as IO
 from repro.models import transformer as T
 from repro.problems.families import get_family
@@ -268,11 +270,23 @@ class SolverServeEngine:
     over the same compiled-program cache.
     """
 
-    def __init__(self, cfg: SolverConfig | None = None, *,
-                 max_batch: int = 16,
+    def __init__(self, cfg: SolverConfig | None = None,
+                 serve: ServeConfig | None = None, *,
+                 max_batch: int | None = None,
                  telemetry: ServeTelemetry | None = None):
+        """``serve`` carries the wave knob (``ServeConfig.max_batch``) —
+        the same config object the continuous engine takes, so callers
+        configure both runtimes from one place.  The plain ``max_batch=``
+        kwarg remains as a back-compat override (it wins when both are
+        given).  Prefer the front door: ``repro.client.FlexaClient``
+        with ``backend="wave"``."""
+        warn_legacy(
+            "repro.serve.SolverServeEngine",
+            'FlexaClient(backend="wave").run(...)')
         self.cfg = cfg or SolverConfig()
-        self.max_batch = int(max_batch)
+        self.serve = serve or ServeConfig()
+        self.max_batch = int(self.serve.max_batch if max_batch is None
+                             else max_batch)
         self.telemetry = telemetry or ServeTelemetry()
         self.stats = {"requests": 0, "batches": 0, "padded": 0,
                       "signatures": 0, "occupancy": 0.0,

@@ -1,16 +1,21 @@
-"""Unified solver surface for the composite problem  min F(x) + G(x).
+"""Solver substrate for the composite problem  min F(x) + G(x).
 
-One import gives the whole algorithm family behind a single contract:
+The user-facing front door is now ``repro.client``
+(:class:`~repro.client.FlexaClient` + typed specs — see
+``docs/client.md``); this package holds the machinery the client's
+backends execute, plus the legacy entry points as one-shot-
+``FutureWarning`` shims that delegate to the client:
 
     from repro.solvers import solve, solve_batched, SolverResult
 
-    r = solve(problem, method="flexa")        # or fista / admm / grock /
-    print(r.iters, r.history["V"][-1])        #    gauss_seidel / pflexa
+    r = solve(problem, method="flexa")        # shim → FlexaClient(...)
+    print(r.iters, r.history["V"][-1])        # contract unchanged
 
-* :func:`solve` — facade dispatching to the registry (``registry.py``);
-  every method returns the same :class:`SolverResult` / history contract.
-* :func:`solve_batched` — the batched multi-instance FLEXA engine: B
-  independent Lasso / group-Lasso instances advance in lock-step inside one
+* :func:`solve` — legacy facade shim (``api.py``; the registry dispatch
+  itself lives on as ``api._solve``); every method returns the same
+  :class:`SolverResult` / history contract.
+* :func:`solve_batched` — legacy shim over the batched multi-instance
+  FLEXA engine: B independent instances advance in lock-step inside one
   compiled (vmap + while_loop) program (``batched.py``).
 * the resumable slab core (:func:`slab_alloc` / :func:`make_chunk_stepper`
   / :func:`make_slot_writer`) — what the continuous-batching runtime

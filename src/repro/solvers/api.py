@@ -22,14 +22,15 @@ For many *concurrent* instances use :func:`repro.solvers.solve_batched`
 from __future__ import annotations
 
 from repro.config.base import SolverConfig
+from repro.deprecation import warn_legacy
 from repro.problems.base import Problem
 from repro.solvers.registry import get_solver
 from repro.solvers.result import SolverResult
 
 
-def solve(problem: Problem, method: str = "flexa",
-          cfg: SolverConfig | None = None, x0=None,
-          **options) -> SolverResult:
+def _solve(problem: Problem, method: str = "flexa",
+           cfg: SolverConfig | None = None, x0=None,
+           **options) -> SolverResult:
     """Solve ``min F(x) + G(x)`` with a registered method.
 
     Parameters
@@ -54,3 +55,17 @@ def solve(problem: Problem, method: str = "flexa",
     result = get_solver(method)(problem, x0, cfg, **options)
     result.method = method
     return result
+
+
+def solve(problem: Problem, method: str = "flexa",
+          cfg: SolverConfig | None = None, x0=None,
+          **options) -> SolverResult:
+    """Legacy spelling of a solo workload — delegates to the client
+    (``FlexaClient().run(SoloSpec(...))``; same contract, see
+    :func:`_solve` for the parameter documentation).  Emits a one-shot
+    :class:`FutureWarning` per process."""
+    warn_legacy("repro.solvers.solve",
+                "FlexaClient().run(SoloSpec(problem, ...))")
+    from repro.client import FlexaClient, SoloSpec
+    return FlexaClient(solver=cfg).run(SoloSpec(
+        problem=problem, method=method, x0=x0, options=options)).raw

@@ -64,6 +64,7 @@ import jax.numpy as jnp
 
 from repro.config.base import SolverConfig
 from repro.core import flexa as _flexa
+from repro.deprecation import warn_legacy
 from repro.core.flexa import FlexaState, flexa_iteration
 from repro.problems.base import Problem
 from repro.problems.families import build_problem, get_family, infer_family
@@ -435,10 +436,10 @@ def _stack_instances(problems: Sequence[Problem]):
     return spec, data, c
 
 
-def solve_batched(problems: Sequence[Problem], x0=None,
-                  cfg: SolverConfig | None = None,
-                  record_history: bool = False,
-                  active=None) -> SolverResult:
+def _solve_batched(problems: Sequence[Problem], x0=None,
+                   cfg: SolverConfig | None = None,
+                   record_history: bool = False,
+                   active=None) -> SolverResult:
     """Solve B independent instances in one compiled FLEXA program.
 
     The instances may come from any registered problem family (lasso,
@@ -513,3 +514,19 @@ def solve_batched(problems: Sequence[Problem], x0=None,
         history=hist, method="flexa_batched",
         meta={"batch": B, "family": spec.family,
               "wall_s": time.perf_counter() - t0})
+
+
+def solve_batched(problems: Sequence[Problem], x0=None,
+                  cfg: SolverConfig | None = None,
+                  record_history: bool = False,
+                  active=None) -> SolverResult:
+    """Legacy spelling of a batch workload — delegates to the client
+    (``FlexaClient().run(BatchSpec(...))``; same contract, see
+    :func:`_solve_batched` for the parameter documentation).  Emits a
+    one-shot :class:`FutureWarning` per process."""
+    warn_legacy("repro.solvers.solve_batched",
+                "FlexaClient().run(BatchSpec(problems, ...))")
+    from repro.client import BatchSpec, FlexaClient
+    return FlexaClient(solver=cfg).run(BatchSpec(
+        problems=list(problems), x0=x0, active=active,
+        record_history=record_history)).raw

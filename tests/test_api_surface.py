@@ -1,0 +1,191 @@
+"""Public-API surface snapshot + deprecation-shim contracts.
+
+Three things are pinned here:
+
+1. the exact public exports of ``repro.solvers`` / ``repro.serve`` /
+   ``repro.path`` / ``repro.client`` (an intentional API change must
+   edit the snapshot — an accidental one fails loudly);
+2. every legacy entry point *delegates to the client path* (the shims
+   construct a FlexaClient and hand it the equivalent spec — verified
+   by interception, not by trusting the docstring);
+3. the one-shot FutureWarning contract: each legacy entry point warns
+   exactly once per process, and the client's own backends never
+   trigger the warnings (they run under ``deprecation.internal_use``).
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.client
+import repro.path
+import repro.serve
+import repro.solvers
+from repro import deprecation
+from repro.config.base import ServeConfig, SolverConfig
+from repro.problems.lasso import nesterov_instance
+
+# ------------------------------------------------------------------ #
+# 1. Surface snapshot                                                #
+# ------------------------------------------------------------------ #
+SURFACE = {
+    "repro.solvers": [
+        "BatchedProblemSpec", "SlabState", "SolverResult",
+        "available_methods", "cache_stats", "get_solver",
+        "make_batched_solver", "make_chunk_stepper", "make_slot_writer",
+        "register", "slab_alloc", "solve", "solve_batched",
+    ],
+    "repro.serve": [
+        "AdmissionQueue", "ContinuousSolverEngine", "GenerationResult",
+        "PathRequest", "PathState", "QueueEntry", "RequestTrace",
+        "ServeEngine", "ServeTelemetry", "SolveRequest", "SolveResponse",
+        "SolverServeEngine",
+    ],
+    "repro.path": [
+        "DEFAULT_KKT_SLACK", "MAX_KKT_ROUNDS", "PathResult",
+        "ScreenReport", "block_scores", "geometric_grid",
+        "kkt_violations", "lambda_max", "solve_path",
+        "solve_path_batched", "strong_rule_active", "validate_grid",
+    ],
+    "repro.client": [
+        "Backend", "BatchResult", "BatchSpec", "CVResult", "CVSpec",
+        "ClientConfig", "ClientError", "ContinuousBackend",
+        "FlexaClient", "InlineBackend", "PathResult", "PathSpec",
+        "SoloResult", "SoloSpec", "SpecError", "UnknownBackendError",
+        "UnsupportedWorkloadError", "WaveBackend", "WorkItem",
+        "available_backends", "make_backend", "normalize",
+        "register_backend", "solve_request_of",
+    ],
+}
+
+
+@pytest.mark.parametrize("module", sorted(SURFACE))
+def test_public_surface_snapshot(module):
+    import importlib
+    mod = importlib.import_module(module)
+    assert sorted(mod.__all__) == SURFACE[module], (
+        f"{module}.__all__ drifted — if the API change is intentional, "
+        "update the snapshot in tests/test_api_surface.py")
+    for name in mod.__all__:
+        assert hasattr(mod, name), f"{module}.{name} exported but absent"
+
+
+# ------------------------------------------------------------------ #
+# 2. Shim delegation                                                 #
+# ------------------------------------------------------------------ #
+@pytest.fixture
+def mini():
+    return nesterov_instance(m=16, n=32, nnz_frac=0.2, c=1.0, seed=0)
+
+
+LEGACY = [
+    (lambda p: repro.solvers.solve(p), "SoloSpec"),
+    (lambda p: repro.solvers.solve_batched([p]), "BatchSpec"),
+    (lambda p: repro.path.solve_path(p, n_points=3), "PathSpec"),
+    (lambda p: repro.path.solve_path_batched([p], n_points=3), "CVSpec"),
+]
+
+
+@pytest.mark.parametrize("call,spec_name",
+                         LEGACY, ids=[s for _, s in LEGACY])
+def test_legacy_entry_points_delegate_to_client(call, spec_name, mini,
+                                                monkeypatch):
+    """Intercept FlexaClient.run: each legacy call must route through
+    the client with the matching spec type."""
+    from types import SimpleNamespace
+
+    from repro.client.session import FlexaClient
+
+    seen = []
+
+    def fake_run(self, spec):
+        seen.append(type(spec).__name__)
+        return SimpleNamespace(raw="raw-sentinel",
+                               folds=["folds-sentinel"])
+
+    monkeypatch.setattr(FlexaClient, "run", fake_run)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", FutureWarning)
+        out = call(mini)
+    assert seen == [spec_name]
+    # solo/batch shims unwrap .raw, the fold sweep unwraps .folds, and
+    # the path shim returns the client's PathResult as-is.
+    assert out == "raw-sentinel" or out == ["folds-sentinel"] \
+        or getattr(out, "raw", None) == "raw-sentinel"
+
+
+def test_legacy_solve_returns_identical_result(mini):
+    """Delegation is transparent: the shim's answer is bitwise the
+    inline implementation's answer, full history contract included."""
+    from repro.solvers.api import _solve
+
+    cfg = SolverConfig(max_iters=50, tol=0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", FutureWarning)
+        shim = repro.solvers.solve(mini, cfg=cfg)
+    ref = _solve(mini, cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(shim.x), np.asarray(ref.x))
+    assert shim.iters == ref.iters
+    assert len(shim.history["V"]) == len(ref.history["V"])
+
+
+# ------------------------------------------------------------------ #
+# 3. One-shot FutureWarning                                          #
+# ------------------------------------------------------------------ #
+def _future_warnings(w):
+    return [x for x in w if issubclass(x.category, FutureWarning)]
+
+
+def test_futurewarning_fires_exactly_once_per_entry_point(mini):
+    deprecation.reset_warnings()
+    try:
+        cfg = SolverConfig(max_iters=5, tol=0)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            repro.solvers.solve(mini, cfg=cfg)
+            repro.solvers.solve(mini, cfg=cfg)      # second call: silent
+        fw = _future_warnings(w)
+        assert len(fw) == 1
+        assert "repro.solvers.solve" in str(fw[0].message)
+        assert "FlexaClient" in str(fw[0].message)
+
+        # A *different* entry point still announces itself once.
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            repro.solvers.solve_batched([mini], cfg=cfg)
+            repro.solvers.solve_batched([mini], cfg=cfg)
+        assert len(_future_warnings(w)) == 1
+    finally:
+        deprecation.reset_warnings()
+
+
+def test_engine_construction_warns_once(mini):
+    deprecation.reset_warnings()
+    try:
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            repro.serve.SolverServeEngine(SolverConfig(max_iters=5))
+            repro.serve.SolverServeEngine(SolverConfig(max_iters=5))
+            repro.serve.ContinuousSolverEngine(
+                SolverConfig(max_iters=5), ServeConfig(slab_capacity=2))
+        fw = _future_warnings(w)
+        assert len(fw) == 2                 # one per engine class
+    finally:
+        deprecation.reset_warnings()
+
+
+def test_client_backends_never_trigger_legacy_warnings(mini):
+    """The front door must not warn about the machinery it fronts."""
+    from repro.client import FlexaClient, SoloSpec
+
+    deprecation.reset_warnings()
+    try:
+        cfg = SolverConfig(tol=1e-6, max_iters=500, tau_adapt=False)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            for backend in ("inline", "wave", "continuous"):
+                FlexaClient(backend=backend, solver=cfg).run(
+                    SoloSpec(problem=mini))
+        assert _future_warnings(w) == []
+    finally:
+        deprecation.reset_warnings()
