@@ -47,16 +47,43 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
+import sys
 import time
 from dataclasses import dataclass
 from pathlib import Path
+
+
+def _force_host_devices_from_argv() -> int:
+    """Pre-parse ``--devices N`` and force N host CPU devices.
+
+    XLA fixes the device count when jax initializes, so the flag must
+    land in the environment BEFORE the ``repro`` imports below pull jax
+    in — argparse would run far too late.  A pre-set
+    ``xla_force_host_platform_device_count`` (e.g. from the CI job env)
+    wins; we never override the caller's topology.
+    """
+    if "--devices" not in sys.argv:
+        return 0
+    try:
+        n = int(sys.argv[sys.argv.index("--devices") + 1])
+    except (IndexError, ValueError):
+        return 0
+    flags = os.environ.get("XLA_FLAGS", "")
+    if n > 1 and "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip())
+    return n
+
+
+_force_host_devices_from_argv()
 
 import numpy as np
 
 from repro.client import FlexaClient, SoloSpec
 from repro.config.base import ServeConfig, SolverConfig
 from repro.problems.lasso import nesterov_instance
-from repro.serve import ServeTelemetry
+from repro.serve import MeshTelemetry, ServeTelemetry
 
 RESULTS = Path(__file__).resolve().parent.parent / "results" / "bench"
 
@@ -270,6 +297,191 @@ def summarize(tele: ServeTelemetry, engine: str) -> dict:
 
 
 # ------------------------------------------------------------------ #
+# Mesh bench (--devices N): fully virtual-tick, fully deterministic  #
+# ------------------------------------------------------------------ #
+class TickClock:
+    """A virtual clock the replay loop sets by hand: time is measured in
+    *slab-iteration units* and advances ``chunk_iters`` units per
+    scheduler tick.  No ``perf_counter`` anywhere — every latency
+    percentile, makespan and throughput figure derived from it is
+    bit-reproducible across machines, which is what lets the mesh gate
+    run in CI (PR 3 rule: no wall-clock comparisons in CI)."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def replay_ticks(trace, problems, backend: str, cfg: SolverConfig,
+                 serve: ServeConfig):
+    """Replay a trace on virtual tick time; returns
+    ``(client, tickets, telemetry, ticks)``.
+
+    One scheduler tick advances virtual time by ``serve.chunk_iters``
+    units (each live slot executed that many FLEXA iterations), so the
+    arrival timeline in iteration units needs no machine calibration;
+    the idle server jumps to the next arrival.
+    """
+    clock = TickClock()
+    tele = (MeshTelemetry(clock=clock) if backend == "mesh"
+            else ServeTelemetry(clock=clock))
+    client = FlexaClient(backend=backend, solver=cfg, serve=serve,
+                         telemetry=tele)
+    tickets = []
+    i = 0
+    ticks = 0
+    while i < len(trace) or client.pending:
+        if i < len(trace) and not client.pending:
+            clock.t = max(clock.t, trace[i].arrival)
+        while i < len(trace) and trace[i].arrival <= clock.t:
+            tickets.append(client.submit(SoloSpec(problem=problems[i]),
+                                         arrival=trace[i].arrival))
+            i += 1
+        if client.pending:
+            client.step()
+            ticks += 1
+        clock.t += serve.chunk_iters
+    return client, tickets, tele, ticks
+
+
+def _tick_summary(tele, ticks: int, engine_key: str) -> dict:
+    snap = tele.snapshot()
+    side = snap.get("continuous", {})
+    live = side.get("live_iters", 0)
+    out = {
+        "requests": snap["requests"],
+        "converged": snap["converged"],
+        "ticks": ticks,
+        "live_row_iters": live,
+        "row_iters": side.get("row_iters"),
+        "occupancy_mean": side.get("occupancy_mean"),
+        "padding_waste": side.get("padding_waste"),
+        # THE gate metric: useful device row iterations per scheduler
+        # tick — how much solving the engine completes per unit of
+        # virtual time.  Pure function of the schedule; no timers.
+        "live_row_iters_per_tick": live / ticks if ticks else 0.0,
+        "latency_p50_units": snap["latency_p50"],
+        "latency_p99_units": snap["latency_p99"],
+    }
+    if engine_key == "mesh":
+        out["mesh"] = snap["mesh"]
+    return out
+
+
+def main_mesh(devices: int, requests: int = 48, seed: int = 0,
+              m: int = 64, n: int = 256, max_iters: int = 2500,
+              slab_capacity: int = 2, chunk_iters: int = 50,
+              routing: str = "least_loaded", steal_threshold: int = 1,
+              smoke: bool = False) -> dict:
+    """Heavy-tail trace: ``devices``-device mesh engine vs the 1-device
+    continuous engine, everything on virtual tick time.
+
+    ``slab_capacity`` is PER DEVICE, so the mesh engine holds
+    ``devices×`` the slots — exactly the paper's Jacobi premise that
+    independent blocks scale with workers.  Writes
+    ``results/bench/BENCH_serve_mesh.json``; the deterministic gate
+    demands ≥1.5× useful-row-iterations-per-tick at 4 devices, mesh
+    results within 1e-5 of the single-device continuous engine
+    per-request, and telemetry rollup conservation.
+    """
+    import jax
+    avail = len(jax.devices())
+    if avail < devices:
+        raise SystemExit(
+            f"--devices {devices}: only {avail} jax device(s) came up "
+            "(is XLA_FLAGS already set in the environment without "
+            "xla_force_host_platform_device_count?)")
+    if smoke:
+        # More requests than the wave/continuous smoke and a lower
+        # iteration cap: the ratio compares saturated schedules, and the
+        # slowest single request floors the mesh's tick count at
+        # max_iters/chunk_iters whatever the device count — total work
+        # must dwarf that floor for the device scaling to show.
+        requests, max_iters = 40, 1600
+    cfg = SolverConfig(max_iters=max_iters, tol=1e-7, tau_adapt=False)
+    serve_mesh = ServeConfig(slab_capacity=slab_capacity,
+                             chunk_iters=chunk_iters,
+                             mesh_devices=devices, mesh_routing=routing,
+                             steal_threshold=steal_threshold)
+    serve_cont = ServeConfig(slab_capacity=slab_capacity,
+                             chunk_iters=chunk_iters)
+
+    trace = TRACES["heavy_tail"](requests, seed)
+    problems = [build_instance(t, m, n) for t in trace]
+
+    mesh_client, mesh_tk, mesh_tele, mesh_ticks = replay_ticks(
+        trace, problems, "mesh", cfg, serve_mesh)
+    cont_client, cont_tk, cont_tele, cont_ticks = replay_ticks(
+        trace, problems, "continuous", cfg, serve_cont)
+
+    mesh_sum = _tick_summary(mesh_tele, mesh_ticks, "mesh")
+    cont_sum = _tick_summary(cont_tele, cont_ticks, "continuous")
+    thr_m = mesh_sum["live_row_iters_per_tick"]
+    thr_c = cont_sum["live_row_iters_per_tick"]
+    ratio = thr_m / thr_c if thr_c else None
+
+    # Per-request equivalence mesh@D vs continuous@1: the freeze merge
+    # makes each answer independent of the schedule, so only fp32
+    # reduction-order noise may remain.
+    max_diff = 0.0
+    for tm, tc in zip(mesh_tk, cont_tk):
+        xm = np.asarray(mesh_client.result(tm).x)
+        xc = np.asarray(cont_client.result(tc).x)
+        max_diff = max(max_diff, float(np.abs(xm - xc).max()))
+
+    # Rollup conservation, re-derived from the snapshot itself.
+    msnap = mesh_tele.snapshot()
+    conserved = all(
+        msnap["continuous"][k] == sum(d[k] for d in
+                                      msnap["mesh"]["per_device"])
+        for k in ("chunks", "chunk_iters", "row_iters", "live_iters",
+                  "chunk_wall_s"))
+
+    artifact = {
+        "smoke": smoke, "devices": devices, "requests": requests,
+        "seed": seed, "trace": "heavy_tail",
+        "instance": {"m": m, "n": n, "nnz_easy": NNZ_EASY,
+                     "nnz_hard": NNZ_HARD},
+        "solver_cfg": {"max_iters": max_iters, "tol": cfg.tol,
+                       "tau_adapt": cfg.tau_adapt},
+        "serve_cfg": {"slab_capacity_per_device": slab_capacity,
+                      "chunk_iters": chunk_iters, "routing": routing,
+                      "steal_threshold": steal_threshold},
+        "mesh": mesh_sum,
+        "continuous_1dev": cont_sum,
+        "throughput_ratio": ratio,
+        "equivalence": {"max_abs_diff_vs_1dev": max_diff,
+                        "tolerance": 1e-5,
+                        "checked_requests": requests},
+        "acceptance": {
+            "mesh_throughput_gain_ok":
+                bool(ratio is not None
+                     and ratio >= (1.5 if devices >= 4 else 1.0)),
+            "equivalence_ok": bool(max_diff <= 1e-5),
+            "rollup_conservation_ok": bool(conserved),
+        },
+    }
+    # Every criterion here is deterministic (virtual ticks, row-iter
+    # counts, exact counter sums) — the whole gate runs in CI.
+    artifact["gate"] = list(artifact["acceptance"])
+
+    print(f"[mesh x{devices}] {thr_m:8.1f} live row-iters/tick over "
+          f"{mesh_ticks} ticks, steals={msnap['mesh']['steals']}")
+    print(f"[cont x1    ] {thr_c:8.1f} live row-iters/tick over "
+          f"{cont_ticks} ticks")
+    print(f"throughput ratio x{ratio:.2f}   "
+          f"max |x_mesh - x_1dev| = {max_diff:.2e}")
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / "BENCH_serve_mesh.json"
+    out.write_text(json.dumps(artifact, indent=2))
+    print(f"wrote {out}")
+    return artifact
+
+
+# ------------------------------------------------------------------ #
 # Main comparison                                                    #
 # ------------------------------------------------------------------ #
 def run_trace(name: str, n_requests: int, seed: int, m: int, n: int,
@@ -406,13 +618,42 @@ if __name__ == "__main__":
     ap.add_argument("--slab-capacity", type=int, default=8)
     ap.add_argument("--chunk-iters", type=int, default=100)
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="run the MESH bench instead: N-device mesh "
+                         "engine vs 1-device continuous on the "
+                         "heavy-tail trace (forces N host CPU devices; "
+                         "writes BENCH_serve_mesh.json)")
+    ap.add_argument("--routing", default="least_loaded",
+                    choices=("least_loaded", "round_robin"))
+    ap.add_argument("--steal-threshold", type=int, default=1)
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale CI configuration")
     args = ap.parse_args()
-    art = main(requests=args.requests, seed=args.seed, m=args.m, n=args.n,
-               max_iters=args.max_iters, slab_capacity=args.slab_capacity,
-               chunk_iters=args.chunk_iters, max_batch=args.max_batch,
-               smoke=args.smoke)
+    if args.devices:
+        # Per-device capacity defaults SMALL in the mesh bench: the
+        # throughput ratio compares saturated schedules, and a large
+        # 1-device slab lets the straggler request set the tick floor
+        # for both engines (ratio → 1 however many devices there are).
+        cap = (args.slab_capacity if "--slab-capacity" in sys.argv
+               else 2)
+        # Same reasoning for the chunk grain: the straggler floors the
+        # mesh at max_iters/chunk_iters ticks, so the mesh bench runs a
+        # finer K=50 grain unless one is asked for explicitly.
+        k = (args.chunk_iters if "--chunk-iters" in sys.argv else 50)
+        art = main_mesh(args.devices, requests=args.requests,
+                        seed=args.seed, m=args.m, n=args.n,
+                        max_iters=args.max_iters,
+                        slab_capacity=cap,
+                        chunk_iters=k,
+                        routing=args.routing,
+                        steal_threshold=args.steal_threshold,
+                        smoke=args.smoke)
+    else:
+        art = main(requests=args.requests, seed=args.seed, m=args.m,
+                   n=args.n, max_iters=args.max_iters,
+                   slab_capacity=args.slab_capacity,
+                   chunk_iters=args.chunk_iters, max_batch=args.max_batch,
+                   smoke=args.smoke)
     failed = [k for k in art["gate"] if not art["acceptance"][k]]
     if failed:
         raise SystemExit(f"acceptance failed on {failed}: "

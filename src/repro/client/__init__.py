@@ -17,7 +17,7 @@ scheduling.  This package is the single API over all of it:
   :class:`PathSpec`, :class:`CVSpec` — normalizing onto one internal
   :class:`WorkItem`;
 * the :class:`Backend` protocol + registry (``inline`` / ``wave`` /
-  ``continuous``; :func:`register_backend` to extend);
+  ``continuous`` / ``mesh``; :func:`register_backend` to extend);
 * result contracts: :class:`SoloResult`, :class:`BatchResult`, the
   shared :class:`~repro.path.driver.PathResult`, :class:`CVResult`;
 * the error taxonomy (:mod:`repro.client.errors`).
@@ -28,7 +28,7 @@ construction) remain as one-shot-``FutureWarning`` shims that delegate
 here — see ``docs/client.md`` for the migration table.
 """
 from repro.client.backends import (Backend, ContinuousBackend,
-                                   InlineBackend, WaveBackend,
+                                   InlineBackend, MeshBackend, WaveBackend,
                                    available_backends, make_backend,
                                    register_backend)
 from repro.client.errors import (ClientError, SpecError,
@@ -47,6 +47,7 @@ __all__ = [
     "SoloResult", "BatchResult", "PathResult", "CVResult",
     "WorkItem", "normalize", "solve_request_of",
     "Backend", "InlineBackend", "WaveBackend", "ContinuousBackend",
+    "MeshBackend",
     "available_backends", "register_backend", "make_backend",
     "ClientError", "SpecError", "UnknownBackendError",
     "UnsupportedWorkloadError",

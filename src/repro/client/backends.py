@@ -21,6 +21,11 @@ compiled program runs — the equivalence matrix in
   ContinuousSolverEngine`: slot-slab continuous batching with
   eviction/backfill; paths/CV ride the engine's native point-by-point
   admission.  The backend for sustained concurrent traffic.
+* ``mesh``       — :class:`~repro.serve.mesh.MeshServeEngine`: the
+  continuous runtime sharded over a 1-D device mesh (one slab shard +
+  admission queue per device, shared-queue routing, work stealing).
+  Same WorkItem capabilities as ``continuous``; needs > 1 visible jax
+  device to beat it (``ServeConfig.mesh_devices``).
 
 Backends construct the legacy engines under
 :func:`repro.deprecation.internal_use`, so the client never triggers
@@ -678,3 +683,33 @@ class ContinuousBackend(Backend):
     def stats(self) -> dict:
         return {"backend": self.name,
                 "pending": self.pending}
+
+
+# ------------------------------------------------------------------ #
+# Mesh backend                                                        #
+# ------------------------------------------------------------------ #
+@register_backend
+class MeshBackend(ContinuousBackend):
+    """Device-mesh continuous batching over
+    :class:`~repro.serve.mesh.MeshServeEngine` — the continuous
+    backend's protocol verbatim (admit on submit, advance on ``step``),
+    with the slabs sharded one block per mesh device.
+
+    The engine requires a :class:`~repro.serve.metrics.MeshTelemetry`;
+    :class:`~repro.client.session.FlexaClient` constructs one when the
+    backend is ``"mesh"``, so per-device occupancy and steal counters
+    surface through ``client.stats()`` like every other telemetry
+    field.
+    """
+
+    name = "mesh"
+
+    def _engine(self, cfg: SolverConfig):
+        eng = self._engines.get(cfg)
+        if eng is None:
+            from repro.serve.mesh import MeshServeEngine
+            with internal_use():
+                eng = MeshServeEngine(cfg, self.config.serve,
+                                      telemetry=self.telemetry)
+            self._engines[cfg] = eng
+        return eng

@@ -31,7 +31,7 @@ from repro.client.backends import Backend, make_backend
 from repro.client.errors import ClientError
 from repro.client.specs import WorkItem, normalize
 from repro.config.base import ClientConfig, ServeConfig, SolverConfig
-from repro.serve.metrics import ServeTelemetry
+from repro.serve.metrics import MeshTelemetry, ServeTelemetry
 
 
 class FlexaClient:
@@ -57,7 +57,13 @@ class FlexaClient:
         if serve is not None:
             cfg = cfg.replace(serve=serve)
         self.config = cfg
-        self.telemetry = telemetry or ServeTelemetry()
+        # The mesh backend records chunk counters per device, which
+        # takes the MeshTelemetry subclass (sized lazily by the engine
+        # once it knows its mesh).
+        if telemetry is None:
+            telemetry = (MeshTelemetry() if cfg.backend == "mesh"
+                         else ServeTelemetry())
+        self.telemetry = telemetry
         self._backend: Backend = make_backend(cfg, self.telemetry)
         self._tickets = itertools.count()
         self._items: dict[int, WorkItem] = {}

@@ -270,6 +270,22 @@ class ServeConfig:
     # — no signature can starve behind a chatty one, whatever order the
     # slabs were created in.
     slabs_per_tick: int = 0
+    # --- mesh engine (repro.serve.mesh.MeshServeEngine) ---
+    # Devices the slab shards over (0 = every visible jax device).  On
+    # CPU, multiple host devices come from
+    # XLA_FLAGS=--xla_force_host_platform_device_count=N set before jax
+    # initializes.  ``slab_capacity`` is PER DEVICE in the mesh engine:
+    # the sharded slab holds mesh_devices * slab_capacity slots.
+    mesh_devices: int = 0
+    # Shared-queue → per-device-queue routing: "least_loaded" (fewest
+    # live slots + queued requests, lowest device index tie-break) |
+    # "round_robin" (cyclic cursor).
+    mesh_routing: str = "least_loaded"
+    # A device with a free slot and an EMPTY local queue steals from the
+    # longest other queue holding >= steal_threshold requests (it never
+    # steals while it has local work — the steal-only-when-idle
+    # invariant the property tests pin).
+    steal_threshold: int = 1
 
 
 @dataclass(frozen=True)

@@ -13,6 +13,11 @@ constructing them directly still works but emits a one-shot
 * :class:`ContinuousSolverEngine` — continuous batching: slot slabs,
   chunked compiled steps, eviction/backfill from a policy-ordered
   admission queue (``repro.serve.continuous``).
+* :class:`MeshServeEngine` — the continuous runtime sharded over a 1-D
+  device mesh: one slab shard + admission queue per device, routed from
+  the shared queue with work stealing at the drain tail
+  (``repro.serve.mesh``); telemetry rolls up per device via
+  :class:`MeshTelemetry`.
 * :class:`PathRequest` / :class:`PathState` — the engine-agnostic
   point-by-point path protocol (``repro.serve.pathstate``), driven by
   the continuous engine natively and by the client's wave backend.
@@ -23,13 +28,15 @@ from repro.serve.continuous import (AdmissionQueue, ContinuousSolverEngine,
                                     QueueEntry)
 from repro.serve.engine import (GenerationResult, ServeEngine, SolveRequest,
                                 SolveResponse, SolverServeEngine)
-from repro.serve.metrics import RequestTrace, ServeTelemetry
+from repro.serve.mesh import MeshServeEngine
+from repro.serve.metrics import MeshTelemetry, RequestTrace, ServeTelemetry
 from repro.serve.pathstate import PathRequest, PathState
 
 __all__ = [
     "GenerationResult", "ServeEngine",
     "SolveRequest", "SolveResponse", "SolverServeEngine",
     "ContinuousSolverEngine", "AdmissionQueue", "QueueEntry",
+    "MeshServeEngine", "MeshTelemetry",
     "PathRequest", "PathState",
     "RequestTrace", "ServeTelemetry",
 ]

@@ -131,12 +131,12 @@ class _SlotSlab:
                  resolve_x0=None):
         self.spec = spec
         self.cfg = cfg
-        self.capacity = int(serve.slab_capacity)
+        self.capacity = int(self._slab_capacity(serve))
         self.chunk_iters = int(serve.chunk_iters)
         self.telemetry = telemetry
         self.queue = AdmissionQueue(serve.policy)
         self.slab = slab_alloc(spec, cfg, self.capacity)
-        self._chunk = make_chunk_stepper(spec, cfg, self.chunk_iters)
+        self._chunk = self._make_chunk()
         # warm_from resolver: req_id -> finished solution (None = still
         # in flight, defer admission).  Injected by the engine.
         self._resolve_x0 = resolve_x0 or (lambda req_id: None)
@@ -156,13 +156,31 @@ class _SlotSlab:
         self._stage_ids = np.zeros(S, np.int32)
         self._admit = np.zeros(S, bool)
         # Device-resident copy of the last shipped stage, reused on
-        # ticks without admissions (no re-upload).
-        self._payload = (tuple(jnp.asarray(a) for a in self._stage_data),
-                         jnp.asarray(self._stage_c),
-                         jnp.asarray(self._stage_x0),
-                         jnp.asarray(self._stage_ids),
-                         jnp.asarray(self._stage_active))
+        # ticks without admissions (no re-upload).  The .copy() matters
+        # even here: jnp.asarray zero-copies aligned host buffers on
+        # CPU, so without it these device arrays alias the staging
+        # buffers _stage() mutates — same race class as the per-tick
+        # payload below, just waiting for a code path that reads the
+        # initial payload after an admission.
+        self._payload = (
+            tuple(jnp.asarray(a.copy()) for a in self._stage_data),
+            jnp.asarray(self._stage_c.copy()),
+            jnp.asarray(self._stage_x0.copy()),
+            jnp.asarray(self._stage_ids.copy()),
+            jnp.asarray(self._stage_active.copy()))
         self._no_admit = jnp.zeros(S, bool)
+
+    # -- subclass hooks (the mesh slab reshapes both) -------------- #
+    def _slab_capacity(self, serve: ServeConfig) -> int:
+        return serve.slab_capacity
+
+    def _make_chunk(self):
+        return make_chunk_stepper(self.spec, self.cfg, self.chunk_iters)
+
+    def _record_chunk(self, wall: float) -> None:
+        self.telemetry.record_chunk(live=self.live, capacity=self.capacity,
+                                    chunk_iters=self.chunk_iters,
+                                    wall_s=wall)
 
     # ------------------------------------------------------------- #
     @property
@@ -195,27 +213,33 @@ class _SlotSlab:
         audit.append(rec)
         self._open_audit[entry.req_id] = rec
 
+    def _entry_x0(self, entry: QueueEntry):
+        """``(x0, admissible)`` for one queued entry: a ``warm_from``
+        dependency still in flight makes the entry inadmissible this
+        tick (the caller defers it).  ``warm_from`` always references an
+        earlier request id, so the dependency graph is acyclic and
+        deferral can never deadlock."""
+        r = entry.request
+        if r.warm_from is not None:
+            x0 = self._resolve_x0(r.warm_from)
+            return x0, x0 is not None
+        return r.x0, True
+
     def backfill(self, audit: list, tick: int) -> None:
         """Admit queued requests into free slots.
 
         A request with ``warm_from`` pointing at a still-running request
         is *deferred*: held aside for this tick and re-queued, so later
         admissible requests can take the slot (no head-of-line blocking).
-        ``warm_from`` always references an earlier request id, so the
-        dependency graph is acyclic and deferral can never deadlock.
         """
         free = [int(s) for s in np.flatnonzero(~self.active)]
         held: list[QueueEntry] = []
         while free and len(self.queue):
             entry = self.queue.pop()
-            r = entry.request
-            if r.warm_from is not None:
-                x0 = self._resolve_x0(r.warm_from)
-                if x0 is None:          # dependency still in flight
-                    held.append(entry)
-                    continue
-            else:
-                x0 = r.x0
+            x0, ok = self._entry_x0(entry)
+            if not ok:                  # dependency still in flight
+                held.append(entry)
+                continue
             self._stage(free.pop(0), entry, x0, audit, tick)
         for entry in held:
             self.queue.push(entry)
@@ -248,9 +272,7 @@ class _SlotSlab:
         # The one per-chunk host sync (copy: the host mirror is mutated).
         stop = np.array(stop_dev)
         wall = time.perf_counter() - t0
-        self.telemetry.record_chunk(live=self.live, capacity=self.capacity,
-                                    chunk_iters=self.chunk_iters,
-                                    wall_s=wall)
+        self._record_chunk(wall)
 
         finished = np.flatnonzero(stop & self.active)
         out = []
@@ -301,12 +323,15 @@ class ContinuousSolverEngine:
     request's PRNG stream is keyed by its request id alone.
     """
 
+    #: Legacy-warning identity; subclasses (the mesh engine) announce
+    #: themselves under their own name, still once per process each.
+    _LEGACY_NAME = "repro.serve.ContinuousSolverEngine"
+    _LEGACY_HINT = 'FlexaClient(backend="continuous").submit(...)'
+
     def __init__(self, cfg: SolverConfig | None = None,
                  serve: ServeConfig | None = None, *,
                  telemetry: ServeTelemetry | None = None):
-        warn_legacy(
-            "repro.serve.ContinuousSolverEngine",
-            'FlexaClient(backend="continuous").submit(...)')
+        warn_legacy(self._LEGACY_NAME, self._LEGACY_HINT)
         self.cfg = cfg or SolverConfig()
         self.serve = serve or ServeConfig()
         if self.serve.slab_capacity < 1:
@@ -361,13 +386,17 @@ class ContinuousSolverEngine:
         self._spec_of[req_id] = spec
         slab = self._slabs.get(spec)
         if slab is None:
-            slab = self._slabs[spec] = _SlotSlab(
-                spec, self.cfg, self.serve, self.telemetry,
-                resolve_x0=self._warm_solution)
+            slab = self._slabs[spec] = self._make_slab(spec)
         slab.queue.push(QueueEntry(
             req_id=req_id, request=request, arrival=t,
             priority=request.priority, deadline=request.deadline))
         return req_id
+
+    def _make_slab(self, spec: BatchedProblemSpec) -> _SlotSlab:
+        """Slab factory — the mesh engine overrides this to hand out
+        sharded slabs with per-device queues."""
+        return _SlotSlab(spec, self.cfg, self.serve, self.telemetry,
+                         resolve_x0=self._warm_solution)
 
     def _warm_solution(self, req_id: int):
         """x0 for a ``warm_from`` admission (None = still in flight)."""

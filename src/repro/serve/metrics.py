@@ -68,6 +68,30 @@ class RequestTrace:
         return self.completed - self.arrival
 
 
+def _chunk_summary(t: "ServeTelemetry") -> dict:
+    """The continuous-engine chunk counters of one telemetry as a
+    snapshot dict.  Used both for the global ``"continuous"`` section
+    and for each per-device entry of :class:`MeshTelemetry`, so the two
+    views can never drift: the raw counters (``chunks``,
+    ``chunk_iters``, ``row_iters``, ``live_iters``, ``chunk_wall_s``)
+    are additive across devices — the conservation law the mesh rollup
+    property tests pin — while the occupancy/waste ratios derive from
+    them per view."""
+    row = t.chunk_row_iters
+    return {
+        "chunks": t.chunks,
+        "chunk_iters": t.chunk_iters,
+        "row_iters": row,
+        "live_iters": t.chunk_live_iters,
+        "occupancy_mean": t.chunk_live_iters / row if row else 0.0,
+        "padding_waste": ((row - t.chunk_live_iters) / row
+                          if row else 0.0),
+        "chunk_wall_s": t.chunk_wall,
+        "iters_per_s": (t.chunk_live_iters / t.chunk_wall
+                        if t.chunk_wall > 0 else None),
+    }
+
+
 @dataclass
 class ServeTelemetry:
     """Mutable counters an engine appends to as it serves."""
@@ -180,19 +204,7 @@ class ServeTelemetry:
             "compile_cache": cache_stats(),
         }
         if self.chunks:
-            row = self.chunk_row_iters
-            out["continuous"] = {
-                "chunks": self.chunks,
-                "chunk_iters": self.chunk_iters,
-                "row_iters": row,
-                "occupancy_mean": (self.chunk_live_iters / row
-                                   if row else 0.0),
-                "padding_waste": ((row - self.chunk_live_iters) / row
-                                  if row else 0.0),
-                "chunk_wall_s": self.chunk_wall,
-                "iters_per_s": (self.chunk_live_iters / self.chunk_wall
-                                if self.chunk_wall > 0 else None),
-            }
+            out["continuous"] = _chunk_summary(self)
         if self.waves:
             row = sum(w["row_iters"] for w in self.waves)
             useful = sum(w["useful_row_iters"] for w in self.waves)
@@ -207,4 +219,77 @@ class ServeTelemetry:
                                  if row else 0.0),
                 "wall_s": sum(w["wall_s"] for w in self.waves),
             }
+        return out
+
+
+@dataclass
+class MeshTelemetry(ServeTelemetry):
+    """Telemetry of the mesh-sharded engine: one child
+    :class:`ServeTelemetry` per mesh device plus mesh-only counters.
+
+    The request lifecycle (arrival / admit / completion) stays global —
+    a request is one request however many devices exist — while chunk
+    counters are recorded *per device* (``engine → telemetry.device(d).
+    record_chunk(...)``) and rolled up into the inherited global fields
+    by :meth:`rollup`.  The rollup is literally ``sum over devices`` for
+    every raw counter, so the global view is the sum of the parts *by
+    construction*; the property tests re-derive the sums independently
+    from the snapshot to pin it.
+
+    ``n_devices=0`` defers sizing until the engine knows its mesh
+    (:meth:`configure`); the children share the parent's clock so all
+    timestamps live on one timeline.
+    """
+    n_devices: int = 0
+    steals: int = 0                 # queue entries moved by work stealing
+    routed: int = 0                 # entries routed shared → device queue
+    per_device: list = field(default_factory=list)
+
+    def __post_init__(self):
+        if self.n_devices:
+            self.configure(self.n_devices)
+
+    def configure(self, n_devices: int) -> None:
+        """Size the per-device children (idempotent at the same size)."""
+        n = int(n_devices)
+        if self.per_device:
+            if len(self.per_device) != n:
+                raise ValueError(
+                    f"telemetry already configured for "
+                    f"{len(self.per_device)} devices, engine wants {n} — "
+                    "one MeshTelemetry serves one mesh size")
+            return
+        self.n_devices = n
+        self.per_device = [ServeTelemetry(clock=self.clock)
+                           for _ in range(n)]
+
+    def device(self, d: int) -> ServeTelemetry:
+        """The chunk-counter recorder of mesh device ``d``."""
+        return self.per_device[d]
+
+    def record_steal(self, n: int = 1) -> None:
+        self.steals += int(n)
+
+    def record_route(self, n: int = 1) -> None:
+        self.routed += int(n)
+
+    def rollup(self) -> None:
+        """Global chunk counters := Σ per-device chunk counters."""
+        self.chunks = sum(t.chunks for t in self.per_device)
+        self.chunk_iters = sum(t.chunk_iters for t in self.per_device)
+        self.chunk_row_iters = sum(t.chunk_row_iters
+                                   for t in self.per_device)
+        self.chunk_live_iters = sum(t.chunk_live_iters
+                                    for t in self.per_device)
+        self.chunk_wall = sum(t.chunk_wall for t in self.per_device)
+
+    def snapshot(self) -> dict:
+        self.rollup()
+        out = super().snapshot()
+        out["mesh"] = {
+            "devices": self.n_devices,
+            "steals": self.steals,
+            "routed": self.routed,
+            "per_device": [_chunk_summary(t) for t in self.per_device],
+        }
         return out

@@ -26,6 +26,7 @@ backends execute, plus the legacy entry points as one-shot-
 from repro.solvers.api import solve
 from repro.solvers.batched import (BatchedProblemSpec, SlabState,
                                    make_batched_solver, make_chunk_stepper,
+                                   make_sharded_chunk_stepper,
                                    make_slot_writer, slab_alloc,
                                    solve_batched)
 from repro.solvers.cache import cache_stats
@@ -34,7 +35,8 @@ from repro.solvers.result import SolverResult
 
 __all__ = [
     "solve", "solve_batched", "make_batched_solver", "BatchedProblemSpec",
-    "SlabState", "slab_alloc", "make_chunk_stepper", "make_slot_writer",
+    "SlabState", "slab_alloc", "make_chunk_stepper",
+    "make_sharded_chunk_stepper", "make_slot_writer",
     "SolverResult", "register", "get_solver", "available_methods",
     "cache_stats",
 ]

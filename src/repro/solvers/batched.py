@@ -315,12 +315,13 @@ def _bmask(mask, ndim: int):
     return mask.reshape((-1,) + (1,) * (ndim - 1))
 
 
-def _build_chunk_stepper(spec: BatchedProblemSpec, cfg: SolverConfig,
-                         chunk_iters: int):
-    """Compile one fused scheduler tick:
+def _chunk_core(spec: BatchedProblemSpec, cfg: SolverConfig,
+                chunk_iters: int):
+    """The (un-jitted) fused tick body shared by the single-device and
+    mesh-sharded chunk steppers:
 
-        chunk(slab, stop, admit, new_data, new_c, new_x0, new_ids)
-            -> (slab, stop)
+        core(slab, stop, admit, new_data, new_c, new_x0, new_ids,
+             new_active) -> (slab, stop)
 
     Phase 1 — **admission splice**: slots flagged in ``admit`` (an (S,)
     bool mask) are overwritten in place from the staged full-slab
@@ -339,12 +340,10 @@ def _build_chunk_stepper(spec: BatchedProblemSpec, cfg: SolverConfig,
     :func:`make_batched_solver`'s while_loop produces, independent of
     the chunk size K.
 
-    Fusing admission into the step matters operationally: a scheduler
-    tick is ONE device program and one (S,) mask readback, however many
-    requests were admitted — separate per-slot splice calls would pay
-    dispatch per admission and dominate the serving makespan at small
-    instance sizes.  The slab and stop mask are donated (in-place
-    advance).
+    Every operation here is per-slot (vmapped iteration, masked row
+    selects) — no cross-slot reductions or collectives — which is what
+    lets :func:`make_sharded_chunk_stepper` wrap the identical body in a
+    ``shard_map`` over the slot axis with no communication.
     """
     fam = get_family(spec.family)
     vstep = jax.vmap(partial(_instance_step, spec, cfg))
@@ -376,14 +375,13 @@ def _build_chunk_stepper(spec: BatchedProblemSpec, cfg: SolverConfig,
             state=state,
             active=jnp.where(admit[:, None], new_active, slab.active))
 
-    @partial(jax.jit, donate_argnums=(0, 1))
-    def chunk(slab: SlabState, stop, admit, new_data, new_c, new_x0,
-              new_ids, new_active=None):
-        if new_active is None:
-            new_active = jnp.ones_like(slab.active)
+    def core(slab: SlabState, stop, admit, new_data, new_c, new_x0,
+             new_ids, new_active):
         # Phase 1 under a cond: the steady-state tick between evictions
         # admits nothing, and the splice's fresh-state/column-norm work
         # (~one iteration's worth of matvecs) should not be paid then.
+        # Under shard_map the cond predicate is per-shard, so a device
+        # admitting nothing this tick skips its splice independently.
         slab = jax.lax.cond(
             jnp.any(admit),
             lambda s: splice(s, admit, new_data, new_c, new_x0, new_ids,
@@ -405,10 +403,91 @@ def _build_chunk_stepper(spec: BatchedProblemSpec, cfg: SolverConfig,
                                         (slab.state, stop))
         return slab._replace(state=state), stop
 
+    return core
+
+
+def _build_chunk_stepper(spec: BatchedProblemSpec, cfg: SolverConfig,
+                         chunk_iters: int):
+    """Compile one fused scheduler tick (see :func:`_chunk_core` for the
+    phase-by-phase contract):
+
+        chunk(slab, stop, admit, new_data, new_c, new_x0, new_ids)
+            -> (slab, stop)
+
+    Fusing admission into the step matters operationally: a scheduler
+    tick is ONE device program and one (S,) mask readback, however many
+    requests were admitted — separate per-slot splice calls would pay
+    dispatch per admission and dominate the serving makespan at small
+    instance sizes.  The slab and stop mask are donated (in-place
+    advance).
+    """
+    core = _chunk_core(spec, cfg, chunk_iters)
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def chunk(slab: SlabState, stop, admit, new_data, new_c, new_x0,
+              new_ids, new_active=None):
+        if new_active is None:
+            new_active = jnp.ones_like(slab.active)
+        return core(slab, stop, admit, new_data, new_c, new_x0,
+                    new_ids, new_active)
+
     return chunk
 
 
 make_chunk_stepper = CompileCache("chunk_stepper", _build_chunk_stepper)
+
+
+def _build_sharded_chunk_stepper(spec: BatchedProblemSpec,
+                                 cfg: SolverConfig, chunk_iters: int,
+                                 n_devices: int):
+    """Compile the fused tick with the slot axis sharded over a 1-D
+    device mesh — the kernel of ``repro.serve.mesh.MeshServeEngine``.
+
+    The body is literally :func:`_chunk_core` — bit-for-bit the program
+    :func:`make_chunk_stepper` runs — wrapped in ``shard_map`` with
+    every argument partitioned on its leading (slot) dimension, so each
+    of the ``n_devices`` mesh devices advances its own contiguous block
+    of ``S / n_devices`` slots.  The core is collective-free (per-slot
+    vmap + masked selects; no ``axis_index``, no cross-slot reductions),
+    so the sharded program needs no communication and — crucially on
+    jax < 0.6 — never trips the partial-manual ``axis_index`` →
+    PartitionId lowering bug that parks ``tests/test_pipeline.py``.
+
+    The slab capacity S must be divisible by ``n_devices`` (the engine
+    allocates S = n_devices × per-device capacity).  Slab and stop mask
+    are donated exactly as in the single-device stepper.
+    """
+    from jax.sharding import PartitionSpec
+
+    from repro.compat import shard_map
+
+    core = _chunk_core(spec, cfg, chunk_iters)
+    mesh = jax.make_mesh((int(n_devices),), ("serve",))
+    row = PartitionSpec("serve")       # shard dim 0, replicate the rest
+    slab_specs = SlabState(
+        data=tuple(row for _ in slab_data_shapes(spec)),
+        c=row, col_sq=row, tau_base=row,
+        state=FlexaState(*([row] * len(FlexaState._fields))),
+        active=row)
+    payload_specs = (tuple(row for _ in slab_data_shapes(spec)),
+                     row, row, row, row)
+    sharded = shard_map(core, mesh=mesh,
+                        in_specs=(slab_specs, row, row) + payload_specs,
+                        out_specs=(slab_specs, row), check_vma=False)
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def chunk(slab: SlabState, stop, admit, new_data, new_c, new_x0,
+              new_ids, new_active=None):
+        if new_active is None:
+            new_active = jnp.ones_like(slab.active)
+        return sharded(slab, stop, admit, new_data, new_c, new_x0,
+                       new_ids, new_active)
+
+    return chunk
+
+
+make_sharded_chunk_stepper = CompileCache("sharded_chunk_stepper",
+                                          _build_sharded_chunk_stepper)
 
 
 def read_slots(state: FlexaState, slots) -> list[FlexaState]:

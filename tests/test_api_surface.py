@@ -32,11 +32,13 @@ SURFACE = {
     "repro.solvers": [
         "BatchedProblemSpec", "SlabState", "SolverResult",
         "available_methods", "cache_stats", "get_solver",
-        "make_batched_solver", "make_chunk_stepper", "make_slot_writer",
+        "make_batched_solver", "make_chunk_stepper",
+        "make_sharded_chunk_stepper", "make_slot_writer",
         "register", "slab_alloc", "solve", "solve_batched",
     ],
     "repro.serve": [
         "AdmissionQueue", "ContinuousSolverEngine", "GenerationResult",
+        "MeshServeEngine", "MeshTelemetry",
         "PathRequest", "PathState", "QueueEntry", "RequestTrace",
         "ServeEngine", "ServeTelemetry", "SolveRequest", "SolveResponse",
         "SolverServeEngine",
@@ -50,7 +52,8 @@ SURFACE = {
     "repro.client": [
         "Backend", "BatchResult", "BatchSpec", "CVResult", "CVSpec",
         "ClientConfig", "ClientError", "ContinuousBackend",
-        "FlexaClient", "InlineBackend", "PathResult", "PathSpec",
+        "FlexaClient", "InlineBackend", "MeshBackend", "PathResult",
+        "PathSpec",
         "SoloResult", "SoloSpec", "SpecError", "UnknownBackendError",
         "UnsupportedWorkloadError", "WaveBackend", "WorkItem",
         "available_backends", "make_backend", "normalize",
@@ -183,7 +186,7 @@ def test_client_backends_never_trigger_legacy_warnings(mini):
         cfg = SolverConfig(tol=1e-6, max_iters=500, tau_adapt=False)
         with warnings.catch_warnings(record=True) as w:
             warnings.simplefilter("always")
-            for backend in ("inline", "wave", "continuous"):
+            for backend in ("inline", "wave", "continuous", "mesh"):
                 FlexaClient(backend=backend, solver=cfg).run(
                     SoloSpec(problem=mini))
         assert _future_warnings(w) == []

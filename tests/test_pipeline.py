@@ -10,16 +10,13 @@ import pytest
 
 # The GPipe path keeps `model` *auto* inside a partial-manual shard_map;
 # jaxlib < 0.6 lowers lax.axis_index there to a PartitionId instruction the
-# SPMD partitioner rejects (see ROADMAP "Open items").  Precise version
-# gate — NOT a capability probe — so bumping jax/jaxlib to >= 0.6
-# auto-unskips this module with no edit here; if it then fails, the
-# lowering bug survived the bump and the ROADMAP entry is still live.
-_JAX_VERSION = tuple(int(x) for x in jax.__version__.split(".")[:2])
-pytestmark = pytest.mark.skipif(
-    _JAX_VERSION < (0, 6),
-    reason=f"jax {jax.__version__} < 0.6: partial-manual shard_map lowers "
-           "axis_index to a PartitionId op this jaxlib's SPMD partitioner "
-           "rejects")
+# SPMD partitioner rejects (see ROADMAP "Open items").  The test *runs* and
+# xfails only on that exact compiler rejection — so the skip can never go
+# stale: a jax/jaxlib bump that fixes the lowering flips this to PASSED
+# with no edit here, a bump that still rejects keeps the precise record of
+# the failing instruction, and any OTHER failure is a real failure.
+_PARTITION_ID_REJECTION = (
+    "PartitionId instruction is not supported for SPMD partitioning")
 
 SRC = textwrap.dedent("""
     import os, json
@@ -78,6 +75,12 @@ def test_pipeline_and_zero3_match_reference():
                          capture_output=True, text=True, env=env,
                          cwd=os.path.dirname(os.path.dirname(__file__)),
                          timeout=560)
+    if out.returncode != 0 and _PARTITION_ID_REJECTION in out.stderr:
+        line = next(l for l in out.stderr.splitlines()
+                    if _PARTITION_ID_REJECTION in l)
+        pytest.xfail(
+            f"jax {jax.__version__}: partial-manual shard_map still "
+            f"lowers lax.axis_index to a rejected op — {line.strip()}")
     assert out.returncode == 0, out.stderr[-3000:]
     rec = json.loads(out.stdout.strip().splitlines()[-1])
     assert abs(rec["pp"] - rec["ref"]) < 5e-3          # bf16 schedule noise
