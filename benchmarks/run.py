@@ -18,10 +18,12 @@ Full JSON artifacts land in ``results/bench/`` and every ``BENCH_*.json``
 is aggregated into the CSV: ``BENCH_solvers.json`` (written by
 ``fig1.main`` — full per-iteration (V, time) trajectories, summary rows,
 the ``batched`` amortization record), ``BENCH_serve.json``
-(``serve_load.main`` — arrival-trace scheduling races) and
+(``serve_load.main`` — arrival-trace scheduling races),
 ``BENCH_path.json`` (``path_bench.main`` — regularization-path columns +
-the CV-over-serve scenario).  ``--skip-serve`` / ``--skip-path`` /
-``--skip-lm`` drop the slower sections.
+the CV-over-serve scenario) and ``BENCH_compaction.json``
+(``compaction_bench.main`` — masked-dense vs capacity-bucketed compacted
+execution).  ``--skip-serve`` / ``--skip-path`` / ``--skip-lm`` drop the
+slower sections.
 """
 from __future__ import annotations
 
@@ -128,6 +130,28 @@ def main() -> None:
             print(f"path/cv,{cv['serve']['wall_s'] * 1e6:.0f},"
                   f"best_lambda={cv['best_lambda']:.4g} "
                   f"folds={cv['folds']}")
+
+        # Compacted active-set execution vs the masked-dense path
+        # (writes BENCH_compaction.json; gates are deterministic —
+        # device-FLOP ratio + 1e-5 equivalence + bitwise replay).
+        from benchmarks import compaction_bench
+        art = compaction_bench.main(smoke=args.smoke)
+        if not art["accept_ok"]:
+            failures.append("compaction:accept_ok")
+        acc = art["path"]["accept"]
+        for mode, col in art["path"]["columns"].items():
+            per = col["wall_s"] * 1e6 / max(1, col["row_iters"])
+            print(f"compaction/{mode},{per:.1f},"
+                  f"device_flops={col['device_flops']}")
+        print(f"compaction/accept,0,ratio={acc['flop_ratio']}x "
+              f"max_dev={acc['max_dev']:.1e} "
+              f"widths={'/'.join(map(str, acc['program_widths']))} "
+              f"ok={art['accept_ok']}")
+        if "serve_drain" in art:
+            sd = art["serve_drain"]
+            print(f"compaction/serve_drain,0,"
+                  f"migrations={sd['migrations']} "
+                  f"max_dev={sd['max_dev']:.1e}")
 
     if not args.skip_lm:
         from benchmarks import lm_step

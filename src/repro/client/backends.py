@@ -253,6 +253,11 @@ class Backend:
                 "per-point tol_schedule is an inline-backend feature; "
                 "serve backends support the tol_coarse continuation "
                 "(CVSpec) instead")
+        if getattr(spec, "compact", False):
+            raise UnsupportedWorkloadError(
+                "compact active-set packing is an inline-backend path "
+                "feature (the serve engines compact at the slab level "
+                "via ServeConfig.compact_drain instead)")
 
 
 _BACKENDS: dict[str, type] = {}
@@ -322,7 +327,7 @@ class InlineBackend(Backend):
                 lam_min_ratio=spec.lam_min_ratio, cfg=cfg,
                 warm=spec.warm, screen=spec.screen,
                 kkt_slack=spec.kkt_slack, lam_batch=spec.lam_batch,
-                tol_schedule=spec.tol_schedule)
+                tol_schedule=spec.tol_schedule, compact=spec.compact)
         elif item.kind == "cv":
             self._results[item.ticket] = self._run_cv(item, cfg)
         return [item.ticket]

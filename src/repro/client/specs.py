@@ -84,6 +84,9 @@ class PathSpec:
     kkt_slack: float = DEFAULT_KKT_SLACK
     lam_batch: int = 1                  # inline-only λ-chunking
     tol_schedule: object = None         # per-point stopping tolerances
+    compact: bool = False               # capacity-bucketed active-set
+                                        # packing (inline-only; needs
+                                        # screen=True)
 
 
 @dataclass

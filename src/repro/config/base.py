@@ -286,6 +286,14 @@ class ServeConfig:
     # steals while it has local work — the steal-only-when-idle
     # invariant the property tests pin).
     steal_threshold: int = 1
+    # Drain-tail slab compaction: when the admission queue is empty and
+    # the live-slot count drops a power-of-two capacity bucket, migrate
+    # the stragglers into a narrower slab (and grow back on new
+    # arrivals).  Off by default: migration retraces the chunk program
+    # at each capacity, so trajectories agree with the fixed-capacity
+    # run to solver tolerance (≤1e-5), not bitwise.  Continuous engine
+    # only (mesh slabs keep their per-device geometry).
+    compact_drain: bool = False
 
 
 @dataclass(frozen=True)

@@ -35,6 +35,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK = (256, 512)  # 256×512 fp32 ≈ 0.5 MB/operand — comfortably VMEM
 
@@ -249,3 +250,144 @@ def batched_apply_update(x, g, d, c, gamma_mask, *, block=DEFAULT_BLOCK,
         out_shape=jax.ShapeDtypeStruct((B, R, C), x.dtype),
         interpret=interpret,
     )(x, g, d_arr, c_arr, gm_arr)
+
+
+# ===================================================================== #
+# Compacted active-set gather/scatter (capacity-bucketed screening)     #
+# ===================================================================== #
+# These kernels move whole *block rows* between the full layout (N rows)
+# and the compact layout (K = capacity rows).  The row index array rides
+# in scalar-prefetch memory (`PrefetchScalarGridSpec`): BlockSpec index
+# maps read it to pick each tile's source row, so the gather is a pure
+# DMA pattern — no in-kernel address arithmetic, one row tile per grid
+# step.  Index −1 marks unused capacity (gather) or an inactive
+# destination (scatter); −1 clamps to row 0 for the DMA and the kernel
+# body masks the value, so padded work is read-only and algebraically
+# inert.  Column tiling assumes C is a multiple of the block width —
+# ``ops.py`` zero-pads ragged layouts before dispatch (zero columns are
+# inert for gather, scatter and the fused prox alike).
+COMPACT_BLOCK_C = 512
+
+
+def _gather_kernel(idx_ref, src_ref, out_ref):
+    i = pl.program_id(0)
+    valid = (idx_ref[i] >= 0).astype(jnp.float32)
+    out_ref[...] = src_ref[...].astype(jnp.float32) * valid
+
+
+def gather_rows(src, idx, *, block_c: int = COMPACT_BLOCK_C,
+                interpret: bool = False):
+    """src: (N, C) fp rows; idx: (K,) int32, −1 ⇒ zero row.
+
+    Returns (K, C) fp32: ``out[k] = src[idx[k]]`` (or zeros).
+    """
+    N, C = src.shape
+    K = idx.shape[0]
+    bc = min(block_c, C)
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(K, pl.cdiv(C, bc)),
+        in_specs=[pl.BlockSpec(
+            (1, bc), lambda i, j, idx_ref: (jnp.maximum(idx_ref[i], 0), j))],
+        out_specs=pl.BlockSpec((1, bc), lambda i, j, idx_ref: (i, j)),
+    )
+    return pl.pallas_call(
+        _gather_kernel, grid_spec=gs,
+        out_shape=jax.ShapeDtypeStruct((K, C), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(idx, jnp.int32), src)
+
+
+def _scatter_kernel(inv_ref, vals_ref, base_ref, out_ref):
+    i = pl.program_id(0)
+    valid = inv_ref[i] >= 0
+    out_ref[...] = jnp.where(valid, vals_ref[...].astype(out_ref.dtype),
+                             base_ref[...])
+
+
+def scatter_rows(vals, inv, base, *, block_c: int = COMPACT_BLOCK_C,
+                 interpret: bool = False):
+    """vals: (K, C); inv: (N,) int32 (−1 ⇒ keep base); base: (N, C).
+
+    Returns (N, C): ``out[i] = vals[inv[i]]`` where inv[i] ≥ 0 else
+    ``base[i]``.  The scatter is expressed as a gather of the inverse
+    permutation, so every output row is written exactly once.
+    """
+    N, C = base.shape
+    bc = min(block_c, C)
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(N, pl.cdiv(C, bc)),
+        in_specs=[
+            pl.BlockSpec(
+                (1, bc),
+                lambda i, j, inv_ref: (jnp.maximum(inv_ref[i], 0), j)),
+            pl.BlockSpec((1, bc), lambda i, j, inv_ref: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bc), lambda i, j, inv_ref: (i, j)),
+    )
+    return pl.pallas_call(
+        _scatter_kernel, grid_spec=gs,
+        out_shape=jax.ShapeDtypeStruct((N, C), base.dtype),
+        interpret=interpret,
+    )(jnp.asarray(inv, jnp.int32), vals, base)
+
+
+def _compact_br_kernel(idx_ref, x_ref, g_ref, d_ref, c_ref, z_ref, e2_ref,
+                       *, scalar_d: bool):
+    i = pl.program_id(0)
+    valid = (idx_ref[i] >= 0).astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32) * valid
+    g = g_ref[...].astype(jnp.float32) * valid
+    d = d_ref[0, 0] if scalar_d else d_ref[...].astype(jnp.float32)
+    c = c_ref[0, 0]
+    w = x - g / d
+    t = c / d
+    z = jnp.sign(w) * jnp.maximum(jnp.abs(w) - t, 0.0) * valid
+    z_ref[...] = z
+    e2_ref[0, 0] = jnp.sum((z - x) ** 2)
+
+
+def compact_best_response(x, g, d, c, idx, *,
+                          block_c: int = COMPACT_BLOCK_C,
+                          interpret: bool = False):
+    """The compacted ``flexa_prox`` variant: gather + best response fused.
+
+    x, g, (dense) d: (N, C) full-layout block rows; idx: (K,) int32 with
+    −1 padding; scalar d () and c ().  One pass gathers the K active
+    rows and soft-thresholds them — screened rows are never read, so
+    device work scales with the capacity bucket, not the full width.
+
+    Returns (z (K, C) fp32, e2 () fp32) — e2 sums only gathered rows
+    (padding contributes exactly 0).
+    """
+    N, C = x.shape
+    K = idx.shape[0]
+    bc = min(block_c, C)
+    grid = (K, pl.cdiv(C, bc))
+    scalar_d = jnp.ndim(d) == 0
+    d_arr = jnp.asarray(d, jnp.float32).reshape(1, 1) if scalar_d else d
+    c_arr = jnp.asarray(c, jnp.float32).reshape(1, 1)
+    gather_spec = pl.BlockSpec(
+        (1, bc), lambda i, j, idx_ref: (jnp.maximum(idx_ref[i], 0), j))
+    d_spec = (pl.BlockSpec((1, 1), lambda i, j, idx_ref: (0, 0))
+              if scalar_d else gather_spec)
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[gather_spec, gather_spec, d_spec,
+                  pl.BlockSpec((1, 1), lambda i, j, idx_ref: (0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, bc), lambda i, j, idx_ref: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j, idx_ref: (i, j)),
+        ],
+    )
+    z, e2p = pl.pallas_call(
+        partial(_compact_br_kernel, scalar_d=scalar_d), grid_spec=gs,
+        out_shape=[
+            jax.ShapeDtypeStruct((K, C), jnp.float32),
+            jax.ShapeDtypeStruct(grid, jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(idx, jnp.int32), x, g, d_arr, c_arr)
+    return z, jnp.sum(e2p)

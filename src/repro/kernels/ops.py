@@ -134,6 +134,67 @@ def flexa_apply_batched(x, g, d, c, gamma_mask, *, force=None):
     return o3.reshape(B, -1)[:, :n].reshape(x.shape)
 
 
+# ------------------------------------------------------------------ #
+# Compacted active-set gather/scatter (capacity-bucketed screening)   #
+# ------------------------------------------------------------------ #
+def _pad_cols(t: jnp.ndarray, mult: int = 128):
+    """Zero-pad the trailing dim to a lane multiple for the row kernels.
+
+    Zero columns are inert for gather, scatter and the fused prox (they
+    ride along and are sliced off after), so ragged layouts — e.g. a
+    block row of bs·m values — dispatch through the same aligned tiles.
+    """
+    C = t.shape[-1]
+    pad = (-C) % mult
+    if pad:
+        t = jnp.concatenate(
+            [t, jnp.zeros(t.shape[:-1] + (pad,), t.dtype)], axis=-1)
+    return t, C
+
+
+def gather_blocks(src, idx, *, force=None):
+    """Row gather: out[k] = src[idx[k]] (−1 ⇒ zero row).  src (N, C)."""
+    mode = _mode(force)
+    idx = jnp.asarray(idx, jnp.int32)
+    if mode == "ref":
+        return ref.gather_rows_ref(src, idx)
+    src2, C = _pad_cols(jnp.asarray(src))
+    out = _fp.gather_rows(src2, idx, interpret=(mode == "interpret"))
+    return out[:, :C]
+
+
+def scatter_blocks(vals, inv, base, *, force=None):
+    """Inverse-permutation scatter: out[i] = vals[inv[i]] or base[i]."""
+    mode = _mode(force)
+    inv = jnp.asarray(inv, jnp.int32)
+    if mode == "ref":
+        return ref.scatter_rows_ref(vals, inv, base)
+    vals2, _ = _pad_cols(jnp.asarray(vals))
+    base2, C = _pad_cols(jnp.asarray(base))
+    out = _fp.scatter_rows(vals2, inv, base2,
+                           interpret=(mode == "interpret"))
+    return out[:, :C]
+
+
+def compact_best_response(x, g, d, c, idx, *, force=None):
+    """Fused gather + soft-threshold over the active rows (see ref)."""
+    mode = _mode(force)
+    idx = jnp.asarray(idx, jnp.int32)
+    if mode == "ref":
+        return ref.compact_best_response_ref(x, g, d, c, idx)
+    interp = mode == "interpret"
+    x2, C = _pad_cols(jnp.asarray(x))
+    g2, _ = _pad_cols(jnp.asarray(g))
+    if jnp.ndim(d) == 0:
+        d2 = d
+    else:
+        # Zero pad columns would divide 0/0 — clamp like the dense path.
+        d2 = jnp.maximum(_pad_cols(jnp.broadcast_to(d, x.shape))[0], 1e-30)
+    z2, e2 = _fp.compact_best_response(x2, g2, d2, c, idx,
+                                       interpret=interp)
+    return z2[:, :C], e2
+
+
 def flash_attention(q, k, v, *, causal=True, scale=None, force=None,
                     block_q: int = 256, block_k: int = 512):
     mode = _mode(force)

@@ -77,6 +77,51 @@ def flexa_apply_batched_ref(x, g, d, c, gamma_mask):
 
 
 # ------------------------------------------------------------------ #
+# Compacted active-set gather/scatter (capacity-bucketed screening)   #
+# ------------------------------------------------------------------ #
+def gather_rows_ref(src, idx):
+    """out[k] = src[idx[k]] for idx[k] ≥ 0, zeros for −1 padding.
+
+    The pack half of the compaction permutation; fp32 output like the
+    Pallas kernel (optimizer precision).
+    """
+    idx = jnp.asarray(idx, jnp.int32)
+    taken = jnp.take(src.astype(jnp.float32), jnp.maximum(idx, 0), axis=0)
+    return jnp.where((idx >= 0)[:, None], taken, 0.0)
+
+
+def scatter_rows_ref(vals, inv, base):
+    """out[i] = vals[inv[i]] where inv[i] ≥ 0, else base[i].
+
+    The unpack half: a gather of the inverse permutation, so each output
+    row is written exactly once (no collision semantics to define).
+    """
+    inv = jnp.asarray(inv, jnp.int32)
+    taken = jnp.take(vals, jnp.maximum(inv, 0), axis=0).astype(base.dtype)
+    return jnp.where((inv >= 0)[:, None], taken, base)
+
+
+def compact_best_response_ref(x, g, d, c, idx):
+    """Fused gather + best response over the active rows only.
+
+    Semantics: gather x/g (and dense d) through ``idx``, then the plain
+    best response.  Padded rows (idx = −1) gather zeros ⇒ z = 0 and
+    contribute nothing to e2; their d is replaced by 1.0 to keep the
+    division well-defined.
+    """
+    xc = gather_rows_ref(x, idx)
+    gc = gather_rows_ref(g, idx)
+    if jnp.ndim(d) == 0:
+        dc = d
+    else:
+        idx = jnp.asarray(idx, jnp.int32)
+        taken = jnp.take(d.astype(jnp.float32), jnp.maximum(idx, 0),
+                         axis=0)
+        dc = jnp.where((idx >= 0)[:, None], taken, 1.0)
+    return flexa_best_response_ref(xc, gc, dc, c)
+
+
+# ------------------------------------------------------------------ #
 # Flash attention (causal, GQA)                                      #
 # ------------------------------------------------------------------ #
 def flash_attention_ref(q, k, v, *, causal: bool = True, scale=None):

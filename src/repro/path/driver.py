@@ -38,14 +38,16 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.config.base import SolverConfig
+from repro.core.flexa import tau0_from_colsq
 from repro.problems.base import Problem
-from repro.problems.families import get_family, infer_family
+from repro.problems.families import build_problem, get_family, infer_family
 from repro.path.grid import geometric_grid, lambda_max, validate_grid
 from repro.deprecation import warn_legacy
 from repro.path.screening import (DEFAULT_KKT_SLACK, ScreenReport,
                                   block_scores, expand_blocks,
                                   kkt_violations, strong_rule_active)
 from repro.solvers.batched import _solve_batched
+from repro.solvers.compaction import make_plan
 
 #: Screening falls back to an unscreened solve after this many KKT
 #: re-admission rounds at one path point (never observed > 2 in anger;
@@ -67,6 +69,8 @@ class PathResult:
     active_blocks: np.ndarray   # (P,) blocks the solver actually ran
     screened: list = field(default_factory=list)   # per-λ ScreenReport
     row_iters: int = 0          # Σ device row-iterations over the path
+    device_flops: int = 0       # Σ iters × B × m × program-width (matvec
+                                #   currency; what compaction shrinks)
     lam_max: float = 0.0
     meta: dict = field(default_factory=dict)
 
@@ -99,7 +103,8 @@ def _solve_path(problem: Problem, lambdas=None, *, n_points: int = 20,
                 cfg: SolverConfig | None = None,
                 warm: bool = True, screen: bool = True,
                 kkt_slack: float = DEFAULT_KKT_SLACK,
-                lam_batch: int = 1, tol_schedule=None) -> PathResult:
+                lam_batch: int = 1, tol_schedule=None,
+                compact: bool = False) -> PathResult:
     """Solve a decreasing λ-grid for one lasso/group-lasso instance.
 
     Every point (and every KKT re-admission round) runs through the
@@ -160,6 +165,11 @@ def _solve_path(problem: Problem, lambdas=None, *, n_points: int = 20,
             "screen=False or register ProblemFamily.screen_scores")
     if lam_batch < 1:
         raise ValueError("lam_batch must be >= 1")
+    if compact and not screen:
+        raise ValueError(
+            "compact=True packs the *certified* active set — it needs "
+            "screen=True (without screening there is no support to "
+            "compact)")
 
     grid, lam_max = _resolve_grid(problem, lambdas, n_points,
                                   lam_min_ratio)
@@ -168,12 +178,26 @@ def _solve_path(problem: Problem, lambdas=None, *, n_points: int = 20,
     P = grid.shape[0]
     tols = _resolve_tol_schedule(tol_schedule, cfg, P)
 
+    # Compacted solves run on a narrower problem whose *default* τ would
+    # differ (tr(AᵀA)/2n over the packed columns only).  Pin the dense
+    # default as an explicit tau0 so every capacity bucket iterates with
+    # bit-identical per-coordinate τ — and padded zero columns (col_sq
+    # = 0) keep the surrogate curvature d ≥ τ > 0.
+    tau0_pin = float(cfg.tau0)
+    if compact and cfg.tau0 <= 0:
+        arrays = [jnp.asarray(problem.data[key], jnp.float32)
+                  for key in fam.data_keys]
+        tau0_pin = float(tau0_from_colsq(
+            fam.half_curv(fam.col_sq(*arrays)), n))
+
     xs = np.zeros((P, n), np.float32)
     V = np.zeros(P); iters = np.zeros(P, np.int64)
     conv = np.zeros(P, bool)
     active_ct = np.zeros(P, np.int64)
     screened: list[ScreenReport] = []
     row_iters = 0
+    device_flops = 0
+    program_widths: set[int] = set()
 
     # The certified anchor: x(λ_max) = 0 exactly (definition of λ_max).
     c_prev = lam_max
@@ -206,7 +230,8 @@ def _solve_path(problem: Problem, lambdas=None, *, n_points: int = 20,
         cfg_k = _cfg_at_tol(cfg, float(tols[chunk].min()))
         out = _solve_chunk(problem, fam, grid[chunk], c_prev,
                            x_prev, scores_prev, cfg_k, warm=warm,
-                           screen=screen, kkt_slack=kkt_slack)
+                           screen=screen, kkt_slack=kkt_slack,
+                           compact=compact, tau0_pin=tau0_pin)
         for j, kk in enumerate(chunk):
             xs[kk] = out["x"][j]
             V[kk] = out["V"][j]
@@ -215,6 +240,8 @@ def _solve_path(problem: Problem, lambdas=None, *, n_points: int = 20,
             active_ct[kk] = out["active_blocks"][j]
             screened.append(out["reports"][j])
         row_iters += out["row_iters"]
+        device_flops += out["device_flops"]
+        program_widths |= out["program_widths"]
         c_prev = float(grid[chunk[-1]])
         x_prev = xs[chunk[-1]]
         scores_prev = out["scores_last"]
@@ -227,9 +254,11 @@ def _solve_path(problem: Problem, lambdas=None, *, n_points: int = 20,
     return PathResult(
         lambdas=grid, x=xs, V=V, iters=iters, converged=conv,
         support=support, active_blocks=active_ct, screened=screened,
-        row_iters=int(row_iters), lam_max=lam_max,
+        row_iters=int(row_iters), device_flops=int(device_flops),
+        lam_max=lam_max,
         meta={"family": family, "warm": warm, "screen": screen,
-              "lam_batch": lam_batch,
+              "lam_batch": lam_batch, "compact": compact,
+              "program_widths": sorted(program_widths),
               "tol_schedule": (None if tol_schedule is None
                                else [float(t) for t in tols]),
               "wall_s": time.perf_counter() - t0})
@@ -294,8 +323,45 @@ def _kkt_round(fam, probs, cs, x_hat, active, rounds, violations,
     return scores, False
 
 
+def _compact_round(probs, fam, plan, x0_masked, mask_c, cfg,
+                   tau0_pin: float):
+    """One screened solve over the *packed* active columns.
+
+    The chunk's design columns gather once through the plan (shared by
+    every chunk-mate — only ``c`` varies), warm starts and per-instance
+    freeze masks gather through the same permutation, and the narrow
+    problem runs through the ordinary batched engine — so the compile
+    cache is keyed by the capacity bucket's ``BatchedProblemSpec``, one
+    entry per bucket however many supports the path visits.  Solutions
+    scatter back to the full layout for the (full-width) KKT recheck.
+    """
+    B = len(probs)
+    template = probs[0]
+    arrays = [jnp.asarray(template.data[key], jnp.float32)
+              for key in fam.data_keys]
+    arrays_c = (plan.pack_columns(arrays[0]),) + tuple(arrays[1:])
+    cprobs = [build_problem(fam.name, arrays_c, float(p.g_weight),
+                            n=plan.n_compact,
+                            block_size=plan.block_size,
+                            g_kind=template.g_kind) for p in probs]
+    x0_c = np.stack([np.asarray(plan.pack_vector(x0_masked[i]),
+                                np.float32) for i in range(B)])
+    mask_cc = np.stack([np.asarray(plan.pack_mask(mask_c[i]), np.float32)
+                        for i in range(B)])
+    # τ pinned to the dense default (see _solve_path): identical
+    # per-coordinate τ whatever the bucket, positive d on pad columns.
+    cfg_c = (cfg if cfg.tau0 > 0
+             else dataclasses.replace(cfg, tau0=tau0_pin))
+    r = _solve_batched(cprobs, x0=x0_c, cfg=cfg_c,
+                       active=jnp.asarray(mask_cc))
+    x_hat = np.stack([np.asarray(plan.unpack_vector(r.x[i]), np.float32)
+                      for i in range(B)])
+    return r, x_hat
+
+
 def _solve_chunk(problem, fam, cs, c_prev, x_prev, scores_prev, cfg, *,
-                 warm, screen, kkt_slack) -> dict:
+                 warm, screen, kkt_slack, compact: bool = False,
+                 tau0_pin: float = 0.0) -> dict:
     """A chunk of λ-points solved as ONE batched program (B = len(cs);
     B = 1 is the plain sequential-homotopy step).
 
@@ -303,8 +369,17 @@ def _solve_chunk(problem, fam, cs, c_prev, x_prev, scores_prev, cfg, *,
     x_prev) — the sequential strong rule remains valid for every point
     because each cᵢ < c_prev; the bound is just looser for the far end of
     the chunk than point-by-point referencing would give.
+
+    With ``compact=True`` each KKT round repacks the chunk's *union*
+    active set into its capacity bucket (``repro.solvers.compaction``)
+    and solves the narrow subproblem; a bucket at the full width falls
+    back to the plain masked-dense program (nothing to skip).  KKT
+    re-admission can bump the bucket, which simply repacks the next
+    round — the per-λ repack the homotopy needs when the certified
+    support drops a bucket comes for free from re-planning every round.
     """
     n, bs, n_blocks = problem.n, problem.block_size, problem.n_blocks
+    m = int(problem.data[fam.data_keys[0]].shape[0])
     B = len(cs)
     probs = [_problem_at(problem, float(c)) for c in cs]
     active = np.stack([
@@ -318,17 +393,32 @@ def _solve_chunk(problem, fam, cs, c_prev, x_prev, scores_prev, cfg, *,
     rounds = np.zeros(B, np.int64)
     violations = np.zeros(B, np.int64)
     row_iters = 0
+    device_flops = 0
+    program_widths: set[int] = set()
     while True:
         mask_c = np.stack([expand_blocks(active[i], bs)
                            for i in range(B)])
-        r = _solve_batched(probs, x0=x0 * mask_c, cfg=cfg,
-                          active=jnp.asarray(mask_c) if screen else None)
+        plan = (make_plan(active.max(axis=0) > 0, bs)
+                if compact else None)
+        if plan is not None and not plan.dense:
+            r, x_hat = _compact_round(probs, fam, plan, x0 * mask_c,
+                                      mask_c, cfg, tau0_pin)
+            n_prog = plan.n_compact
+        else:
+            r = _solve_batched(probs, x0=x0 * mask_c, cfg=cfg,
+                               active=jnp.asarray(mask_c)
+                               if screen else None)
+            x_hat = np.asarray(r.x, np.float32)
+            n_prog = n
         it = np.asarray(r.iters, np.int64)
         total_iters += it
         # The batched while_loop runs every row until the slowest one
-        # stops — that is what the device executed.
+        # stops — that is what the device executed.  FLOPs are the same
+        # count priced at the program width the rows actually ran at
+        # (matvec-dominated: ∝ m × n_prog per row-iteration).
         row_iters += int(it.max()) * B
-        x_hat = np.asarray(r.x, np.float32)
+        device_flops += int(it.max()) * B * m * n_prog
+        program_widths.add(n_prog)
         if not screen:
             scores = None
             break
@@ -349,6 +439,8 @@ def _solve_chunk(problem, fam, cs, c_prev, x_prev, scores_prev, cfg, *,
                                  violations=int(violations[i]))
                     for i in range(B)],
         "row_iters": row_iters,
+        "device_flops": device_flops,
+        "program_widths": program_widths,
         "scores_last": None if scores is None else scores[-1],
     }
 

@@ -58,7 +58,9 @@ from repro.serve.engine import SolveRequest, SolveResponse, validate_request
 from repro.serve.pathstate import PathRequest, PathState
 from repro.serve.metrics import ServeTelemetry
 from repro.solvers.batched import (BatchedProblemSpec, make_chunk_stepper,
-                                   slab_alloc, slab_data_shapes)
+                                   slab_alloc, slab_data_shapes,
+                                   slab_migrate)
+from repro.solvers.compaction import bucket_capacity
 
 
 @dataclass
@@ -132,6 +134,8 @@ class _SlotSlab:
         self.spec = spec
         self.cfg = cfg
         self.capacity = int(self._slab_capacity(serve))
+        self._base_capacity = self.capacity
+        self._compact_drain = bool(getattr(serve, "compact_drain", False))
         self.chunk_iters = int(serve.chunk_iters)
         self.telemetry = telemetry
         self.queue = AdmissionQueue(serve.policy)
@@ -145,9 +149,18 @@ class _SlotSlab:
         self.active = np.zeros(self.capacity, bool)
         self.slot_req = np.full(self.capacity, -1, np.int64)
         self._open_audit: dict = {}          # req_id -> its audit record
-        # Admission staging (host buffers, reused across ticks; stale
-        # rows are fine — the chunk program masks them out).
+        self._alloc_staging()
+
+    def _alloc_staging(self) -> None:
+        """(Re)allocate the admission staging buffers at the current
+        capacity — called once at construction and again by
+        :meth:`_resize` whenever a drain-tail migration changes S.
+
+        Staging host buffers are reused across ticks; stale rows are
+        fine — the chunk program masks them out.
+        """
         S = self.capacity
+        spec = self.spec
         self._stage_data = [np.zeros((S,) + shp, np.float32)
                             for shp in slab_data_shapes(spec)]
         self._stage_c = np.zeros(S, np.float32)
@@ -181,6 +194,82 @@ class _SlotSlab:
         self.telemetry.record_chunk(live=self.live, capacity=self.capacity,
                                     chunk_iters=self.chunk_iters,
                                     wall_s=wall)
+
+    def _migration_allowed(self) -> bool:
+        """Drain-tail capacity migration opt-in.  The mesh slab
+        overrides this to ``False``: its slot layout IS the device
+        layout (slot s lives on device s // S_dev), so resizing would
+        silently re-home requests across devices."""
+        return self._compact_drain
+
+    # ------------------------------------------------------------- #
+    # Drain-tail slab compaction (ServeConfig.compact_drain)
+    # ------------------------------------------------------------- #
+    def _resize(self, target: int, tick: int) -> None:
+        """Migrate the live slots into a slab of capacity ``target``.
+
+        Row moves are bitwise (``slab_migrate`` copies solver state
+        verbatim); what changes is the chunk *program* — jit retraces at
+        the new (S, ·) shapes — so post-migration trajectories agree
+        with the fixed-capacity run to solver tolerance, not bitwise
+        (the determinism caveat documented in ``docs/serving.md``).
+        Precondition: no staged admissions in flight (callers only
+        resize when ``_admit`` is all-False), so the staging buffers can
+        be reallocated without losing payloads.
+        """
+        old = self.capacity
+        live_slots = [int(s) for s in np.flatnonzero(self.active)]
+        self.slab = slab_migrate(self.slab, live_slots, self.spec,
+                                 self.cfg, target)
+        self.capacity = int(target)
+        self._chunk = self._make_chunk()
+        stop = np.ones(self.capacity, bool)
+        active = np.zeros(self.capacity, bool)
+        slot_req = np.full(self.capacity, -1, np.int64)
+        for new_slot, old_slot in enumerate(live_slots):
+            stop[new_slot] = self.stop[old_slot]
+            active[new_slot] = True
+            slot_req[new_slot] = self.slot_req[old_slot]
+            rec = self._open_audit.get(int(self.slot_req[old_slot]))
+            if rec is not None:
+                rec["slot"] = new_slot
+                rec.setdefault("migrations", []).append(
+                    {"tick": tick, "from_slot": old_slot,
+                     "to_slot": new_slot, "from_capacity": old,
+                     "to_capacity": self.capacity})
+        self.stop, self.active, self.slot_req = stop, active, slot_req
+        self._alloc_staging()
+        self.telemetry.record_migration(from_capacity=old,
+                                        to_capacity=self.capacity)
+
+    def _maybe_shrink(self, tick: int) -> None:
+        """Shrink to the live-count capacity bucket at the drain tail:
+        queue empty, nothing staged, and the stragglers fit a bucket at
+        most half the current capacity (full bucket drops only — no
+        thrash on ±1 fluctuations)."""
+        if not self._migration_allowed():
+            return
+        live = self.live
+        if (live > 0 and self.capacity > 1 and len(self.queue) == 0
+                and not self._admit.any()):
+            target = bucket_capacity(live, self._base_capacity)
+            if target <= self.capacity // 2:
+                self._resize(target, tick)
+
+    def _maybe_grow(self, tick: int) -> None:
+        """Grow back toward the base capacity when arrivals outnumber
+        the free slots of a previously shrunk slab."""
+        if not self._migration_allowed() \
+                or self.capacity >= self._base_capacity:
+            return
+        free = int((~self.active).sum())
+        if len(self.queue) > free and not self._admit.any():
+            target = min(
+                bucket_capacity(self.live + len(self.queue),
+                                self._base_capacity),
+                self._base_capacity)
+            if target > self.capacity:
+                self._resize(target, tick)
 
     # ------------------------------------------------------------- #
     @property
@@ -232,6 +321,7 @@ class _SlotSlab:
         is *deferred*: held aside for this tick and re-queued, so later
         admissible requests can take the slot (no head-of-line blocking).
         """
+        self._maybe_grow(tick)
         free = [int(s) for s in np.flatnonzero(~self.active)]
         held: list[QueueEntry] = []
         while free and len(self.queue):
@@ -246,6 +336,7 @@ class _SlotSlab:
 
     def step(self, tick: int) -> list[tuple[int, SolveResponse]]:
         """One fused tick (admit + chunk); returns evictions."""
+        self._maybe_shrink(tick)
         if not self.active.any():
             return []
         t0 = time.perf_counter()

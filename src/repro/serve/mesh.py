@@ -148,6 +148,13 @@ class _MeshSlab(_SlotSlab):
                 chunk_iters=self.chunk_iters,
                 wall_s=wall / self.n_devices)
 
+    def _migration_allowed(self) -> bool:
+        # Slot s lives on device s // per_device_capacity: the slot
+        # layout IS the mesh placement, so drain-tail resizing (which
+        # repacks live rows to the low slots) would re-home requests
+        # across devices.  Mesh slabs keep their geometry.
+        return False
+
     # -- per-device views ------------------------------------------ #
     def _live_on(self, d: int) -> int:
         per = self.per_device_capacity

@@ -89,6 +89,7 @@ def _chunk_summary(t: "ServeTelemetry") -> dict:
         "chunk_wall_s": t.chunk_wall,
         "iters_per_s": (t.chunk_live_iters / t.chunk_wall
                         if t.chunk_wall > 0 else None),
+        "migrations": t.migrations,
     }
 
 
@@ -104,6 +105,7 @@ class ServeTelemetry:
     chunk_row_iters: int = 0        # Σ K·capacity (device row iterations)
     chunk_live_iters: int = 0       # Σ K·live     (useful row iterations)
     chunk_wall: float = 0.0
+    migrations: int = 0             # drain-tail slab capacity changes
     # wave-engine per-bucket records
     waves: list = field(default_factory=list)
 
@@ -149,6 +151,12 @@ class ServeTelemetry:
         self.chunk_row_iters += chunk_iters * capacity
         self.chunk_live_iters += chunk_iters * live
         self.chunk_wall += wall_s
+
+    def record_migration(self, *, from_capacity: int,
+                         to_capacity: int) -> None:
+        """One drain-tail slab migration (capacities for dashboards only;
+        the counter is what the conservation tests use)."""
+        self.migrations += 1
 
     def record_wave(self, *, bucket: int, n_real: int, iters,
                     wall_s: float, device_iters_max: int | None = None

@@ -499,6 +499,43 @@ def read_slots(state: FlexaState, slots) -> list[FlexaState]:
             for i in range(len(slots))]
 
 
+def slab_migrate(slab: SlabState, slots, spec: BatchedProblemSpec,
+                 cfg: SolverConfig, capacity: int) -> SlabState:
+    """Repack the given live slots into a fresh slab of ``capacity``.
+
+    The drain-tail compaction move: ``slots[i]``'s entire row — family
+    data, weights, precomputed norms and the mid-flight
+    :class:`FlexaState` — lands bitwise in slot ``i`` of the new slab, so
+    a migrated request resumes exactly where it stopped (its PRNG stream
+    is keyed by request id, never by slot, so the trajectory is
+    slot-independent by construction).  Remaining slots are
+    :func:`slab_alloc` placeholders.  Works in both directions: shrink to
+    a narrower capacity bucket at the drain tail, or grow back when new
+    arrivals need room.
+    """
+    capacity = int(capacity)
+    k = len(slots)
+    if k > capacity:
+        raise ValueError(
+            f"cannot migrate {k} live slots into capacity {capacity}")
+    fresh = slab_alloc(spec, cfg, capacity)
+    if k == 0:
+        return fresh
+    sel = jnp.asarray(np.asarray(slots, np.int64).astype(np.int32))
+
+    def move(dst, src):
+        return dst.at[:k].set(jnp.take(src, sel, axis=0).astype(dst.dtype))
+
+    return SlabState(
+        data=tuple(move(d, s) for d, s in zip(fresh.data, slab.data)),
+        c=move(fresh.c, slab.c),
+        col_sq=move(fresh.col_sq, slab.col_sq),
+        tau_base=move(fresh.tau_base, slab.tau_base),
+        state=jax.tree_util.tree_map(move, fresh.state, slab.state),
+        active=move(fresh.active, slab.active),
+    )
+
+
 def _stack_instances(problems: Sequence[Problem]):
     spec = BatchedProblemSpec.of(problems[0])
     for p in problems[1:]:

@@ -1,0 +1,140 @@
+"""Capacity-bucketed active-set compaction: make screening pay in FLOPs.
+
+The screening stack (``repro.path.screening``) certifies that only an
+active *subset* of blocks can be nonzero at a given λ, but the masked
+dense iteration still spends device work on every column — the freeze
+mask zeroes the update without skipping the FLOPs.  This module packs
+the active blocks into a dense compact layout so the compiled program's
+width scales with the active set.
+
+Two design rules keep the compile cache small and the numerics exact:
+
+* **Capacity buckets.**  Compact programs are compiled per power-of-two
+  *capacity* (the smallest power of two ≥ the active-block count, capped
+  at ``n_blocks``), never per support.  Distinct supports of similar
+  size share one executable; the cache holds at most ``log2(n_blocks)+1``
+  entries per family×shape, however many supports the path visits.
+* **Inert padding.**  Unused capacity slots carry index −1 and gather to
+  zero rows — zero columns contribute nothing to gradients, zero
+  coordinates soft-threshold to zero, so padded blocks are algebraically
+  invisible (they can never be selected, and belt-and-braces callers
+  also mask them).
+
+The permutation itself is deterministic: active blocks pack in ascending
+block order (stable under ties by construction), and the inverse
+permutation scatters results back so every destination row is written
+exactly once.  Array movement routes through the ``repro.kernels.ops``
+dispatch layer — gather/scatter Pallas kernels on TPU, the jnp oracle on
+CPU — so the compact path exercises the same kernel contract everywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def bucket_capacity(active_count: int, n_blocks: int) -> int:
+    """Smallest power of two ≥ max(count, 1), capped at ``n_blocks``.
+
+    The cap means a mostly-dense support falls back to the full-width
+    program (capacity == n_blocks ⇒ nothing to skip), so compaction can
+    never *add* padding beyond the dense layout.
+    """
+    count = max(int(active_count), 1)
+    cap = 1
+    while cap < count:
+        cap *= 2
+    return min(cap, int(n_blocks))
+
+
+def pack_indices(active_mask) -> np.ndarray:
+    """Active block indices in ascending order (the stable packing)."""
+    return np.flatnonzero(np.asarray(active_mask).astype(bool)).astype(
+        np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactPlan:
+    """One support's packing permutation at its capacity bucket.
+
+    ``block_idx[k]`` is the source block of compact slot k (−1 ⇒ unused
+    capacity, gathers zeros); ``inverse[j]`` is block j's compact slot
+    (−1 ⇒ screened out, scatter keeps the base value).
+    """
+    n_blocks: int
+    block_size: int
+    capacity: int
+    block_idx: np.ndarray       # (capacity,) int32, −1 padding
+    inverse: np.ndarray         # (n_blocks,) int32, −1 ⇒ inactive
+
+    @property
+    def dense(self) -> bool:
+        """True when the bucket equals the full width — no FLOPs to skip."""
+        return self.capacity >= self.n_blocks
+
+    @property
+    def n_compact(self) -> int:
+        return self.capacity * self.block_size
+
+    # -- array movement (ops-dispatched gather/scatter) -------------- #
+    def pack_vector(self, x, *, force=None):
+        """(n,) coordinate vector → (capacity·bs,) compact layout."""
+        src = jnp.asarray(x).reshape(self.n_blocks, self.block_size)
+        out = ops.gather_blocks(src, self.block_idx, force=force)
+        return out.reshape(self.n_compact)
+
+    def pack_columns(self, A, *, force=None):
+        """(m, n) design matrix → (m, capacity·bs) active columns.
+
+        Row-major gather over the transposed block layout: each block's
+        ``bs`` columns travel as one contiguous (bs·m) row.
+        """
+        A = jnp.asarray(A)
+        m = A.shape[0]
+        src = A.T.reshape(self.n_blocks, self.block_size * m)
+        out = ops.gather_blocks(src, self.block_idx, force=force)
+        return out.reshape(self.n_compact, m).T
+
+    def pack_mask(self, mask, *, force=None):
+        """Coordinate mask through the same gather (pad slots → 0)."""
+        return self.pack_vector(mask, force=force)
+
+    def unpack_vector(self, x_c, base=None, *, force=None):
+        """(capacity·bs,) compact result → (n,) full layout.
+
+        Screened blocks keep ``base`` (zeros when omitted); every output
+        block is written exactly once — the scatter is a gather of the
+        inverse permutation, so there are no collisions by construction.
+        """
+        vals = jnp.asarray(x_c).reshape(self.capacity, self.block_size)
+        if base is None:
+            base = jnp.zeros((self.n_blocks, self.block_size), vals.dtype)
+        else:
+            base = jnp.asarray(base).reshape(self.n_blocks,
+                                             self.block_size)
+        out = ops.scatter_blocks(vals, self.inverse, base)
+        return out.reshape(self.n_blocks * self.block_size)
+
+
+def make_plan(active_mask, block_size: int) -> CompactPlan:
+    """Plan the packing of one certified support.
+
+    ``active_mask`` is a (n_blocks,) boolean/0-1 mask; the plan's
+    capacity is its bucket (``bucket_capacity``), so two supports of
+    similar size produce plans with identical shapes — and therefore hit
+    the same compiled program.
+    """
+    mask = np.asarray(active_mask).astype(bool).reshape(-1)
+    n_blocks = int(mask.shape[0])
+    idx = pack_indices(mask)
+    cap = bucket_capacity(idx.size, n_blocks)
+    block_idx = np.full(cap, -1, np.int32)
+    block_idx[:idx.size] = idx
+    inverse = np.full(n_blocks, -1, np.int32)
+    inverse[idx] = np.arange(idx.size, dtype=np.int32)
+    return CompactPlan(n_blocks=n_blocks, block_size=int(block_size),
+                       capacity=cap, block_idx=block_idx, inverse=inverse)

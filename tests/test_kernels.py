@@ -188,3 +188,81 @@ def test_ssd_scan_matches_sequential_recurrence():
     np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_seq),
                                atol=2e-5)
     np.testing.assert_allclose(np.asarray(h_c), np.asarray(h), atol=2e-5)
+
+
+# ------------------------------------------------------------------ #
+# Compacted active-set gather/scatter                                #
+# ------------------------------------------------------------------ #
+def _plan_arrays(n_rows, k_active, seed):
+    """Random (src, idx, inv) triple: idx packs k active rows (−1 pad),
+    inv is the inverse permutation (−1 for screened rows)."""
+    rng = np.random.default_rng(seed)
+    act = rng.choice(n_rows, size=k_active, replace=False)
+    act.sort()
+    cap = max(1, 1 << (max(k_active, 1) - 1).bit_length())
+    idx = np.full(cap, -1, np.int32)
+    idx[:k_active] = act
+    inv = np.full(n_rows, -1, np.int32)
+    inv[act] = np.arange(k_active, dtype=np.int32)
+    return idx, inv
+
+
+@pytest.mark.parametrize("n_rows,k,C", [
+    (16, 5, 64),
+    (16, 5, 200),                   # ragged C (pad-to-128 path)
+    (8, 8, 37),                     # everything active, tiny ragged C
+    (12, 1, 128),
+])
+def test_gather_scatter_blocks_sweep(n_rows, k, C):
+    idx, inv = _plan_arrays(n_rows, k, seed=n_rows + k + C)
+    src = jnp.asarray(RNG.standard_normal((n_rows, C)), jnp.float32)
+    g_r = ref.gather_rows_ref(src, jnp.asarray(idx))
+    g_k = ops.gather_blocks(src, jnp.asarray(idx), force="interpret")
+    np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_r), atol=0)
+    # pad rows (idx == -1) come back exactly zero
+    np.testing.assert_array_equal(np.asarray(g_k)[idx < 0], 0.0)
+    # scatter round-trips onto an untouched base
+    base = jnp.asarray(RNG.standard_normal((n_rows, C)), jnp.float32)
+    s_r = ref.scatter_rows_ref(g_r[: idx.size], jnp.asarray(inv), base)
+    s_k = ops.scatter_blocks(g_k[: idx.size], jnp.asarray(inv), base,
+                             force="interpret")
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), atol=0)
+    np.testing.assert_array_equal(np.asarray(s_k)[inv >= 0],
+                                  np.asarray(src)[inv >= 0])
+    np.testing.assert_array_equal(np.asarray(s_k)[inv < 0],
+                                  np.asarray(base)[inv < 0])
+
+
+def test_gather_blocks_all_screened():
+    """idx all −1 (support vanished): the packed tile is all zeros and a
+    scatter writes nothing over the base."""
+    n_rows, C = 8, 96
+    idx = np.full(4, -1, np.int32)
+    inv = np.full(n_rows, -1, np.int32)
+    src = jnp.asarray(RNG.standard_normal((n_rows, C)), jnp.float32)
+    base = jnp.asarray(RNG.standard_normal((n_rows, C)), jnp.float32)
+    g = ops.gather_blocks(src, jnp.asarray(idx), force="interpret")
+    np.testing.assert_array_equal(np.asarray(g), 0.0)
+    s = ops.scatter_blocks(jnp.zeros((4, C), jnp.float32)[:n_rows],
+                           jnp.asarray(inv), base, force="interpret")
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(base))
+
+
+@pytest.mark.parametrize("C", [64, 200])
+@pytest.mark.parametrize("scalar_d", [True, False])
+def test_compact_best_response_sweep(C, scalar_d):
+    """Fused gather+prox == gather-then-dense-prox oracle."""
+    n_rows, k = 16, 6
+    idx, _ = _plan_arrays(n_rows, k, seed=C)
+    x = jnp.asarray(RNG.standard_normal((n_rows, C)), jnp.float32)
+    g = jnp.asarray(RNG.standard_normal((n_rows, C)), jnp.float32)
+    d = 2.0 if scalar_d else \
+        jnp.asarray(RNG.uniform(0.5, 3, (n_rows, C)), jnp.float32)
+    z_r, e_r = ref.compact_best_response_ref(x, g, d, 0.3, jnp.asarray(idx))
+    z_k, e_k = ops.compact_best_response(x, g, d, 0.3, jnp.asarray(idx),
+                                         force="interpret")
+    np.testing.assert_allclose(np.asarray(z_k), np.asarray(z_r),
+                               atol=2e-5, rtol=2e-5)
+    assert abs(float(e_k) - float(e_r)) < 1e-3 * max(1.0, float(e_r))
+    # pad rows contribute nothing: z there is exactly zero
+    np.testing.assert_array_equal(np.asarray(z_k)[idx < 0], 0.0)

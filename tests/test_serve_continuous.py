@@ -1,6 +1,8 @@
 """Continuous-batching runtime: equivalence, scheduling properties,
 telemetry, and the bounded compile caches (the PR's acceptance criteria
 live here)."""
+from collections import Counter
+
 import numpy as np
 import pytest
 
@@ -426,3 +428,123 @@ def test_serve_load_full_sweep(tmp_path, monkeypatch):
     art = SL.main()
     assert all(art["acceptance"].values()), art["acceptance"]
     assert (tmp_path / "BENCH_serve.json").exists()
+
+
+# ------------------------------------------------------------------ #
+# Drain-tail slab compaction (ServeConfig.compact_drain)             #
+# ------------------------------------------------------------------ #
+def _straggler_trace():
+    """Six same-signature requests whose iteration counts spread ~100 to
+    ~180 (measured at tol 1e-7): once the fast ones evict, the slowest
+    request holds the slab alone for chunks on end — the drain tail the
+    shape migration exists for."""
+    return [nesterov_instance(m=20, n=64, nnz_frac=0.15, c=1.0, seed=s)
+            for s in range(6)]
+
+
+def _run_trace(probs, cfg, serve):
+    eng = ContinuousSolverEngine(cfg, serve)
+    ids = [eng.submit(to_request(p)) for p in probs]
+    return eng, ids, eng.drain()
+
+
+DRAIN_CFG = SolverConfig(max_iters=6000, tol=1e-7, seed=0)
+
+
+def test_drain_tail_migration_forced_straggler():
+    """With compact_drain on, the forced straggler is migrated into
+    narrower slabs as the tail drains: telemetry counts migrations, the
+    audit carries the per-request migration trail, every request is
+    served exactly once, and the straggler finishes in a bucket smaller
+    than the base capacity."""
+    probs = _straggler_trace()
+    eng, ids, resp = _run_trace(probs, DRAIN_CFG, ServeConfig(
+        slab_capacity=8, chunk_iters=8, compact_drain=True))
+    assert eng.telemetry.migrations >= 1
+    assert eng.telemetry.snapshot()["continuous"]["migrations"] \
+        == eng.telemetry.migrations
+    # the straggler (slowest request) was still live through the
+    # shrink: its final bucket is narrower than the base slab
+    slowest = max(ids, key=lambda i: resp[i].iters)
+    assert resp[slowest].bucket < 8
+    trail = [rec for rec in eng.audit if rec.get("migrations")]
+    assert trail, "no audit record carries a migration trail"
+    from repro.solvers.compaction import bucket_capacity
+    for rec in trail:
+        for mv in rec["migrations"]:
+            # capacities are buckets: powers of two capped at base
+            assert mv["to_capacity"] == bucket_capacity(
+                mv["to_capacity"], 8)
+            assert mv["from_capacity"] != mv["to_capacity"]
+    # exactly-once service across all capacities
+    counts = Counter(rec["req_id"] for rec in eng.audit)
+    assert sorted(counts) == sorted(ids)
+    assert all(v == 1 for v in counts.values())
+
+
+def test_drain_tail_migration_off_by_default():
+    probs = _straggler_trace()
+    eng, ids, resp = _run_trace(probs, DRAIN_CFG, ServeConfig(
+        slab_capacity=8, chunk_iters=8))
+    assert eng.telemetry.migrations == 0
+    assert all(resp[i].bucket == 8 for i in ids)
+    assert not any(rec.get("migrations") for rec in eng.audit)
+
+
+def test_drain_tail_responses_match_fixed_capacity():
+    """Migration is a bitwise row move but the chunk program retraces at
+    each capacity, so the contract is solver-tolerance agreement (≤1e-5)
+    with the never-migrated run — convergence flags and near-identical
+    iteration counts included."""
+    probs = _straggler_trace()
+    _, ids0, r0 = _run_trace(probs, DRAIN_CFG, ServeConfig(
+        slab_capacity=8, chunk_iters=8))
+    eng, ids1, r1 = _run_trace(probs, DRAIN_CFG, ServeConfig(
+        slab_capacity=8, chunk_iters=8, compact_drain=True))
+    assert eng.telemetry.migrations >= 1
+    for i0, i1 in zip(ids0, ids1):
+        np.testing.assert_allclose(np.asarray(r1[i1].x),
+                                   np.asarray(r0[i0].x), atol=1e-5)
+        assert r1[i1].converged == r0[i0].converged
+
+
+def test_drain_tail_live_iters_conserved_through_migration():
+    """Telemetry conservation: with one slab serviced every tick,
+    chunk_live_iters == K · Σ_req (evict_tick − admit_tick + 1) —
+    migrations move rows but never duplicate or drop a live-slot
+    iteration."""
+    probs = _straggler_trace()
+    K = 8
+    eng, ids, _ = _run_trace(probs, DRAIN_CFG, ServeConfig(
+        slab_capacity=8, chunk_iters=K, compact_drain=True))
+    assert eng.telemetry.migrations >= 1
+    expect = sum(K * (rec["evict_tick"] - rec["admit_tick"] + 1)
+                 for rec in eng.audit)
+    assert eng.telemetry.chunk_live_iters == expect
+
+
+def test_drain_tail_grows_back_on_new_arrivals():
+    """A shrunk slab grows back toward its base capacity when arrivals
+    outnumber the free slots — nobody queues forever behind a narrow
+    slab, and service stays exactly-once across both directions."""
+    probs = [nesterov_instance(m=20, n=64, nnz_frac=0.15, c=1.0, seed=s)
+             for s in range(10)]
+    eng = ContinuousSolverEngine(DRAIN_CFG, ServeConfig(
+        slab_capacity=8, chunk_iters=8, compact_drain=True))
+    ids = [eng.submit(to_request(p)) for p in probs[:6]]
+    slab = None
+    for _ in range(200):                     # tick until the tail shrank
+        eng.step()
+        slab = next(iter(eng._slabs.values()))
+        if slab.capacity < 8 or not slab.pending:
+            break
+    assert slab.capacity < 8 and slab.live > 0
+    shrunk = slab.capacity
+    ids += [eng.submit(to_request(p)) for p in probs[6:]]
+    eng.step()
+    assert slab.capacity > shrunk            # grew back for the flood
+    resp = eng.drain()
+    assert sorted(resp) == sorted(ids)
+    counts = Counter(rec["req_id"] for rec in eng.audit)
+    assert sorted(counts) == sorted(ids)
+    assert all(v == 1 for v in counts.values())

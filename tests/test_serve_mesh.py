@@ -490,3 +490,24 @@ def test_mesh_four_device_subprocess():
     assert rec["max_diff"] <= 1e-5
     assert rec["iters_equal"] and rec["one_service"]
     assert rec["conservation"]
+
+
+def test_mesh_slab_never_migrates():
+    """``ServeConfig.compact_drain`` is a continuous-engine feature:
+    a mesh slab's slot layout IS the device placement (slot s lives on
+    device s // S_dev), so drain-tail resizing must be a no-op there —
+    same answers, zero migrations, capacities untouched."""
+    probs = FAMILY_BATCHES["lasso"]()
+    em = MeshServeEngine(CFG, mesh_serve(compact_drain=True))
+    e0 = MeshServeEngine(CFG, mesh_serve())
+    im = [em.submit(to_request(p)) for p in probs]
+    i0 = [e0.submit(to_request(p)) for p in probs]
+    rm, r0 = em.drain(), e0.drain()
+    assert em.telemetry.migrations == 0
+    for slab in em._slabs.values():
+        assert slab.capacity == slab._base_capacity
+        assert not slab._migration_allowed()
+    for a, b in zip(im, i0):
+        np.testing.assert_array_equal(np.asarray(rm[a].x),
+                                      np.asarray(r0[b].x))
+    assert not any(rec.get("migrations") for rec in em.audit)
