@@ -112,6 +112,19 @@ def main() -> None:
                   f"makespan_x={s['makespan']} p99_x={s['p99_latency']} "
                   f"row_iters_x={s['row_iters']}")
 
+        # Observability overhead + determinism gates (writes
+        # BENCH_obs.json; --smoke gates the deterministic criteria only,
+        # the full run adds the 5% tracing-overhead budget).
+        from benchmarks import obs_bench
+        art = obs_bench.main(smoke=args.smoke)
+        failures += [f"obs:{k}" for k in art["gate"]
+                     if not art["acceptance"][k]]
+        per_evt = (art["wall_s"]["traced"] * 1e6
+                   / max(1, sum(art["events"].values())))
+        print(f"obs/heavy_tail,{per_evt:.0f},"
+              f"overhead={art['overhead_frac']:+.4f} "
+              f"util={art['ledger']['utilization']}")
+
     if not args.skip_path:
         # λ-path engine columns + CV-over-serve (writes BENCH_path.json).
         from benchmarks import path_bench

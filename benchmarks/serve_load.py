@@ -437,7 +437,7 @@ def main_mesh(devices: int, requests: int = 48, seed: int = 0,
         msnap["continuous"][k] == sum(d[k] for d in
                                       msnap["mesh"]["per_device"])
         for k in ("chunks", "chunk_iters", "row_iters", "live_iters",
-                  "chunk_wall_s"))
+                  "chunk_wall_s", "device_flops"))
 
     artifact = {
         "smoke": smoke, "devices": devices, "requests": requests,

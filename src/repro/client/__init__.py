@@ -36,8 +36,9 @@ from repro.client.errors import (ClientError, SpecError,
                                  UnsupportedWorkloadError)
 from repro.client.session import FlexaClient
 from repro.client.specs import (BatchResult, BatchSpec, CVResult, CVSpec,
-                                PathSpec, SoloResult, SoloSpec, WorkItem,
-                                normalize, solve_request_of)
+                                PathSpec, SoloResult, SoloSpec,
+                                TicketDiagnostics, WorkItem, normalize,
+                                solve_request_of)
 from repro.config.base import ClientConfig
 from repro.path.driver import PathResult
 
@@ -45,7 +46,7 @@ __all__ = [
     "FlexaClient", "ClientConfig",
     "SoloSpec", "BatchSpec", "PathSpec", "CVSpec",
     "SoloResult", "BatchResult", "PathResult", "CVResult",
-    "WorkItem", "normalize", "solve_request_of",
+    "TicketDiagnostics", "WorkItem", "normalize", "solve_request_of",
     "Backend", "InlineBackend", "WaveBackend", "ContinuousBackend",
     "MeshBackend",
     "available_backends", "register_backend", "make_backend",

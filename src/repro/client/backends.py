@@ -45,30 +45,64 @@ from repro.client.specs import (SERVE_PATH_FAMILIES, BatchResult, CVResult,
                                 solve_request_of)
 from repro.config.base import ClientConfig, SolverConfig
 from repro.deprecation import internal_use
+from repro.obs.ledger import CostLedger
 from repro.path.driver import (PathResult, _problem_at, _solve_path,
                                _solve_path_batched)
 from repro.path.grid import geometric_grid, lambda_max, validate_grid
 from repro.path.screening import ScreenReport
+from repro.problems.families import get_family, infer_family
 from repro.serve.metrics import ServeTelemetry
 
 
 # ------------------------------------------------------------------ #
 # Shared result plumbing                                             #
 # ------------------------------------------------------------------ #
-def _solo_result(resp, backend: str) -> SoloResult:
+def _dims(problem) -> tuple[int, int]:
+    """(m, n) pricing dims of a registry-family instance — the matvec
+    currency every ledger uses.  (0, 0) for ad-hoc problems whose
+    leading data array is not a 2-D operator (their device cost is not
+    expressible in the shared currency, so it is reported as zero
+    rather than guessed)."""
+    try:
+        fam = infer_family(problem)
+        A = np.asarray(problem.data[get_family(fam).data_keys[0]])
+    except (ValueError, KeyError):
+        return 0, 0
+    return (int(A.shape[0]), int(A.shape[1])) if A.ndim == 2 else (0, 0)
+
+
+def _request_ledger(iter_counts, problems) -> CostLedger:
+    """Per-request useful-work pricing: each request's own iterations at
+    its own (m, n).  Slab/bucket *waste* (padding + freeze rows) is a
+    scheduling property, accounted once in the session telemetry ledger
+    — pricing it per request would double-count it across tickets."""
+    led = CostLedger()
+    for it, p in zip(iter_counts, problems):
+        it = int(it)
+        m, n = _dims(p)
+        led.add(row_iters=it, live_iters=it, device_flops=it * m * n)
+    return led
+
+
+def _solo_result(resp, backend: str, problem=None) -> SoloResult:
     """Normalize a serve ``SolveResponse`` onto the client contract."""
+    led = (None if problem is None
+           else _request_ledger([resp.iters], [problem]))
     return SoloResult(x=np.asarray(resp.x), iters=int(resp.iters),
                       converged=bool(resp.converged),
-                      stat=float(resp.stat), backend=backend, raw=resp)
+                      stat=float(resp.stat), backend=backend, raw=resp,
+                      ledger=led)
 
 
-def _batch_result(resps, backend: str) -> BatchResult:
+def _batch_result(resps, backend: str, problems=None) -> BatchResult:
+    led = (None if problems is None
+           else _request_ledger([r.iters for r in resps], problems))
     return BatchResult(
         x=np.stack([np.asarray(r.x) for r in resps]),
         iters=np.asarray([int(r.iters) for r in resps], np.int64),
         converged=np.asarray([bool(r.converged) for r in resps], bool),
         stat=np.asarray([float(r.stat) for r in resps]),
-        backend=backend, raw=list(resps))
+        backend=backend, raw=list(resps), ledger=led)
 
 
 def _path_result_from_serve(problem, d: dict, backend: str) -> PathResult:
@@ -86,9 +120,11 @@ def _path_result_from_serve(problem, d: dict, backend: str) -> PathResult:
         for k in range(P)], np.int64)
     screened_out = np.asarray(d["screened_out"], np.int64)
     kkt_rounds = np.asarray(d["kkt_rounds"], np.int64)
+    iters = np.asarray(d["iters"], np.int64)
+    led = _request_ledger([int(iters.sum())], [problem])
     return PathResult(
         lambdas=lambdas, x=xs, V=V,
-        iters=np.asarray(d["iters"], np.int64),
+        iters=iters,
         converged=np.asarray(d["converged"], bool),
         support=support,
         active_blocks=n_blocks - screened_out,
@@ -98,9 +134,11 @@ def _path_result_from_serve(problem, d: dict, backend: str) -> PathResult:
                   for k in range(P)],
         # Per-request iteration total; slab/bucket device accounting
         # (padding + freeze waste) lives in the session telemetry.
-        row_iters=int(np.asarray(d["iters"]).sum()),
+        row_iters=int(iters.sum()),
+        device_flops=led.device_flops,
         lam_max=float(d["lam_max"]),
-        meta={"backend": backend, "source": "serve"})
+        meta={"backend": backend, "source": "serve"},
+        ledger=led)
 
 
 def _scorer(spec):
@@ -143,14 +181,36 @@ def _winner_problems(item: WorkItem, best_lambda: float) -> list:
 
 def _finish_cv(item: WorkItem, folds: list, backend: str,
                x_best: np.ndarray | None, select: dict,
-               meta: dict) -> CVResult:
+               meta: dict, ledger: CostLedger | None = None) -> CVResult:
     if select["best_index"] is not None and x_best is None:
         # Full-tolerance sweep: the winner column IS the answer.
         x_best = np.stack([f.x[select["best_index"]] for f in folds])
     return CVResult(folds=folds, lambdas=folds[0].lambdas,
                     backend=backend, x_best=x_best,
                     meta={**meta,
-                          "tol_coarse": item.spec.tol_coarse}, **select)
+                          "tol_coarse": item.spec.tol_coarse},
+                    ledger=ledger, **select)
+
+
+def _cv_ledger(folds: list, resolve_led: CostLedger | None,
+               shared: bool = False) -> CostLedger:
+    """Sweep cost + (optional) winner re-solve cost.
+
+    Serve-side folds each carry their own per-request ledger (sum them);
+    the inline lockstep sweep attaches one *sweep-wide* ledger copy to
+    every fold (``shared=True``), where summing would K-fold overcount —
+    take one copy instead.
+    """
+    leds = [f.ledger for f in folds if f.ledger is not None]
+    led = CostLedger()
+    if shared and leds:
+        led = leds[0].copy()
+    else:
+        for fold_led in leds:
+            led.merge(fold_led)
+    if resolve_led is not None:
+        led.merge(resolve_led)
+    return led
 
 
 # ------------------------------------------------------------------ #
@@ -191,6 +251,14 @@ class Backend:
 
     def result(self, ticket: int):
         return self._results.get(ticket)
+
+    def request_ids(self, ticket: int) -> list[int]:
+        """Engine request ids a ticket spawned (diagnostics feed).
+
+        Backends with no per-ticket request mapping report ``[]`` —
+        their aggregate view is ``stats()``/telemetry.
+        """
+        return []
 
     def stats(self) -> dict:
         return {"backend": self.name}
@@ -309,7 +377,8 @@ class InlineBackend(Backend):
                 converged=bool(np.asarray(r.converged).all()),
                 stat=None if stat is None or not hasattr(stat, "stat")
                 else float(np.asarray(stat.stat)),
-                backend=self.name, raw=r)
+                backend=self.name, raw=r,
+                ledger=_request_ledger([r.iters], [spec.problem]))
         elif item.kind == "batch":
             from repro.solvers.batched import _solve_batched
             r = _solve_batched(item.problems, x0=spec.x0, cfg=cfg,
@@ -320,17 +389,32 @@ class InlineBackend(Backend):
                 converged=np.asarray(r.converged),
                 stat=np.asarray(r.state.stat) if r.state is not None
                 else None,
-                backend=self.name, raw=r)
+                backend=self.name, raw=r,
+                ledger=self._batch_ledger(item, np.asarray(r.iters)))
         elif item.kind == "path":
             self._results[item.ticket] = _solve_path(
                 spec.problem, spec.lambdas, n_points=spec.n_points,
                 lam_min_ratio=spec.lam_min_ratio, cfg=cfg,
                 warm=spec.warm, screen=spec.screen,
                 kkt_slack=spec.kkt_slack, lam_batch=spec.lam_batch,
-                tol_schedule=spec.tol_schedule, compact=spec.compact)
+                tol_schedule=spec.tol_schedule, compact=spec.compact,
+                clock=self.telemetry.clock)
         elif item.kind == "cv":
             self._results[item.ticket] = self._run_cv(item, cfg)
         return [item.ticket]
+
+    @staticmethod
+    def _batch_ledger(item: WorkItem, iters: np.ndarray) -> CostLedger:
+        """Lockstep vmap pricing: the device runs every instance for the
+        slowest instance's iteration count (frozen rows thereafter)."""
+        B = len(item.problems)
+        row = int(iters.max()) * B if B else 0
+        live = int(iters.sum())
+        m, n = _dims(item.problems[0]) if B else (0, 0)
+        led = CostLedger()
+        led.add(row_iters=row, live_iters=live, freeze_iters=row - live,
+                device_flops=row * m * n)
+        return led
 
     def _run_cv(self, item: WorkItem, cfg: SolverConfig) -> CVResult:
         spec = item.spec
@@ -340,9 +424,11 @@ class InlineBackend(Backend):
             item.problems, spec.lambdas, n_points=spec.n_points,
             lam_min_ratio=spec.lam_min_ratio, cfg=sweep_cfg,
             warm=spec.warm, screen=spec.screen,
-            kkt_slack=spec.kkt_slack, tol_schedule=spec.tol_schedule)
+            kkt_slack=spec.kkt_slack, tol_schedule=spec.tol_schedule,
+            clock=self.telemetry.clock)
         select = _cv_select(item, folds)
         x_best = None
+        resolve_led = None
         if select["best_index"] is not None \
                 and spec.tol_coarse is not None:
             # Coarse-to-fine continuation: only the winner gets the
@@ -353,8 +439,11 @@ class InlineBackend(Backend):
             x0 = np.stack([f.x[select["best_index"]] for f in folds])
             r = _solve_batched(probs, x0=x0, cfg=cfg)
             x_best = np.asarray(r.x)
+            resolve_led = self._batch_ledger(item, np.asarray(r.iters))
         return _finish_cv(item, folds, self.name, x_best, select,
-                          meta={"mode": "lockstep"})
+                          meta={"mode": "lockstep"},
+                          ledger=_cv_ledger(folds, resolve_led,
+                                            shared=True))
 
 
 # ------------------------------------------------------------------ #
@@ -487,8 +576,8 @@ class WaveBackend(Backend):
                 kind = route[0]
                 if kind == "solo":
                     _, item, _ = route
-                    self._results[item.ticket] = _solo_result(resp,
-                                                              self.name)
+                    self._results[item.ticket] = _solo_result(
+                        resp, self.name, item.problems[0])
                     done.append(item.ticket)
                 elif kind == "batch":
                     _, item, i = route
@@ -507,7 +596,8 @@ class WaveBackend(Backend):
         for ticket, rec in partial.items():
             item, resps = rec["item"], rec["resps"]
             self._results[ticket] = _batch_result(
-                [resps[i] for i in range(len(item.problems))], self.name)
+                [resps[i] for i in range(len(item.problems))], self.name,
+                item.problems)
             done.append(ticket)
 
         for ticket in list(self._jobs):
@@ -519,7 +609,10 @@ class WaveBackend(Backend):
                                        for r in job.winner_resps])
                     self._results[ticket] = _finish_cv(
                         job.item, folds, self.name, x_best, job.select,
-                        meta={"mode": "wave"})
+                        meta={"mode": "wave"},
+                        ledger=_cv_ledger(folds, _request_ledger(
+                            [r.iters for r in job.winner_resps],
+                            job.item.problems)))
                     del self._jobs[ticket]
                     done.append(ticket)
                 continue
@@ -549,7 +642,8 @@ class WaveBackend(Backend):
             else:
                 self._results[ticket] = _finish_cv(
                     job.item, folds, self.name, None, select,
-                    meta={"mode": "wave"})
+                    meta={"mode": "wave"},
+                    ledger=_cv_ledger(folds, None))
                 del self._jobs[ticket]
                 done.append(ticket)
         return done
@@ -589,6 +683,7 @@ class ContinuousBackend(Backend):
         super().__init__(config, telemetry)
         self._engines: dict[SolverConfig, object] = {}
         self._live: dict[int, _ContTicket] = {}
+        self._done: dict[int, _ContTicket] = {}     # diagnostics feed
 
     def _engine(self, cfg: SolverConfig):
         eng = self._engines.get(cfg)
@@ -641,9 +736,21 @@ class ContinuousBackend(Backend):
             result = self._advance(rec)
             if result is not None:
                 self._results[ticket] = result
-                del self._live[ticket]
+                self._done[ticket] = self._live.pop(ticket)
                 done.append(ticket)
         return done
+
+    def request_ids(self, ticket: int) -> list[int]:
+        rec = self._live.get(ticket) or self._done.get(ticket)
+        if rec is None:
+            return []
+        ids = list(rec.req_ids)
+        if rec.path_ids:
+            sweep = self._engine(self._sweep_cfg(rec.item))
+            for pid in rec.path_ids:
+                ids.extend(sweep.path_result(pid)["req_ids"])
+        ids.extend(rec.resolve_ids)
+        return ids
 
     def _advance(self, rec: _ContTicket):
         item = rec.item
@@ -653,8 +760,9 @@ class ContinuousBackend(Backend):
             if any(r is None for r in resps):
                 return None
             if item.kind == "solo":
-                return _solo_result(resps[0], self.name)
-            return _batch_result(resps, self.name)
+                return _solo_result(resps[0], self.name,
+                                    item.problems[0])
+            return _batch_result(resps, self.name, item.problems)
 
         sweep = self._engine(self._sweep_cfg(item))
         if rec.phase == "run":
@@ -670,7 +778,8 @@ class ContinuousBackend(Backend):
             if select["best_index"] is None \
                     or item.spec.tol_coarse is None:
                 return _finish_cv(item, folds, self.name, None, select,
-                                  meta={"mode": "continuous"})
+                                  meta={"mode": "continuous"},
+                                  ledger=_cv_ledger(folds, None))
             # Phase 2: full-tol winner re-solve through the main engine.
             rec.phase, rec.folds, rec.select = "resolve", folds, select
             best = select["best_index"]
@@ -683,11 +792,15 @@ class ContinuousBackend(Backend):
             return None
         x_best = np.stack([np.asarray(r.x) for r in resps])
         return _finish_cv(item, rec.folds, self.name, x_best,
-                          rec.select, meta={"mode": "continuous"})
+                          rec.select, meta={"mode": "continuous"},
+                          ledger=_cv_ledger(rec.folds, _request_ledger(
+                              [r.iters for r in resps], item.problems)))
 
     def stats(self) -> dict:
         return {"backend": self.name,
-                "pending": self.pending}
+                "pending": self.pending,
+                "queued": sum(getattr(eng, "queued", 0)
+                              for eng in self._engines.values())}
 
 
 # ------------------------------------------------------------------ #

@@ -29,8 +29,9 @@ from typing import Iterator
 
 from repro.client.backends import Backend, make_backend
 from repro.client.errors import ClientError
-from repro.client.specs import WorkItem, normalize
+from repro.client.specs import TicketDiagnostics, WorkItem, normalize
 from repro.config.base import ClientConfig, ServeConfig, SolverConfig
+from repro.obs import trace as obs
 from repro.serve.metrics import MeshTelemetry, ServeTelemetry
 
 
@@ -93,7 +94,9 @@ class FlexaClient:
         # Register only after the backend accepted the work: an eager
         # (inline) execution error must not leak a half-registered
         # ticket — rejection stays atomic.
-        done = self._backend.submit(item, arrival=arrival)
+        with obs.span("client.submit", cat="client", ticket=item.ticket,
+                      kind=item.kind, backend=self._backend.name):
+            done = self._backend.submit(item, arrival=arrival)
         self._items[item.ticket] = item
         self._completed.extend(done)
         return item.ticket
@@ -101,7 +104,10 @@ class FlexaClient:
     def step(self) -> list[int]:
         """Advance the backend one scheduler round; returns the tickets
         completed by it (inline work completes at submit instead)."""
-        done = self._backend.step()
+        with obs.span("client.step", cat="client",
+                      backend=self._backend.name,
+                      pending=self._backend.pending):
+            done = self._backend.step()
         self._completed.extend(done)
         return done
 
@@ -151,6 +157,27 @@ class FlexaClient:
         """Backend counters + the session telemetry snapshot."""
         return {**self._backend.stats(),
                 "telemetry": self.telemetry.snapshot()}
+
+    def diagnostics(self, ticket: int) -> TicketDiagnostics:
+        """Per-request lifecycle view of one ticket: every engine
+        request it spawned, as :meth:`RequestTrace.as_dict` dicts (with
+        residual-trajectory ``samples`` when
+        ``telemetry.sample_progress`` is on) — the dashboard's
+        convergence-sparkline feed.  Backends that keep no per-ticket
+        request mapping (inline, wave) report an empty request list.
+        """
+        if ticket not in self._items:
+            raise KeyError(f"unknown ticket {ticket!r}")
+        item = self._items[ticket]
+        traces = []
+        for rid in self._backend.request_ids(ticket):
+            t = self.telemetry.requests.get(rid)
+            if t is not None:
+                traces.append(t.as_dict())
+        return TicketDiagnostics(
+            ticket=ticket, kind=item.kind, backend=self._backend.name,
+            done=self._backend.result(ticket) is not None,
+            requests=traces)
 
     def close(self) -> None:
         """Release backend resources (engines keep no device locks —

@@ -30,6 +30,7 @@ from typing import Callable, Sequence
 import numpy as np
 
 from repro.client.errors import SpecError
+from repro.obs.ledger import CostLedger
 from repro.path.driver import PathResult
 from repro.path.screening import DEFAULT_KKT_SLACK
 from repro.problems.base import Problem
@@ -132,6 +133,7 @@ class SoloResult:
     stat: float | None              # final ‖x̂−x‖∞ (None: method w/o it)
     backend: str
     raw: object = None              # SolverResult (inline) / SolveResponse
+    ledger: CostLedger | None = None    # unified per-request accounting
 
     @property
     def history(self):
@@ -149,6 +151,7 @@ class BatchResult:
     stat: np.ndarray | None         # (B,)
     backend: str
     raw: object = None              # SolverResult (inline) / responses
+    ledger: CostLedger | None = None    # unified batch-wide accounting
 
     def __len__(self) -> int:
         return int(self.x.shape[0])
@@ -166,6 +169,31 @@ class CVResult:
     best_lambda: float | None = None
     x_best: np.ndarray | None = None        # (K, n) full-tol winners
     meta: dict = field(default_factory=dict)
+    ledger: CostLedger | None = None        # unified sweep accounting
+
+
+@dataclass
+class TicketDiagnostics:
+    """Per-request lifecycle view of one client ticket — the dashboard's
+    sparkline feed (``FlexaClient.diagnostics``).
+
+    ``requests`` holds one :meth:`RequestTrace.as_dict` per engine
+    request the ticket spawned (solo/batch requests, every λ-point of a
+    path, CV winner re-solves); the ``samples`` lists inside are
+    populated when ``telemetry.sample_progress`` is on.  Backends that
+    keep no per-ticket request mapping (wave, inline) report an empty
+    list — their aggregate view lives in ``client.stats()``.
+    """
+    ticket: int
+    kind: str
+    backend: str
+    done: bool
+    requests: list = field(default_factory=list)
+
+    def as_dict(self) -> dict:
+        return {"ticket": self.ticket, "kind": self.kind,
+                "backend": self.backend, "done": self.done,
+                "requests": list(self.requests)}
 
 
 # ------------------------------------------------------------------ #

@@ -1,0 +1,40 @@
+"""Unified observability layer: span tracing, cost ledger, live ops view.
+
+``repro.obs`` spans the whole stack — client submit/run/step, backend
+dispatch, wave/continuous/mesh serve engines, path-driver KKT rounds and
+compaction repacks, and compile-cache hits/misses — with three pieces:
+
+* :mod:`repro.obs.trace` — deterministic injectable-clock span recorder
+  exporting JSONL and Chrome trace-event JSON (Perfetto-loadable).
+  Disabled (the default) it is bitwise-invisible: all instrumentation
+  sites short-circuit on one global read.
+* :mod:`repro.obs.ledger` — the stack-wide :class:`CostLedger`
+  (row-iters / live-iters / device FLOPs / padding / freeze / compiles)
+  every engine and every client result now reports with identical keys.
+* :mod:`repro.obs.dashboard` — ``python -m repro.obs.dashboard``:
+  terminal ops view rendering queue depth, slab occupancy, latency
+  percentiles, per-device mesh rollups, and per-request convergence
+  sparklines from sampled trajectories.
+
+See ``docs/observability.md`` for the span model, ledger key semantics,
+and the determinism contract (gated by ``benchmarks/obs_bench.py``).
+"""
+from repro.obs.dashboard import render_requests, render_snapshot, sparkline
+from repro.obs.ledger import LEDGER_KEYS, CostLedger
+from repro.obs.trace import (Span, Tracer, get_tracer, instant, set_tracer,
+                             span, tracing)
+
+__all__ = [
+    "CostLedger",
+    "LEDGER_KEYS",
+    "Span",
+    "Tracer",
+    "get_tracer",
+    "instant",
+    "render_requests",
+    "render_snapshot",
+    "set_tracer",
+    "span",
+    "sparkline",
+    "tracing",
+]

@@ -39,10 +39,13 @@ import jax.numpy as jnp
 
 from repro.config.base import SolverConfig
 from repro.core.flexa import tau0_from_colsq
+from repro.obs import trace as obs
+from repro.obs.ledger import CostLedger
 from repro.problems.base import Problem
 from repro.problems.families import build_problem, get_family, infer_family
 from repro.path.grid import geometric_grid, lambda_max, validate_grid
 from repro.deprecation import warn_legacy
+from repro.solvers.cache import cache_stats
 from repro.path.screening import (DEFAULT_KKT_SLACK, ScreenReport,
                                   block_scores, expand_blocks,
                                   kkt_violations, strong_rule_active)
@@ -53,6 +56,12 @@ from repro.solvers.compaction import make_plan
 #: re-admission rounds at one path point (never observed > 2 in anger;
 #: the fallback guarantees exactness whatever the rule did).
 MAX_KKT_ROUNDS = 8
+
+
+def _compile_count() -> int:
+    """Process-wide compile-cache misses — differenced around a solve to
+    charge the executables it actually compiled to its ledger."""
+    return sum(c["misses"] for c in cache_stats().values())
 
 
 @dataclass
@@ -73,6 +82,10 @@ class PathResult:
                                 #   currency; what compaction shrinks)
     lam_max: float = 0.0
     meta: dict = field(default_factory=dict)
+    ledger: CostLedger | None = None    # unified stack-wide accounting
+                                        # (row/live/flops/waste/compiles);
+                                        # row_iters/device_flops above are
+                                        # kept as mirrors of its keys
 
     @property
     def n_points(self) -> int:
@@ -104,7 +117,7 @@ def _solve_path(problem: Problem, lambdas=None, *, n_points: int = 20,
                 warm: bool = True, screen: bool = True,
                 kkt_slack: float = DEFAULT_KKT_SLACK,
                 lam_batch: int = 1, tol_schedule=None,
-                compact: bool = False) -> PathResult:
+                compact: bool = False, clock=None) -> PathResult:
     """Solve a decreasing λ-grid for one lasso/group-lasso instance.
 
     Every point (and every KKT re-admission round) runs through the
@@ -151,12 +164,18 @@ def _solve_path(problem: Problem, lambdas=None, *, n_points: int = 20,
                     in the chunk (never looser than asked).  Each
                     distinct tolerance is one extra compile-cache entry.
 
+    clock         : zero-arg float callable used for ``meta["wall_s"]``
+                    (default ``time.perf_counter``) — inject a virtual
+                    clock for reproducible path wall-times, exactly like
+                    the serve engines' ``ServeTelemetry.clock``.
+
     Note on randomized selection rules: the batched engine keys each
     row's PRNG stream by its batch index, so random/hybrid trajectories
     differ from a solo ``solve()`` of the same point (deterministic rules
     — the default greedy — are identical).
     """
     cfg = cfg or SolverConfig()
+    clock = clock if clock is not None else time.perf_counter
     family = infer_family(problem)
     fam = get_family(family)
     if screen and not fam.screenable:
@@ -205,7 +224,8 @@ def _solve_path(problem: Problem, lambdas=None, *, n_points: int = 20,
     scores_prev = (block_scores(fam, _problem_at(problem, lam_max),
                                 x_prev) if screen else None)
 
-    t0 = time.perf_counter()
+    t0 = clock()
+    compiles0 = _compile_count()
     k = 0
     while k < P:
         # Trivial points: every c ≥ λ_max has the exact solution 0.
@@ -228,10 +248,12 @@ def _solve_path(problem: Problem, lambdas=None, *, n_points: int = 20,
         # Chunk-mates share one compiled program, so they run at the
         # tightest tolerance in the chunk (never looser than asked).
         cfg_k = _cfg_at_tol(cfg, float(tols[chunk].min()))
-        out = _solve_chunk(problem, fam, grid[chunk], c_prev,
-                           x_prev, scores_prev, cfg_k, warm=warm,
-                           screen=screen, kkt_slack=kkt_slack,
-                           compact=compact, tau0_pin=tau0_pin)
+        with obs.span("path.point", cat="path", k=k,
+                      lam=float(grid[k]), chunk=len(chunk)):
+            out = _solve_chunk(problem, fam, grid[chunk], c_prev,
+                               x_prev, scores_prev, cfg_k, warm=warm,
+                               screen=screen, kkt_slack=kkt_slack,
+                               compact=compact, tau0_pin=tau0_pin)
         for j, kk in enumerate(chunk):
             xs[kk] = out["x"][j]
             V[kk] = out["V"][j]
@@ -251,6 +273,14 @@ def _solve_path(problem: Problem, lambdas=None, *, n_points: int = 20,
         int(np.count_nonzero(
             np.linalg.norm(xs[p].reshape(n_blocks, bs), axis=-1)))
         for p in range(P)], np.int64)
+    # Unified accounting: the lockstep batch runs every chunk row until
+    # the slowest stops, so row − live is freeze waste (no padding rows
+    # on the path — every row is a real λ-point).
+    live = int(iters.sum())
+    led = CostLedger(row_iters=int(row_iters), live_iters=live,
+                     device_flops=int(device_flops),
+                     freeze_iters=int(row_iters) - live,
+                     compiles=_compile_count() - compiles0)
     return PathResult(
         lambdas=grid, x=xs, V=V, iters=iters, converged=conv,
         support=support, active_blocks=active_ct, screened=screened,
@@ -261,7 +291,8 @@ def _solve_path(problem: Problem, lambdas=None, *, n_points: int = 20,
               "program_widths": sorted(program_widths),
               "tol_schedule": (None if tol_schedule is None
                                else [float(t) for t in tols]),
-              "wall_s": time.perf_counter() - t0})
+              "wall_s": clock() - t0},
+        ledger=led)
 
 
 def _resolve_tol_schedule(tol_schedule, cfg: SolverConfig,
@@ -395,21 +426,26 @@ def _solve_chunk(problem, fam, cs, c_prev, x_prev, scores_prev, cfg, *,
     row_iters = 0
     device_flops = 0
     program_widths: set[int] = set()
+    round_no = 0
     while True:
         mask_c = np.stack([expand_blocks(active[i], bs)
                            for i in range(B)])
         plan = (make_plan(active.max(axis=0) > 0, bs)
                 if compact else None)
-        if plan is not None and not plan.dense:
-            r, x_hat = _compact_round(probs, fam, plan, x0 * mask_c,
-                                      mask_c, cfg, tau0_pin)
-            n_prog = plan.n_compact
-        else:
-            r = _solve_batched(probs, x0=x0 * mask_c, cfg=cfg,
-                               active=jnp.asarray(mask_c)
-                               if screen else None)
-            x_hat = np.asarray(r.x, np.float32)
-            n_prog = n
+        with obs.span("path.kkt_round", cat="path", round=round_no, B=B):
+            if plan is not None and not plan.dense:
+                obs.instant("path.repack", cat="path",
+                            width=plan.n_compact, round=round_no)
+                r, x_hat = _compact_round(probs, fam, plan, x0 * mask_c,
+                                          mask_c, cfg, tau0_pin)
+                n_prog = plan.n_compact
+            else:
+                r = _solve_batched(probs, x0=x0 * mask_c, cfg=cfg,
+                                   active=jnp.asarray(mask_c)
+                                   if screen else None)
+                x_hat = np.asarray(r.x, np.float32)
+                n_prog = n
+        round_no += 1
         it = np.asarray(r.iters, np.int64)
         total_iters += it
         # The batched while_loop runs every row until the slowest one
@@ -450,7 +486,7 @@ def _solve_path_batched(problems, lambdas=None, *, n_points: int = 20,
                         cfg: SolverConfig | None = None,
                         warm: bool = True, screen: bool = True,
                         kkt_slack: float = DEFAULT_KKT_SLACK,
-                        tol_schedule=None) -> list[PathResult]:
+                        tol_schedule=None, clock=None) -> list[PathResult]:
     """Sweep ONE λ-grid over B same-signature instances in lockstep.
 
     The cross-validation workhorse: each fold is one instance; every grid
@@ -465,6 +501,7 @@ def _solve_path_batched(problems, lambdas=None, *, n_points: int = 20,
     if not problems:
         raise ValueError("need at least one instance")
     cfg = cfg or SolverConfig()
+    clock = clock if clock is not None else time.perf_counter
     family = infer_family(problems[0])
     fam = get_family(family)
     if screen and not fam.screenable:
@@ -489,6 +526,8 @@ def _solve_path_batched(problems, lambdas=None, *, n_points: int = 20,
     active_ct = np.zeros((B, P), np.int64)
     reports: list[list[ScreenReport]] = [[] for _ in range(B)]
     sweep_row_iters = 0
+    sweep_flops = 0
+    m = int(problems[0].data[fam.data_keys[0]].shape[0])
     per_point_rows = np.zeros(P, np.int64)
 
     c_prev = lam_max
@@ -497,7 +536,8 @@ def _solve_path_batched(problems, lambdas=None, *, n_points: int = 20,
         block_scores(fam, _problem_at(problems[i], lam_max), x_prev[i])
         for i in range(B)]) if screen else None)
 
-    t0 = time.perf_counter()
+    t0 = clock()
+    compiles0 = _compile_count()
     for k in range(P):
         ck = float(grid[k])
         cfg_k = _cfg_at_tol(cfg, float(tols[k]))
@@ -524,15 +564,20 @@ def _solve_path_batched(problems, lambdas=None, *, n_points: int = 20,
         total_iters = np.zeros(B, np.int64)
         rounds = np.zeros(B, np.int64)
         violations = np.zeros(B, np.int64)
+        round_no = 0
         while True:
             mask_c = np.stack([expand_blocks(active[i], bs)
                                for i in range(B)])
-            r = _solve_batched(probs_k, x0=x0 * mask_c, cfg=cfg_k,
-                              active=jnp.asarray(mask_c)
-                              if screen else None)
+            with obs.span("path.kkt_round", cat="path", k=k,
+                          round=round_no, B=B):
+                r = _solve_batched(probs_k, x0=x0 * mask_c, cfg=cfg_k,
+                                  active=jnp.asarray(mask_c)
+                                  if screen else None)
+            round_no += 1
             it = np.asarray(r.iters, np.int64)
             total_iters += it
             sweep_row_iters += int(it.max()) * B
+            sweep_flops += int(it.max()) * B * m * n
             per_point_rows[k] += int(it.max()) * B
             x_hat = np.asarray(r.x, np.float32)
             if not screen:
@@ -559,7 +604,17 @@ def _solve_path_batched(problems, lambdas=None, *, n_points: int = 20,
         x_prev = x_hat
         scores_prev = scores
 
-    wall = time.perf_counter() - t0
+    wall = clock() - t0
+    compiles = _compile_count() - compiles0
+    # One sweep-wide ledger (the device work is shared by all folds in
+    # lockstep); each result carries a copy so any single fold can be
+    # inspected standalone without double counting inside one result.
+    sweep_live = int(iters.sum())
+    sweep_led = CostLedger(
+        row_iters=int(sweep_row_iters), live_iters=sweep_live,
+        device_flops=int(sweep_flops),
+        freeze_iters=int(sweep_row_iters) - sweep_live,
+        compiles=compiles)
     results = []
     for i in range(B):
         supp = np.array([
@@ -571,13 +626,15 @@ def _solve_path_batched(problems, lambdas=None, *, n_points: int = 20,
             converged=conv[i], support=supp, active_blocks=active_ct[i],
             screened=reports[i],
             row_iters=int(per_point_rows.sum()),
+            device_flops=int(sweep_flops),
             lam_max=lam_maxes[i],
             meta={"family": family, "warm": warm, "screen": screen,
                   "instances": B, "instance": i,
                   "sweep_row_iters": int(sweep_row_iters),
                   "tol_schedule": (None if tol_schedule is None
                                    else [float(t) for t in tols]),
-                  "wall_s": wall}))
+                  "wall_s": wall},
+            ledger=sweep_led.copy()))
     return results
 
 

@@ -54,6 +54,7 @@ import jax.numpy as jnp
 
 from repro.config.base import ServeConfig, SolverConfig
 from repro.deprecation import warn_legacy
+from repro.obs import trace as obs
 from repro.serve.engine import SolveRequest, SolveResponse, validate_request
 from repro.serve.pathstate import PathRequest, PathState
 from repro.serve.metrics import ServeTelemetry
@@ -193,7 +194,15 @@ class _SlotSlab:
     def _record_chunk(self, wall: float) -> None:
         self.telemetry.record_chunk(live=self.live, capacity=self.capacity,
                                     chunk_iters=self.chunk_iters,
-                                    wall_s=wall)
+                                    wall_s=wall,
+                                    flops=self._chunk_flops(self.capacity))
+
+    def _chunk_flops(self, capacity: int) -> int:
+        """Matvec currency of one chunk dispatch: every slot (live or
+        padding) advances ``chunk_iters`` rows at the slab's dense
+        program width — the same ``row × m × n`` pricing as
+        ``PathResult.device_flops``."""
+        return self.chunk_iters * capacity * self.spec.m * self.spec.n
 
     def _migration_allowed(self) -> bool:
         """Drain-tail capacity migration opt-in.  The mesh slab
@@ -241,6 +250,9 @@ class _SlotSlab:
         self._alloc_staging()
         self.telemetry.record_migration(from_capacity=old,
                                         to_capacity=self.capacity)
+        obs.instant("serve.migrate", cat="continuous", tick=tick,
+                    from_capacity=old, to_capacity=self.capacity,
+                    live=len(live_slots))
 
     def _maybe_shrink(self, tick: int) -> None:
         """Shrink to the live-count capacity bucket at the drain tail:
@@ -296,6 +308,8 @@ class _SlotSlab:
         self.active[slot] = True
         self.slot_req[slot] = entry.req_id
         self.telemetry.record_admit(entry.req_id)
+        obs.instant("serve.admit", cat="continuous", tick=tick,
+                    req_id=entry.req_id, slot=slot)
         rec = {"req_id": entry.req_id, "slot": slot,
                "signature": repr(self.spec), "admit_tick": tick,
                "evict_tick": None}
@@ -357,13 +371,28 @@ class _SlotSlab:
         else:
             admit = self._no_admit
         new_data, new_c, new_x0, new_ids, new_active = self._payload
-        self.slab, stop_dev = self._chunk(
-            self.slab, jnp.asarray(self.stop.copy()), admit,
-            new_data, new_c, new_x0, new_ids, new_active)
-        # The one per-chunk host sync (copy: the host mirror is mutated).
-        stop = np.array(stop_dev)
+        with obs.span("serve.chunk", cat="continuous", tick=tick,
+                      live=self.live, capacity=self.capacity,
+                      chunk_iters=self.chunk_iters):
+            self.slab, stop_dev = self._chunk(
+                self.slab, jnp.asarray(self.stop.copy()), admit,
+                new_data, new_c, new_x0, new_ids, new_active)
+            # The one per-chunk host sync (copy: host mirror is mutated).
+            stop = np.array(stop_dev)
         wall = time.perf_counter() - t0
         self._record_chunk(wall)
+
+        if self.telemetry.sample_progress:
+            # Opt-in residual sampling for dashboard sparklines — one
+            # extra (S,) readback pair per tick, gated so the default
+            # run never pays it.
+            state = self.slab.state
+            ks_all = np.asarray(state.k)
+            stats_all = np.asarray(state.stat)
+            for slot in np.flatnonzero(self.active):
+                self.telemetry.record_progress(
+                    int(self.slot_req[slot]), iters=int(ks_all[slot]),
+                    stat=float(stats_all[slot]))
 
         finished = np.flatnonzero(stop & self.active)
         out = []
@@ -384,6 +413,9 @@ class _SlotSlab:
                 out.append((req_id, resp))
                 self.telemetry.record_completion(
                     req_id, iters=resp.iters, converged=resp.converged)
+                obs.instant("serve.evict", cat="continuous", tick=tick,
+                            req_id=req_id, slot=int(slot),
+                            iters=resp.iters, converged=resp.converged)
                 self._open_audit.pop(req_id)["evict_tick"] = tick
                 self.active[slot] = False
                 self.slot_req[slot] = -1
@@ -451,6 +483,12 @@ class ContinuousSolverEngine:
     def pending(self) -> int:
         """Requests submitted but not yet completed."""
         return sum(s.pending for s in self._slabs.values())
+
+    @property
+    def queued(self) -> int:
+        """Requests waiting in admission queues (not yet in a slot) —
+        the dashboard's queue-depth signal."""
+        return sum(len(s.queue) for s in self._slabs.values())
 
     def submit(self, request: SolveRequest, *,
                arrival: float | None = None) -> int:
@@ -539,11 +577,14 @@ class ContinuousSolverEngine:
             order = slabs[start:] + slabs[:start]
             serviced = order[:per_tick]
             self._rr = (start + per_tick) % len(slabs)
-            for slab in serviced:
-                slab.backfill(self.audit, self._tick)
-                for req_id, resp in slab.step(self._tick):
-                    self._responses[req_id] = resp
-                    done.append(req_id)
+            with obs.span("serve.tick", cat="continuous",
+                          tick=self._tick, slabs=len(serviced),
+                          queued=self.queued):
+                for slab in serviced:
+                    slab.backfill(self.audit, self._tick)
+                    for req_id, resp in slab.step(self._tick):
+                        self._responses[req_id] = resp
+                        done.append(req_id)
         # Path advancement happens after the slab sweep: it may submit
         # follow-up requests (possibly creating new slabs), which must
         # not mutate the dict mid-iteration.

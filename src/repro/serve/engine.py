@@ -41,6 +41,7 @@ from repro.config.base import (ModelConfig, ServeConfig, ShapeConfig,
                                SolverConfig)
 from repro.deprecation import warn_legacy
 from repro.models import io as IO
+from repro.obs import trace as obs_trace
 from repro.models import transformer as T
 from repro.problems.families import get_family
 from repro.serve.metrics import ServeTelemetry
@@ -369,8 +370,11 @@ class SolverServeEngine:
                 for i in chunk:
                     tele.record_admit(req_ids[i])
                 t0 = time.perf_counter()
-                final, converged = run(data, c, x0, active)
-                xs = np.asarray(final.x)         # device sync: wave is done
+                with obs_trace.span("serve.wave", cat="wave", bucket=B,
+                                    n_real=len(chunk), padded=pad,
+                                    family=spec.family):
+                    final, converged = run(data, c, x0, active)
+                    xs = np.asarray(final.x)     # device sync: wave is done
                 wall = time.perf_counter() - t0
                 ks = np.asarray(final.k)
                 stats_ = np.asarray(final.stat)
@@ -383,7 +387,9 @@ class SolverServeEngine:
                                            converged=bool(conv[j]))
                 tele.record_wave(bucket=B, n_real=len(chunk),
                                  iters=ks[:len(chunk)], wall_s=wall,
-                                 device_iters_max=int(ks.max()))
+                                 device_iters_max=int(ks.max()),
+                                 flops=(B * int(ks.max())
+                                        * spec.m * spec.n))
 
                 self.stats["requests"] += len(chunk)
                 self.stats["batches"] += 1

@@ -56,6 +56,7 @@ import numpy as np
 import jax
 
 from repro.config.base import ServeConfig, SolverConfig
+from repro.obs import trace as obs
 from repro.serve.continuous import (AdmissionQueue, ContinuousSolverEngine,
                                     QueueEntry, _SlotSlab)
 from repro.serve.metrics import MeshTelemetry
@@ -146,7 +147,8 @@ class _MeshSlab(_SlotSlab):
             self.telemetry.device(d).record_chunk(
                 live=self._live_on(d), capacity=per,
                 chunk_iters=self.chunk_iters,
-                wall_s=wall / self.n_devices)
+                wall_s=wall / self.n_devices,
+                flops=self._chunk_flops(per))
 
     def _migration_allowed(self) -> bool:
         # Slot s lives on device s // per_device_capacity: the slot
@@ -199,6 +201,8 @@ class _MeshSlab(_SlotSlab):
             self.dev_queues[d].push(entry)
             loads[d] += 1
             self.telemetry.record_route()
+            obs.instant("mesh.route", cat="mesh", tick=tick,
+                        req_id=entry.req_id, device=d)
 
         # 2. per-device backfill
         for d in range(self.n_devices):
@@ -241,6 +245,8 @@ class _MeshSlab(_SlotSlab):
                     "victim_queue_len_before": qlens[victim],
                 })
                 self.telemetry.record_steal()
+                obs.instant("mesh.steal", cat="mesh", tick=tick,
+                            req_id=entry.req_id, victim=victim, thief=d)
             if not progressed:
                 break
 

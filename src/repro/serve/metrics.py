@@ -33,6 +33,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.obs.ledger import CostLedger
 from repro.solvers.cache import cache_stats
 
 
@@ -54,6 +55,7 @@ class RequestTrace:
     iters: int = 0
     converged: bool = False
     engine: str = ""                # "wave" | "continuous"
+    samples: list = field(default_factory=list)  # (t, iters, stat) triples
 
     @property
     def queue_wait(self) -> float | None:
@@ -66,6 +68,17 @@ class RequestTrace:
         if self.completed is None:
             return None
         return self.completed - self.arrival
+
+    def as_dict(self) -> dict:
+        """Plain-dict view for dashboards / ticket diagnostics."""
+        return {
+            "req_id": self.req_id, "family": self.family,
+            "engine": self.engine, "arrival": self.arrival,
+            "admitted": self.admitted, "completed": self.completed,
+            "queue_wait": self.queue_wait, "latency": self.latency,
+            "iters": self.iters, "converged": self.converged,
+            "samples": list(self.samples),
+        }
 
 
 def _chunk_summary(t: "ServeTelemetry") -> dict:
@@ -83,6 +96,7 @@ def _chunk_summary(t: "ServeTelemetry") -> dict:
         "chunk_iters": t.chunk_iters,
         "row_iters": row,
         "live_iters": t.chunk_live_iters,
+        "device_flops": t.chunk_flops,
         "occupancy_mean": t.chunk_live_iters / row if row else 0.0,
         "padding_waste": ((row - t.chunk_live_iters) / row
                           if row else 0.0),
@@ -104,10 +118,14 @@ class ServeTelemetry:
     chunk_iters: int = 0            # Σ K over chunks (per-slot iterations)
     chunk_row_iters: int = 0        # Σ K·capacity (device row iterations)
     chunk_live_iters: int = 0       # Σ K·live     (useful row iterations)
+    chunk_flops: int = 0            # Σ K·capacity·m·n (matvec currency)
     chunk_wall: float = 0.0
     migrations: int = 0             # drain-tail slab capacity changes
     # wave-engine per-bucket records
     waves: list = field(default_factory=list)
+    # opt-in per-chunk residual sampling (dashboard sparklines); off by
+    # default so no extra device readback happens unless requested
+    sample_progress: bool = False
 
     def now(self) -> float:
         return float(self.clock())
@@ -141,15 +159,30 @@ class ServeTelemetry:
         r.iters = int(iters)
         r.converged = bool(converged)
 
+    def record_progress(self, req_id: int, *, iters: int, stat: float,
+                        t: float | None = None) -> None:
+        """One sampled (time, iters, residual-stat) point for a request.
+
+        No-op unless :attr:`sample_progress` is on — engines gate the
+        device readback on the same flag, so the default run does not
+        pay for sampling it never records."""
+        if not self.sample_progress:
+            return
+        r = self.requests.get(req_id)
+        if r is not None:
+            r.samples.append((self.now() if t is None else t,
+                              int(iters), float(stat)))
+
     # ------------------------------------------------------------- #
     # engine-side counters
     # ------------------------------------------------------------- #
     def record_chunk(self, *, live: int, capacity: int, chunk_iters: int,
-                     wall_s: float) -> None:
+                     wall_s: float, flops: int = 0) -> None:
         self.chunks += 1
         self.chunk_iters += chunk_iters
         self.chunk_row_iters += chunk_iters * capacity
         self.chunk_live_iters += chunk_iters * live
+        self.chunk_flops += int(flops)
         self.chunk_wall += wall_s
 
     def record_migration(self, *, from_capacity: int,
@@ -159,8 +192,8 @@ class ServeTelemetry:
         self.migrations += 1
 
     def record_wave(self, *, bucket: int, n_real: int, iters,
-                    wall_s: float, device_iters_max: int | None = None
-                    ) -> None:
+                    wall_s: float, device_iters_max: int | None = None,
+                    flops: int = 0) -> None:
         """One wave bucket: ``iters`` are the per-row iteration counts of
         the *real* requests; ``device_iters_max`` the max over ALL rows
         including padding clones (under randomized selection a clone's
@@ -181,6 +214,7 @@ class ServeTelemetry:
                               if row_iters else 0.0),
             "freeze_waste": ((n_real * iters_max - useful) / row_iters
                              if row_iters else 0.0),
+            "flops": int(flops),
             "wall_s": wall_s,
         })
 
@@ -190,6 +224,33 @@ class ServeTelemetry:
     def latencies(self) -> list:
         return [r.latency for r in self.requests.values()
                 if r.latency is not None]
+
+    def ledger(self) -> CostLedger:
+        """Unified :class:`~repro.obs.ledger.CostLedger` over everything
+        this telemetry recorded.
+
+        Continuous chunks cannot split freeze from padding (a slot that
+        converges mid-chunk stays frozen inside the fused dispatch), so
+        their whole ``row - live`` remainder lands in ``padding_iters``;
+        waves attribute both exactly.  ``compiles`` counts the
+        process-wide compile-cache misses (``cache_stats``) — the same
+        source the snapshot's ``compile_cache`` section reports."""
+        led = CostLedger()
+        led.add(row_iters=self.chunk_row_iters,
+                live_iters=self.chunk_live_iters,
+                padding_iters=self.chunk_row_iters - self.chunk_live_iters,
+                device_flops=self.chunk_flops)
+        for w in self.waves:
+            pad = w["padded"] * w["iters_max"]
+            led.add(row_iters=w["row_iters"],
+                    live_iters=w["useful_row_iters"],
+                    padding_iters=pad,
+                    freeze_iters=(w["row_iters"] - w["useful_row_iters"]
+                                  - pad),
+                    device_flops=w.get("flops", 0))
+        led.add(compiles=sum(c["misses"]
+                             for c in cache_stats().values()))
+        return led
 
     def snapshot(self) -> dict:
         """Everything a dashboard (or ``BENCH_serve.json``) wants."""
@@ -201,6 +262,7 @@ class ServeTelemetry:
         out = {
             "requests": len(self.requests),
             "completed": len(completed),
+            "in_flight": len(self.requests) - len(completed),
             "converged": sum(r.converged for r in completed),
             "iters_total": sum(r.iters for r in completed),
             "latency_p50": percentile(lats, 50),
@@ -209,6 +271,7 @@ class ServeTelemetry:
             "latency_max": (float(np.max(lats)) if lats else None),
             "queue_wait_p50": percentile(waits, 50),
             "queue_wait_p99": percentile(waits, 99),
+            "ledger": self.ledger().as_dict(),
             "compile_cache": cache_stats(),
         }
         if self.chunks:
@@ -220,6 +283,7 @@ class ServeTelemetry:
             out["wave"] = {
                 "waves": len(self.waves),
                 "row_iters": row,
+                "device_flops": sum(w.get("flops", 0) for w in self.waves),
                 "occupancy_mean": (float(np.mean(
                     [w["occupancy"] for w in self.waves]))),
                 "padding_waste": pad / row if row else 0.0,
@@ -289,7 +353,12 @@ class MeshTelemetry(ServeTelemetry):
                                    for t in self.per_device)
         self.chunk_live_iters = sum(t.chunk_live_iters
                                     for t in self.per_device)
+        self.chunk_flops = sum(t.chunk_flops for t in self.per_device)
         self.chunk_wall = sum(t.chunk_wall for t in self.per_device)
+
+    def ledger(self) -> CostLedger:
+        self.rollup()
+        return super().ledger()
 
     def snapshot(self) -> dict:
         self.rollup()

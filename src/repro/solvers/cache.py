@@ -29,6 +29,8 @@ import os
 from collections import OrderedDict
 from typing import Callable
 
+from repro.obs import trace as obs
+
 #: Environment knob bounding every compile cache (int; empty/absent ⇒ the
 #: per-cache default given at construction).
 ENV_CACHE_SIZE = "REPRO_COMPILE_CACHE_SIZE"
@@ -67,10 +69,14 @@ class CompileCache:
     def __call__(self, *key):
         if key in self._store:
             self.hits += 1
+            obs.instant("compile.hit", cat="cache", cache=self.name)
             self._store.move_to_end(key)
             return self._store[key]
         self.misses += 1
-        value = self.builder(*key)
+        # A span, not an instant: the builder is the trace/compile step
+        # — its duration is exactly the compile cost worth seeing.
+        with obs.span("compile.miss", cat="cache", cache=self.name):
+            value = self.builder(*key)
         self._store[key] = value
         limit = self.maxsize()
         while len(self._store) > limit:

@@ -54,10 +54,16 @@ SURFACE = {
         "ClientConfig", "ClientError", "ContinuousBackend",
         "FlexaClient", "InlineBackend", "MeshBackend", "PathResult",
         "PathSpec",
-        "SoloResult", "SoloSpec", "SpecError", "UnknownBackendError",
+        "SoloResult", "SoloSpec", "SpecError", "TicketDiagnostics",
+        "UnknownBackendError",
         "UnsupportedWorkloadError", "WaveBackend", "WorkItem",
         "available_backends", "make_backend", "normalize",
         "register_backend", "solve_request_of",
+    ],
+    "repro.obs": [
+        "CostLedger", "LEDGER_KEYS", "Span", "Tracer", "get_tracer",
+        "instant", "render_requests", "render_snapshot", "set_tracer",
+        "span", "sparkline", "tracing",
     ],
 }
 

@@ -125,7 +125,7 @@ def test_steal_victim_contract(qlens, thief, threshold):
 # Telemetry rollup conservation (pure)                               #
 # ------------------------------------------------------------------ #
 ADDITIVE_KEYS = ("chunks", "chunk_iters", "row_iters", "live_iters",
-                 "chunk_wall_s")
+                 "chunk_wall_s", "device_flops")
 
 
 def _conservation_holds(snap):
@@ -144,10 +144,12 @@ def test_mesh_telemetry_rollup_is_sum_of_parts(seed):
     for _ in range(int(rng.integers(1, 30))):
         d = int(rng.integers(n_dev))
         cap = int(rng.integers(1, 6))
+        K = int(rng.integers(1, 64))
         tele.device(d).record_chunk(
             live=int(rng.integers(0, cap + 1)), capacity=cap,
-            chunk_iters=int(rng.integers(1, 64)),
-            wall_s=float(rng.uniform(0.0, 1e-2)))
+            chunk_iters=K,
+            wall_s=float(rng.uniform(0.0, 1e-2)),
+            flops=K * cap * 24 * 64)
         if rng.uniform() < 0.3:
             tele.record_steal()
         tele.record_route(int(rng.integers(0, 3)))
@@ -155,6 +157,11 @@ def test_mesh_telemetry_rollup_is_sum_of_parts(seed):
     assert snap["mesh"]["devices"] == n_dev
     assert len(snap["mesh"]["per_device"]) == n_dev
     assert _conservation_holds(snap)
+    # the unified ledger rolls up conserved (row = live + padding +
+    # freeze) and prices exactly the rolled-up flops
+    led = tele.ledger()
+    assert led.conserved()
+    assert led.device_flops == snap["continuous"]["device_flops"]
     # the derived ratios stay ratios
     assert 0.0 <= snap["continuous"]["occupancy_mean"] <= 1.0
     assert 0.0 <= snap["continuous"]["padding_waste"] <= 1.0
