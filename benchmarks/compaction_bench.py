@@ -49,6 +49,7 @@ import numpy as np
 
 from repro.client import FlexaClient, PathSpec
 from repro.config.base import ServeConfig, SolverConfig
+from repro.obs.health import bitwise_equal
 from repro.problems.lasso import nesterov_instance
 
 RESULTS = Path(__file__).resolve().parent.parent / "results" / "bench"
@@ -83,9 +84,11 @@ def run_compaction_columns(m: int, n: int, nnz: float, seed: int,
     t0 = time.perf_counter()
     comp = client.run(PathSpec(problem=p, compact=True, **kw))
     comp_wall = time.perf_counter() - t0
-    # bitwise determinism across bucket transitions: replay
+    # bitwise determinism across bucket transitions: replay (NaN-safe
+    # byte compare — array_equal would misjudge diverged entries)
     comp2 = client.run(PathSpec(problem=p, compact=True, **kw))
-    bitwise = bool(np.array_equal(comp.x, comp2.x)
+    bitwise = bool(bitwise_equal(np.asarray(comp.x),
+                                 np.asarray(comp2.x))
                    and comp.device_flops == comp2.device_flops)
 
     dev = np.max(np.abs(comp.x - dense.x), axis=1)

@@ -20,10 +20,13 @@ is aggregated into the CSV: ``BENCH_solvers.json`` (written by
 the ``batched`` amortization record), ``BENCH_serve.json``
 (``serve_load.main`` — arrival-trace scheduling races),
 ``BENCH_path.json`` (``path_bench.main`` — regularization-path columns +
-the CV-over-serve scenario) and ``BENCH_compaction.json``
+the CV-over-serve scenario), ``BENCH_compaction.json``
 (``compaction_bench.main`` — masked-dense vs capacity-bucketed compacted
-execution).  ``--skip-serve`` / ``--skip-path`` / ``--skip-lm`` drop the
-slower sections.
+execution) and ``BENCH_health.json`` (``health_smoke.main`` —
+numerical-health watchdog fault-injection gates).  ``--skip-serve`` /
+``--skip-path`` / ``--skip-lm`` drop the slower sections.  ``--gate``
+additionally appends the run's key metrics to the persistent perf
+history (``results/bench/history.jsonl``, see ``repro.obs.history``).
 """
 from __future__ import annotations
 
@@ -166,11 +169,33 @@ def main() -> None:
                   f"migrations={sd['migrations']} "
                   f"max_dev={sd['max_dev']:.1e}")
 
+    # Numerical-health watchdog fault-injection gates (writes
+    # BENCH_health.json; always seconds-scale and fully deterministic).
+    from benchmarks import health_smoke
+    art = health_smoke.main()
+    failures += [f"health:{k}" for k in art["gate"]
+                 if not art["acceptance"][k]]
+    print(f"health/nan,0,status={art['nan']['status']} "
+          f"tick={art['nan']['quarantine_tick']}")
+    print(f"health/stall,0,tick={art['stall']['quarantine_tick']} "
+          f"patience={art['stall_patience']}")
+
     if not args.skip_lm:
         from benchmarks import lm_step
         for r in lm_step.main():
             print(f"lm_step/{r['arch']},{r['train_us']},"
                   f"decode_us={r['decode_us']}")
+
+    if args.gate:
+        # Persist this gated run's key metrics to the perf history
+        # (append even on failure — regressions should be visible in
+        # the record stream, not erased by the gate).
+        from repro.obs import history as obs_history
+        bench_dir = Path(__file__).resolve().parent.parent / "results" / "bench"
+        record = obs_history.collect(bench_dir, smoke=args.smoke)
+        obs_history.append(record, bench_dir / "history.jsonl")
+        print(f"history,0,appended {len(record['metrics'])} metrics "
+              f"sha={record['git_sha'][:12]}")
 
     if args.gate and failures:
         raise SystemExit(f"acceptance failed: {failures}")

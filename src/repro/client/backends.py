@@ -91,7 +91,8 @@ def _solo_result(resp, backend: str, problem=None) -> SoloResult:
     return SoloResult(x=np.asarray(resp.x), iters=int(resp.iters),
                       converged=bool(resp.converged),
                       stat=float(resp.stat), backend=backend, raw=resp,
-                      ledger=led)
+                      ledger=led,
+                      status=str(getattr(resp, "status", "ok")))
 
 
 def _batch_result(resps, backend: str, problems=None) -> BatchResult:
@@ -102,7 +103,8 @@ def _batch_result(resps, backend: str, problems=None) -> BatchResult:
         iters=np.asarray([int(r.iters) for r in resps], np.int64),
         converged=np.asarray([bool(r.converged) for r in resps], bool),
         stat=np.asarray([float(r.stat) for r in resps]),
-        backend=backend, raw=list(resps), ledger=led)
+        backend=backend, raw=list(resps), ledger=led,
+        status=[str(getattr(r, "status", "ok")) for r in resps])
 
 
 def _path_result_from_serve(problem, d: dict, backend: str) -> PathResult:
@@ -364,9 +366,57 @@ class InlineBackend(Backend):
 
     name = "inline"
 
+    def __init__(self, config, telemetry):
+        super().__init__(config, telemetry)
+        self._ticket_rids: dict[int, list[int]] = {}
+
+    def _begin_requests(self, item: WorkItem, arrival) -> list[int]:
+        """Synthesize the request lifecycle the serve engines record
+        natively, so ``FlexaClient.diagnostics()`` has per-request
+        traces on this backend too.  Inline admits instantly: arrival
+        and admit share one timestamp (one per-problem request; a path
+        ticket is one request — its per-λ fan-out is an engine-side
+        notion)."""
+        tele = self.telemetry
+        n = 1 if item.kind in ("solo", "path") else len(item.problems)
+        family = item.family or "adhoc"
+        rids = []
+        for _ in range(n):
+            rid = tele.next_request_id()
+            t = tele.now() if arrival is None else arrival
+            tele.record_arrival(rid, family, self.name, t=t)
+            tele.record_admit(rid, t=t)
+            rids.append(rid)
+        self._ticket_rids[item.ticket] = rids
+        return rids
+
+    def _finish_requests(self, item: WorkItem, rids: list[int]) -> None:
+        res = self._results[item.ticket]
+        if item.kind == "solo":
+            stats = [(int(res.iters),
+                      bool(np.asarray(res.converged).all()))]
+        elif item.kind == "batch":
+            stats = [(int(i), bool(c))
+                     for i, c in zip(np.ravel(res.iters),
+                                     np.ravel(res.converged))]
+        elif item.kind == "path":
+            stats = [(int(np.asarray(res.iters).sum()),
+                      bool(np.asarray(res.converged).all()))]
+        else:                                   # cv: one trace per fold
+            stats = [(int(np.asarray(f.iters).sum()),
+                      bool(np.asarray(f.converged).all()))
+                     for f in res.folds]
+        for rid, (iters, conv) in zip(rids, stats):
+            self.telemetry.record_completion(rid, iters=iters,
+                                             converged=conv)
+
+    def request_ids(self, ticket: int) -> list[int]:
+        return list(self._ticket_rids.get(ticket, []))
+
     def submit(self, item: WorkItem, arrival=None) -> list[int]:
         cfg = self.config.solver
         spec = item.spec
+        rids = self._begin_requests(item, arrival)
         if item.kind == "solo":
             from repro.solvers.api import _solve
             r = _solve(spec.problem, method=spec.method, cfg=cfg,
@@ -401,6 +451,7 @@ class InlineBackend(Backend):
                 clock=self.telemetry.clock)
         elif item.kind == "cv":
             self._results[item.ticket] = self._run_cv(item, cfg)
+        self._finish_requests(item, rids)
         return [item.ticket]
 
     @staticmethod
@@ -495,6 +546,10 @@ class WaveBackend(Backend):
         self._engines: dict[SolverConfig, object] = {}
         self._queue: list[tuple[WorkItem, object]] = []
         self._jobs: dict[int, _PathJob] = {}
+        self._ticket_rids: dict[int, list[int]] = {}
+
+    def request_ids(self, ticket: int) -> list[int]:
+        return list(self._ticket_rids.get(ticket, []))
 
     def _engine(self, cfg: SolverConfig):
         eng = self._engines.get(cfg)
@@ -571,8 +626,15 @@ class WaveBackend(Backend):
             reqs = [e[0] for e in entries]
             now = self.telemetry.now()
             arrivals = [now if e[1] is None else e[1] for e in entries]
-            resps = self._engine(cfg).submit(reqs, arrivals=arrivals)
-            for (req, _, route), resp in zip(entries, resps):
+            eng = self._engine(cfg)
+            resps = eng.submit(reqs, arrivals=arrivals)
+            rids = getattr(eng, "last_request_ids", [None] * len(resps))
+            for (req, _, route), resp, rid in zip(entries, resps, rids):
+                if rid is not None:
+                    _, obj, _ = route
+                    tkt = (obj.ticket if route[0] != "path"
+                           else obj.item.ticket)
+                    self._ticket_rids.setdefault(tkt, []).append(int(rid))
                 kind = route[0]
                 if kind == "solo":
                     _, item, _ = route

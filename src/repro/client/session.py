@@ -163,8 +163,8 @@ class FlexaClient:
         request it spawned, as :meth:`RequestTrace.as_dict` dicts (with
         residual-trajectory ``samples`` when
         ``telemetry.sample_progress`` is on) — the dashboard's
-        convergence-sparkline feed.  Backends that keep no per-ticket
-        request mapping (inline, wave) report an empty request list.
+        convergence-sparkline feed.  All backends (serve, wave, inline)
+        keep the ticket → request-id mapping.
         """
         if ticket not in self._items:
             raise KeyError(f"unknown ticket {ticket!r}")

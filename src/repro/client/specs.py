@@ -134,6 +134,7 @@ class SoloResult:
     backend: str
     raw: object = None              # SolverResult (inline) / SolveResponse
     ledger: CostLedger | None = None    # unified per-request accounting
+    status: str = "ok"              # "ok" | "diverged" | "stalled"
 
     @property
     def history(self):
@@ -152,6 +153,7 @@ class BatchResult:
     backend: str
     raw: object = None              # SolverResult (inline) / responses
     ledger: CostLedger | None = None    # unified batch-wide accounting
+    status: list | None = None      # per-instance "ok"/"diverged"/"stalled"
 
     def __len__(self) -> int:
         return int(self.x.shape[0])
@@ -180,9 +182,9 @@ class TicketDiagnostics:
     ``requests`` holds one :meth:`RequestTrace.as_dict` per engine
     request the ticket spawned (solo/batch requests, every λ-point of a
     path, CV winner re-solves); the ``samples`` lists inside are
-    populated when ``telemetry.sample_progress`` is on.  Backends that
-    keep no per-ticket request mapping (wave, inline) report an empty
-    list — their aggregate view lives in ``client.stats()``.
+    populated when ``telemetry.sample_progress`` is on.  Every backend
+    (serve, wave, inline) keeps the ticket → request-id mapping, so the
+    feed is populated regardless of execution mode.
     """
     ticket: int
     kind: str

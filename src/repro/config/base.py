@@ -294,6 +294,21 @@ class ServeConfig:
     # run to solver tolerance (≤1e-5), not bitwise.  Continuous engine
     # only (mesh slabs keep their per-device geometry).
     compact_drain: bool = False
+    # Numerical-health watchdog (repro.obs.health): the chunk stepper
+    # additionally computes per-slot health verdicts (non-finite x/stat,
+    # stationarity stall) on device and the engines quarantine unhealthy
+    # slots — evicted with status="diverged"/"stalled" instead of
+    # spinning to max_iters.  Off by default: the stepper then builds
+    # the exact pre-watchdog program (bitwise-identical by
+    # construction).  With the watchdog on, healthy workloads still
+    # replay bitwise-identically — health flags read the iteration
+    # outputs but never feed back into the iteration math.
+    watchdog: bool = False
+    # Stall patience H: quarantine a slot once its termination stat
+    # ‖x̂(x)−x‖∞ has failed to decrease for H consecutive chunks.
+    # Quarantine lands within H+1 chunks of admission (the first chunk
+    # after admission always counts as a decrease from +inf).
+    stall_patience: int = 10
 
 
 @dataclass(frozen=True)

@@ -36,6 +36,7 @@ class SolverResult:
     state: Any = None
     method: str = ""
     meta: dict = field(default_factory=dict)
+    status: str = "ok"              # "ok" | "diverged" | "stalled" (watchdog)
 
     def rel_error(self, v_star: float) -> float:
         """Relative objective error vs a known optimum (benchmark metric)."""

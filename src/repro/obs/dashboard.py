@@ -14,10 +14,12 @@ tick — the same loop a remote-service monitor would run against
 periodic snapshot polls.
 
 Sections rendered (each skipped when its source keys are absent):
-queue depth + slab occupancy, request/latency percentiles, the unified
-cost ledger, the per-device mesh rollup, compile-cache counters, and
-per-request convergence sparklines from sampled residual trajectories
-(see ``ServeTelemetry.sample_progress`` and
+queue depth + slab occupancy, request/latency percentiles, watchdog
+health counters (quarantined/diverged/stalled), sliding-window SLO
+panels (per-window count/rate/p50/p99, see ``ServeTelemetry.window_s``),
+the unified cost ledger, the per-device mesh rollup, compile-cache
+counters, and per-request convergence sparklines from sampled residual
+trajectories (see ``ServeTelemetry.sample_progress`` and
 ``FlexaClient.diagnostics``).
 """
 from __future__ import annotations
@@ -83,6 +85,29 @@ def render_snapshot(snap: dict, *, queue_depth=None, title: str = "repro.obs",
         f"  mean {_fmt(snap.get('latency_mean'))}"
         f"   queue-wait p50 {_fmt(snap.get('queue_wait_p50'))}"
         f"  p99 {_fmt(snap.get('queue_wait_p99'))}")
+
+    health = snap.get("health")
+    if health:
+        lines.append(rule)
+        lines.append(
+            f"health    quarantined {health.get('quarantined', 0)}   "
+            f"diverged {health.get('diverged', 0)}   "
+            f"stalled {health.get('stalled', 0)}")
+
+    win = snap.get("windows")
+    if win:
+        lines.append(rule)
+        lines.append(f"windows   horizon {_fmt(win.get('window_s'))}s  "
+                     "(rate = events/s over window)")
+        for name in sorted(win):
+            if name == "window_s":
+                continue
+            w = win[name]
+            lines.append(
+                f"  {name:<13} n {w.get('count', 0):>5}  "
+                f"rate {_fmt(w.get('rate'))}  "
+                f"p50 {_fmt(w.get('p50'))}  p99 {_fmt(w.get('p99'))}  "
+                f"max {_fmt(w.get('max'))}")
 
     led = snap.get("ledger")
     if led:

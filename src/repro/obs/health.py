@@ -1,0 +1,170 @@
+"""Numerical-health watchdog contract + NaN-safe comparison helpers.
+
+The FLEXA iteration is not unconditionally safe: shrink-only τ
+adaptation can diverge to NaNs (measured in the PR 4 bench), and the
+nonconvex extensions of arXiv:1402.5521 make divergence a routine event
+rather than a bug.  Without a watchdog an unhealthy slot silently burns
+slab capacity until ``max_iters``.  This module defines the *contract*
+for the device-side watchdog that the batched chunk stepper
+(``repro.solvers.batched._chunk_core``) implements:
+
+* per-slot **non-finite detection** — ``isfinite`` reductions over the
+  iterate ``x`` and the termination stat ``‖x̂(x)−x‖∞`` at every chunk
+  boundary;
+* per-slot **stall detection** — a counter that increments each chunk
+  the stat fails to decrease and quarantines after
+  ``HealthConfig.stall_window`` consecutive non-decreasing chunks;
+* a fused per-slot verdict that rides the existing one-per-tick ``(S,)``
+  readback (the boolean stop mask widens to an int32 status vector —
+  still exactly one device→host transfer per tick).
+
+Determinism contract (gated in ``BENCH_obs.json``):
+
+* watchdog **off** (``HealthConfig.of(serve) is None``) — the chunk
+  stepper builds the exact pre-watchdog program; bitwise-identical by
+  construction;
+* watchdog **on** — the health computation reads iteration outputs but
+  never feeds back into the iteration math, so a healthy workload
+  replays bitwise-identically; only unhealthy slots change behaviour
+  (early quarantine instead of spinning to ``max_iters``).
+
+Everything here is host-side and numpy-only so the module can be
+imported from the solver layer without cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "STATUS_RUNNING", "STATUS_STOPPED", "STATUS_DIVERGED",
+    "STATUS_STALLED", "STATUS_LABELS", "HealthConfig", "SolveFailure",
+    "allclose_or_both_nonfinite", "assert_finite_close", "bitwise_equal",
+]
+
+#: Per-slot chunk verdict codes returned by the watchdog-enabled chunk
+#: stepper.  RUNNING/STOPPED mirror the legacy boolean stop mask;
+#: DIVERGED/STALLED are the quarantine verdicts.
+STATUS_RUNNING = 0
+STATUS_STOPPED = 1
+STATUS_DIVERGED = 2
+STATUS_STALLED = 3
+
+#: Quarantine verdict code → the ``status`` string carried on
+#: ``SolveResponse`` / ``SolverResult`` / request traces.  Codes not in
+#: this map are healthy completions (``status="ok"``).
+STATUS_LABELS = {STATUS_DIVERGED: "diverged", STATUS_STALLED: "stalled"}
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Watchdog knobs, hashable so they key the chunk-stepper compile
+    cache alongside ``SolverConfig``/problem spec."""
+
+    #: Stall patience H: a slot is quarantined as ``"stalled"`` once its
+    #: termination stat has failed to decrease for H consecutive chunks.
+    #: The first chunk after admission always counts as a decrease
+    #: (previous stat is +inf), so quarantine lands within H+1 chunks of
+    #: admission even for a solve that never improves at all.
+    stall_window: int = 10
+
+    @classmethod
+    def of(cls, serve) -> "HealthConfig | None":
+        """Build from a ``ServeConfig``; ``None`` when the watchdog is
+        disabled (⇒ the byte-identical legacy chunk program)."""
+        if not getattr(serve, "watchdog", False):
+            return None
+        return cls(stall_window=int(serve.stall_patience))
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveFailure:
+    """Typed quarantine outcome for one request.
+
+    Collected on the serve engines (``ContinuousSolverEngine.failures``)
+    when the watchdog evicts an unhealthy slot; the same verdict string
+    travels on ``SolveResponse.status`` → client results and request
+    traces (``FlexaClient.diagnostics()``).
+    """
+
+    req_id: int
+    status: str                 # "diverged" | "stalled"
+    iters: int                  # iterations burned before quarantine
+    stat: float                 # final ‖x̂(x)−x‖∞ (NaN when diverged)
+    tick: int | None = None     # engine tick of the quarantine eviction
+
+
+def bitwise_equal(a, b) -> bool:
+    """True iff two arrays are byte-identical (dtype, shape and every
+    bit of every element — NaN payloads included).
+
+    The identity gates in the obs bench need *bit* equality, and
+    ``np.array_equal`` fails on bit-identical arrays containing NaNs
+    (NaN != NaN).  Comparing the raw buffers sidesteps that.
+    """
+    a = np.asarray(a)
+    b = np.asarray(b)
+    return (a.dtype == b.dtype and a.shape == b.shape
+            and a.tobytes() == b.tobytes())
+
+
+def allclose_or_both_nonfinite(a, b, rtol: float = 1e-5,
+                               atol: float = 1e-8) -> bool:
+    """``np.allclose`` that treats matching non-finite entries as equal.
+
+    Finite entries must agree to ``rtol``/``atol``; NaNs must sit at the
+    same positions on both sides (any payload); infinities must match
+    exactly (position *and* sign).  Shape mismatch is unequal, never an
+    error — this is a predicate, not an assertion.
+    """
+    a = np.asarray(a)
+    b = np.asarray(b)
+    if a.shape != b.shape:
+        return False
+    fa = np.isfinite(a)
+    fb = np.isfinite(b)
+    if not np.array_equal(fa, fb):
+        return False
+    na = np.isnan(a)
+    if not np.array_equal(na, np.isnan(b)):
+        return False
+    inf = ~fa & ~na
+    if inf.any() and not np.array_equal(a[inf], b[inf]):
+        return False
+    return bool(np.allclose(a[fa], b[fb], rtol=rtol, atol=atol))
+
+
+def assert_finite_close(a, b, rtol: float = 1e-5, atol: float = 1e-8,
+                        context: str = "") -> None:
+    """Assert ``allclose_or_both_nonfinite`` with a diagnostic message.
+
+    Benches and tests comparing solver outputs that may legitimately
+    contain diverged (non-finite) solves should use this instead of
+    ad-hoc byte comparisons: it reports *where* the arrays disagree
+    (non-finite pattern mismatch vs finite-value drift + max deviation).
+    """
+    a = np.asarray(a)
+    b = np.asarray(b)
+    prefix = f"{context}: " if context else ""
+    if a.shape != b.shape:
+        raise AssertionError(
+            f"{prefix}shape mismatch {a.shape} vs {b.shape}")
+    fa = np.isfinite(a)
+    fb = np.isfinite(b)
+    if not np.array_equal(fa, fb):
+        raise AssertionError(
+            f"{prefix}non-finite pattern mismatch "
+            f"({int((~fa).sum())} vs {int((~fb).sum())} non-finite "
+            f"entries at differing positions)")
+    na = np.isnan(a)
+    if not np.array_equal(na, np.isnan(b)):
+        raise AssertionError(f"{prefix}NaN/inf pattern mismatch")
+    inf = ~fa & ~na
+    if inf.any() and not np.array_equal(a[inf], b[inf]):
+        raise AssertionError(f"{prefix}infinity sign mismatch")
+    if not np.allclose(a[fa], b[fb], rtol=rtol, atol=atol):
+        dev = np.abs(a[fa] - b[fb])
+        raise AssertionError(
+            f"{prefix}finite entries deviate: max |Δ|={dev.max():.3e} "
+            f"(rtol={rtol}, atol={atol})")

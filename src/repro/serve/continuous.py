@@ -55,6 +55,8 @@ import jax.numpy as jnp
 from repro.config.base import ServeConfig, SolverConfig
 from repro.deprecation import warn_legacy
 from repro.obs import trace as obs
+from repro.obs.health import (STATUS_LABELS, STATUS_RUNNING, HealthConfig,
+                              SolveFailure)
 from repro.serve.engine import SolveRequest, SolveResponse, validate_request
 from repro.serve.pathstate import PathRequest, PathState
 from repro.serve.metrics import ServeTelemetry
@@ -138,9 +140,14 @@ class _SlotSlab:
         self._base_capacity = self.capacity
         self._compact_drain = bool(getattr(serve, "compact_drain", False))
         self.chunk_iters = int(serve.chunk_iters)
+        # Numerical-health watchdog (None = off ⇒ the byte-identical
+        # legacy chunk program).  Must be set before _make_chunk() —
+        # it keys the stepper compile cache.
+        self._health_cfg = HealthConfig.of(serve)
         self.telemetry = telemetry
         self.queue = AdmissionQueue(serve.policy)
         self.slab = slab_alloc(spec, cfg, self.capacity)
+        self._health_carry = self._fresh_health(self.capacity)
         self._chunk = self._make_chunk()
         # warm_from resolver: req_id -> finished solution (None = still
         # in flight, defer admission).  Injected by the engine.
@@ -184,18 +191,35 @@ class _SlotSlab:
             jnp.asarray(self._stage_active.copy()))
         self._no_admit = jnp.zeros(S, bool)
 
+    def _fresh_health(self, capacity: int):
+        """Device-resident per-slot health carry ``(prev_stat, stall)``
+        at quarantine rest: +inf previous stat (any finite first-chunk
+        stat counts as a decrease), zero stall count.  ``None`` when the
+        watchdog is off."""
+        if self._health_cfg is None:
+            return None
+        return (jnp.full((capacity,), jnp.inf, jnp.float32),
+                jnp.zeros((capacity,), jnp.int32))
+
     # -- subclass hooks (the mesh slab reshapes both) -------------- #
     def _slab_capacity(self, serve: ServeConfig) -> int:
         return serve.slab_capacity
 
     def _make_chunk(self):
-        return make_chunk_stepper(self.spec, self.cfg, self.chunk_iters)
+        return make_chunk_stepper(self.spec, self.cfg, self.chunk_iters,
+                                  self._health_cfg)
 
     def _record_chunk(self, wall: float) -> None:
         self.telemetry.record_chunk(live=self.live, capacity=self.capacity,
                                     chunk_iters=self.chunk_iters,
                                     wall_s=wall,
                                     flops=self._chunk_flops(self.capacity))
+
+    def _record_quarantine(self, slot: int, status: str) -> None:
+        """Watchdog quarantine counter — the mesh slab overrides this to
+        record on the owning device's telemetry child so the per-device
+        rollup conserves health events."""
+        self.telemetry.record_quarantine(status)
 
     def _chunk_flops(self, capacity: int) -> int:
         """Matvec currency of one chunk dispatch: every slot (live or
@@ -230,6 +254,20 @@ class _SlotSlab:
         live_slots = [int(s) for s in np.flatnonzero(self.active)]
         self.slab = slab_migrate(self.slab, live_slots, self.spec,
                                  self.cfg, target)
+        if self._health_carry is not None:
+            # The health carry migrates with its slots: a stalling
+            # straggler keeps its stall count across a drain-tail
+            # resize (conservation pinned in tests/test_health.py).
+            prev_stat, stall = self._health_carry
+            fresh_ps, fresh_st = self._fresh_health(int(target))
+            if live_slots:
+                sel = jnp.asarray(np.asarray(live_slots, np.int32))
+                k = len(live_slots)
+                fresh_ps = fresh_ps.at[:k].set(
+                    jnp.take(prev_stat, sel, axis=0))
+                fresh_st = fresh_st.at[:k].set(
+                    jnp.take(stall, sel, axis=0))
+            self._health_carry = (fresh_ps, fresh_st)
         self.capacity = int(target)
         self._chunk = self._make_chunk()
         stop = np.ones(self.capacity, bool)
@@ -374,11 +412,26 @@ class _SlotSlab:
         with obs.span("serve.chunk", cat="continuous", tick=tick,
                       live=self.live, capacity=self.capacity,
                       chunk_iters=self.chunk_iters):
-            self.slab, stop_dev = self._chunk(
-                self.slab, jnp.asarray(self.stop.copy()), admit,
-                new_data, new_c, new_x0, new_ids, new_active)
-            # The one per-chunk host sync (copy: host mirror is mutated).
-            stop = np.array(stop_dev)
+            if self._health_cfg is None:
+                self.slab, stop_dev = self._chunk(
+                    self.slab, jnp.asarray(self.stop.copy()), admit,
+                    new_data, new_c, new_x0, new_ids, new_active)
+                # The one per-chunk host sync (copy: host mirror is
+                # mutated).
+                stop = np.array(stop_dev)
+                status = None
+            else:
+                # Watchdog on: same single dispatch, and the one
+                # readback widens from a bool stop mask to the int32
+                # verdict vector (0=running / 1=stopped / 2=diverged /
+                # 3=stalled).  The health carry stays device-resident.
+                self.slab, status_dev, prev_stat, stall = self._chunk(
+                    self.slab, jnp.asarray(self.stop.copy()), admit,
+                    new_data, new_c, new_x0, new_ids, new_active,
+                    *self._health_carry)
+                self._health_carry = (prev_stat, stall)
+                status = np.array(status_dev)
+                stop = status != STATUS_RUNNING
         wall = time.perf_counter() - t0
         self._record_chunk(wall)
 
@@ -406,17 +459,32 @@ class _SlotSlab:
             stats = np.asarray(state.stat)[finished]
             for j, slot in enumerate(finished):
                 req_id = int(self.slot_req[slot])
+                # Quarantine verdicts ("diverged"/"stalled") ride the
+                # same eviction path as healthy completions, so the
+                # exactly-once-service audit invariants hold unchanged.
+                verdict = "ok" if status is None else \
+                    STATUS_LABELS.get(int(status[slot]), "ok")
                 resp = SolveResponse(
                     x=xs[j], iters=int(ks[j]),
                     converged=bool(stats[j] <= self.cfg.tol),
-                    stat=float(stats[j]), bucket=self.capacity)
+                    stat=float(stats[j]), bucket=self.capacity,
+                    status=verdict)
                 out.append((req_id, resp))
                 self.telemetry.record_completion(
-                    req_id, iters=resp.iters, converged=resp.converged)
+                    req_id, iters=resp.iters, converged=resp.converged,
+                    status=verdict)
+                if verdict != "ok":
+                    self._record_quarantine(int(slot), verdict)
+                    obs.instant("serve.quarantine", cat="continuous",
+                                tick=tick, req_id=req_id,
+                                slot=int(slot), status=verdict,
+                                iters=resp.iters)
                 obs.instant("serve.evict", cat="continuous", tick=tick,
                             req_id=req_id, slot=int(slot),
                             iters=resp.iters, converged=resp.converged)
-                self._open_audit.pop(req_id)["evict_tick"] = tick
+                rec = self._open_audit.pop(req_id)
+                rec["evict_tick"] = tick
+                rec["status"] = verdict
                 self.active[slot] = False
                 self.slot_req[slot] = -1
         self.stop = stop
@@ -470,6 +538,9 @@ class ContinuousSolverEngine:
         #: closed at eviction) — the substrate of the no-double-booking
         #: and determinism property tests.
         self.audit: list[dict] = []
+        #: Typed quarantine outcomes, in eviction order (empty unless
+        #: ``ServeConfig.watchdog`` is on and a solve went unhealthy).
+        self.failures: list[SolveFailure] = []
         self._tick = 0
         # Round-robin cursor over slabs (multi-signature fairness).
         self._rr = 0
@@ -585,6 +656,11 @@ class ContinuousSolverEngine:
                     for req_id, resp in slab.step(self._tick):
                         self._responses[req_id] = resp
                         done.append(req_id)
+                        if resp.status != "ok":
+                            self.failures.append(SolveFailure(
+                                req_id=req_id, status=resp.status,
+                                iters=resp.iters, stat=resp.stat,
+                                tick=self._tick))
         # Path advancement happens after the slab sweep: it may submit
         # follow-up requests (possibly creating new slabs), which must
         # not mutate the dict mid-iteration.

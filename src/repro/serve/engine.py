@@ -204,6 +204,10 @@ class SolveResponse:
     converged: bool
     stat: float                 # final ‖x̂(x)−x‖∞
     bucket: int                 # batch bucket / slab capacity served in
+    #: Health verdict: "ok" for a normal completion (converged or
+    #: max-iters), "diverged"/"stalled" when the numerical-health
+    #: watchdog (``ServeConfig.watchdog``) quarantined the solve.
+    status: str = "ok"
 
 
 def validate_request(i: "int | None", r: SolveRequest,
@@ -293,6 +297,10 @@ class SolverServeEngine:
                       "signatures": 0, "occupancy": 0.0,
                       "padding_waste": 0.0}
         self._seen: set = set()
+        #: Request ids of the most recent wave, aligned with the
+        #: `requests` list passed to :meth:`submit` (read by the client
+        #: WaveBackend to feed ``FlexaClient.diagnostics()``).
+        self.last_request_ids: list[int] = []
         # Running totals for the stats aggregates (cheaper than a full
         # telemetry snapshot per wave, which sorts every latency seen).
         self._row_iters = 0
@@ -335,6 +343,10 @@ class SolverServeEngine:
 
         tele = self.telemetry
         req_ids = [tele.next_request_id() for _ in requests]
+        # Expose this wave's request ids (aligned with `requests`) so
+        # callers — the client's WaveBackend — can map tickets to the
+        # telemetry request traces that diagnostics() renders.
+        self.last_request_ids = list(req_ids)
         for i, r in enumerate(requests):
             tele.record_arrival(req_ids[i], r.spec.family, "wave",
                                 t=None if arrivals is None

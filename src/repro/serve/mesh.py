@@ -139,7 +139,8 @@ class _MeshSlab(_SlotSlab):
     def _make_chunk(self):
         return make_sharded_chunk_stepper(self.spec, self.cfg,
                                           self.chunk_iters,
-                                          self.n_devices)
+                                          self.n_devices,
+                                          self._health_cfg)
 
     def _record_chunk(self, wall: float) -> None:
         per = self.per_device_capacity
@@ -149,6 +150,14 @@ class _MeshSlab(_SlotSlab):
                 chunk_iters=self.chunk_iters,
                 wall_s=wall / self.n_devices,
                 flops=self._chunk_flops(per))
+
+    def _record_quarantine(self, slot: int, status: str) -> None:
+        # Record on the owning device's telemetry child: slot s lives on
+        # device s // per_device_capacity.  MeshTelemetry.rollup() sums
+        # the children back into the global counters, so health events
+        # obey the same per-device conservation law as chunk counters.
+        d = slot // self.per_device_capacity
+        self.telemetry.device(d).record_quarantine(status)
 
     def _migration_allowed(self) -> bool:
         # Slot s lives on device s // per_device_capacity: the slot

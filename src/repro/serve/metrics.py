@@ -55,6 +55,9 @@ class RequestTrace:
     iters: int = 0
     converged: bool = False
     engine: str = ""                # "wave" | "continuous"
+    #: "ok" | "diverged" | "stalled" — the watchdog quarantine verdict
+    #: (always "ok" with the watchdog off).
+    status: str = "ok"
     samples: list = field(default_factory=list)  # (t, iters, stat) triples
 
     @property
@@ -77,6 +80,7 @@ class RequestTrace:
             "admitted": self.admitted, "completed": self.completed,
             "queue_wait": self.queue_wait, "latency": self.latency,
             "iters": self.iters, "converged": self.converged,
+            "status": self.status,
             "samples": list(self.samples),
         }
 
@@ -126,9 +130,28 @@ class ServeTelemetry:
     # opt-in per-chunk residual sampling (dashboard sparklines); off by
     # default so no extra device readback happens unless requested
     sample_progress: bool = False
+    # numerical-health watchdog quarantine counters (repro.obs.health)
+    quarantined_diverged: int = 0
+    quarantined_stalled: int = 0
+    # sliding-window SLO metrics (repro.obs.windows): horizon in clock
+    # seconds; 0 = disabled.  Opt-in because feeding windows costs
+    # extra clock reads, which would perturb byte-reproducible traces
+    # under injected clocks.
+    window_s: float = 0.0
+    _windows: object = None
 
     def now(self) -> float:
         return float(self.clock())
+
+    def windows(self):
+        """The lazily created :class:`repro.obs.windows.MetricWindows`
+        (``None`` when ``window_s`` is 0/unset)."""
+        if not self.window_s or self.window_s <= 0:
+            return None
+        if self._windows is None:
+            from repro.obs.windows import MetricWindows
+            self._windows = MetricWindows(horizon=self.window_s)
+        return self._windows
 
     def next_request_id(self) -> int:
         """Allocate a request id unique within this telemetry.
@@ -153,11 +176,34 @@ class ServeTelemetry:
         self.requests[req_id].admitted = self.now() if t is None else t
 
     def record_completion(self, req_id: int, *, iters: int, converged: bool,
+                          status: str = "ok",
                           t: float | None = None) -> None:
         r = self.requests[req_id]
         r.completed = self.now() if t is None else t
         r.iters = int(iters)
         r.converged = bool(converged)
+        r.status = str(status)
+        w = self.windows()
+        if w is not None:
+            # Completion timestamp doubles as the window sample time —
+            # no extra clock read on the completion path.
+            w.add("completions", r.completed, 1.0)
+            if r.latency is not None:
+                w.add("latency", r.completed, r.latency)
+            if r.queue_wait is not None:
+                w.add("queue_wait", r.completed, r.queue_wait)
+
+    def record_quarantine(self, status: str, t: float | None = None) -> None:
+        """One watchdog quarantine event ("diverged" or "stalled")."""
+        if status == "diverged":
+            self.quarantined_diverged += 1
+        elif status == "stalled":
+            self.quarantined_stalled += 1
+        else:
+            raise ValueError(f"unknown quarantine status {status!r}")
+        w = self.windows()
+        if w is not None:
+            w.add("health_events", self.now() if t is None else t, 1.0)
 
     def record_progress(self, req_id: int, *, iters: int, stat: float,
                         t: float | None = None) -> None:
@@ -184,6 +230,11 @@ class ServeTelemetry:
         self.chunk_live_iters += chunk_iters * live
         self.chunk_flops += int(flops)
         self.chunk_wall += wall_s
+        w = self.windows()
+        if w is not None:
+            # One clock read per chunk, paid only with windows enabled.
+            w.add("occupancy", self.now(),
+                  live / capacity if capacity else 0.0)
 
     def record_migration(self, *, from_capacity: int,
                          to_capacity: int) -> None:
@@ -274,6 +325,16 @@ class ServeTelemetry:
             "ledger": self.ledger().as_dict(),
             "compile_cache": cache_stats(),
         }
+        if self.quarantined_diverged or self.quarantined_stalled:
+            out["health"] = {
+                "quarantined": (self.quarantined_diverged
+                                + self.quarantined_stalled),
+                "diverged": self.quarantined_diverged,
+                "stalled": self.quarantined_stalled,
+            }
+        w = self.windows()
+        if w is not None:
+            out["windows"] = w.snapshot(self.now())
         if self.chunks:
             out["continuous"] = _chunk_summary(self)
         if self.waves:
@@ -355,6 +416,14 @@ class MeshTelemetry(ServeTelemetry):
                                     for t in self.per_device)
         self.chunk_flops = sum(t.chunk_flops for t in self.per_device)
         self.chunk_wall = sum(t.chunk_wall for t in self.per_device)
+        # Health events are recorded on the owning device's child (the
+        # mesh slab's _record_quarantine hook), so the global counters
+        # are the per-device sum — same conservation law as the chunk
+        # counters above.
+        self.quarantined_diverged = sum(t.quarantined_diverged
+                                        for t in self.per_device)
+        self.quarantined_stalled = sum(t.quarantined_stalled
+                                       for t in self.per_device)
 
     def ledger(self) -> CostLedger:
         self.rollup()

@@ -67,6 +67,9 @@ from repro.core import flexa as _flexa
 from repro.deprecation import warn_legacy
 from repro.core.flexa import FlexaState, flexa_iteration
 from repro.problems.base import Problem
+from repro.obs.health import (HealthConfig, STATUS_RUNNING,
+                              STATUS_STOPPED, STATUS_DIVERGED,
+                              STATUS_STALLED)
 from repro.problems.families import build_problem, get_family, infer_family
 from repro.solvers.cache import CompileCache
 from repro.solvers.result import SolverResult
@@ -316,12 +319,28 @@ def _bmask(mask, ndim: int):
 
 
 def _chunk_core(spec: BatchedProblemSpec, cfg: SolverConfig,
-                chunk_iters: int):
+                chunk_iters: int, health: HealthConfig | None = None):
     """The (un-jitted) fused tick body shared by the single-device and
     mesh-sharded chunk steppers:
 
         core(slab, stop, admit, new_data, new_c, new_x0, new_ids,
              new_active) -> (slab, stop)
+
+    or, with the numerical-health watchdog enabled (``health`` a
+    :class:`repro.obs.health.HealthConfig`):
+
+        core(slab, stop, admit, ..., new_active, prev_stat, stall)
+            -> (slab, status, prev_stat, stall)
+
+    where ``status`` is the (S,) int32 verdict vector (STATUS_RUNNING /
+    STOPPED / DIVERGED / STALLED) that replaces the boolean stop mask in
+    the one-per-tick readback, and ``(prev_stat, stall)`` is the
+    device-resident per-slot health carry (last chunk-end stat + count
+    of consecutive non-decreasing chunks), reset on admitted rows.  The
+    health pass runs *after* the iteration loop and only reads its
+    outputs — the iteration math is byte-identical either way, which is
+    the watchdog's bitwise-while-healthy guarantee.  With
+    ``health=None`` this function builds the exact legacy program.
 
     Phase 1 — **admission splice**: slots flagged in ``admit`` (an (S,)
     bool mask) are overwritten in place from the staged full-slab
@@ -403,11 +422,51 @@ def _chunk_core(spec: BatchedProblemSpec, cfg: SolverConfig,
                                         (slab.state, stop))
         return slab._replace(state=state), stop
 
-    return core
+    if health is None:
+        return core
+
+    H = int(health.stall_window)
+
+    def core_health(slab: SlabState, stop, admit, new_data, new_c,
+                    new_x0, new_ids, new_active, prev_stat, stall):
+        # Slots that iterate this chunk: not stopped at entry, or being
+        # (re)admitted right now.  Empty slots arrive with stop=True and
+        # hold +inf/NaN placeholders, so every verdict below is masked
+        # to `ran` rows.
+        ran = ~stop | admit
+        prev_stat = jnp.where(admit, jnp.inf, prev_stat)
+        stall = jnp.where(admit, 0, stall)
+
+        slab, stop_out = core(slab, stop, admit, new_data, new_c,
+                              new_x0, new_ids, new_active)
+
+        stat = slab.state.stat
+        finite = (jnp.all(jnp.isfinite(slab.state.x), axis=-1)
+                  & jnp.isfinite(slab.state.v_prev)
+                  & jnp.isfinite(stat))
+        diverged = ran & ~finite
+        # Stall counter: +1 each chunk the stat fails to strictly
+        # decrease, reset on decrease or normal stop.  The first chunk
+        # after admission compares against +inf, so any finite stat
+        # counts as a decrease — quarantine therefore lands at chunk
+        # H+1 at the earliest.
+        decreased = stat < prev_stat
+        stall = jnp.where(stop_out | decreased, 0, stall + 1) \
+            .astype(stall.dtype)
+        stalled = ran & ~stop_out & ~diverged & (stall >= H)
+
+        status = jnp.where(stop_out, STATUS_STOPPED, STATUS_RUNNING)
+        status = jnp.where(stalled, STATUS_STALLED, status)
+        status = jnp.where(diverged, STATUS_DIVERGED, status) \
+            .astype(jnp.int32)
+        return slab, status, stat, stall
+
+    return core_health
 
 
 def _build_chunk_stepper(spec: BatchedProblemSpec, cfg: SolverConfig,
-                         chunk_iters: int):
+                         chunk_iters: int,
+                         health: HealthConfig | None = None):
     """Compile one fused scheduler tick (see :func:`_chunk_core` for the
     phase-by-phase contract):
 
@@ -420,16 +479,32 @@ def _build_chunk_stepper(spec: BatchedProblemSpec, cfg: SolverConfig,
     dispatch per admission and dominate the serving makespan at small
     instance sizes.  The slab and stop mask are donated (in-place
     advance).
-    """
-    core = _chunk_core(spec, cfg, chunk_iters)
 
-    @partial(jax.jit, donate_argnums=(0, 1))
-    def chunk(slab: SlabState, stop, admit, new_data, new_c, new_x0,
-              new_ids, new_active=None):
-        if new_active is None:
-            new_active = jnp.ones_like(slab.active)
-        return core(slab, stop, admit, new_data, new_c, new_x0,
-                    new_ids, new_active)
+    With ``health`` set, the tick takes and returns the device-resident
+    per-slot health carry and the readback widens to an int32 status
+    vector (still exactly one transfer per tick):
+
+        chunk(slab, stop, admit, ..., new_active, prev_stat, stall)
+            -> (slab, status, prev_stat, stall)
+    """
+    core = _chunk_core(spec, cfg, chunk_iters, health)
+
+    if health is None:
+        @partial(jax.jit, donate_argnums=(0, 1))
+        def chunk(slab: SlabState, stop, admit, new_data, new_c, new_x0,
+                  new_ids, new_active=None):
+            if new_active is None:
+                new_active = jnp.ones_like(slab.active)
+            return core(slab, stop, admit, new_data, new_c, new_x0,
+                        new_ids, new_active)
+    else:
+        @partial(jax.jit, donate_argnums=(0, 1, 8, 9))
+        def chunk(slab: SlabState, stop, admit, new_data, new_c, new_x0,
+                  new_ids, new_active, prev_stat, stall):
+            if new_active is None:
+                new_active = jnp.ones_like(slab.active)
+            return core(slab, stop, admit, new_data, new_c, new_x0,
+                        new_ids, new_active, prev_stat, stall)
 
     return chunk
 
@@ -439,7 +514,8 @@ make_chunk_stepper = CompileCache("chunk_stepper", _build_chunk_stepper)
 
 def _build_sharded_chunk_stepper(spec: BatchedProblemSpec,
                                  cfg: SolverConfig, chunk_iters: int,
-                                 n_devices: int):
+                                 n_devices: int,
+                                 health: HealthConfig | None = None):
     """Compile the fused tick with the slot axis sharded over a 1-D
     device mesh — the kernel of ``repro.serve.mesh.MeshServeEngine``.
 
@@ -461,7 +537,7 @@ def _build_sharded_chunk_stepper(spec: BatchedProblemSpec,
 
     from repro.compat import shard_map
 
-    core = _chunk_core(spec, cfg, chunk_iters)
+    core = _chunk_core(spec, cfg, chunk_iters, health)
     mesh = jax.make_mesh((int(n_devices),), ("serve",))
     row = PartitionSpec("serve")       # shard dim 0, replicate the rest
     slab_specs = SlabState(
@@ -471,17 +547,33 @@ def _build_sharded_chunk_stepper(spec: BatchedProblemSpec,
         active=row)
     payload_specs = (tuple(row for _ in slab_data_shapes(spec)),
                      row, row, row, row)
-    sharded = shard_map(core, mesh=mesh,
-                        in_specs=(slab_specs, row, row) + payload_specs,
-                        out_specs=(slab_specs, row), check_vma=False)
+    if health is None:
+        in_specs = (slab_specs, row, row) + payload_specs
+        out_specs = (slab_specs, row)
+    else:
+        # Health carry (prev_stat, stall) shards on the slot axis like
+        # everything else; the verdict replaces the stop mask output.
+        in_specs = (slab_specs, row, row) + payload_specs + (row, row)
+        out_specs = (slab_specs, row, row, row)
+    sharded = shard_map(core, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_vma=False)
 
-    @partial(jax.jit, donate_argnums=(0, 1))
-    def chunk(slab: SlabState, stop, admit, new_data, new_c, new_x0,
-              new_ids, new_active=None):
-        if new_active is None:
-            new_active = jnp.ones_like(slab.active)
-        return sharded(slab, stop, admit, new_data, new_c, new_x0,
-                       new_ids, new_active)
+    if health is None:
+        @partial(jax.jit, donate_argnums=(0, 1))
+        def chunk(slab: SlabState, stop, admit, new_data, new_c, new_x0,
+                  new_ids, new_active=None):
+            if new_active is None:
+                new_active = jnp.ones_like(slab.active)
+            return sharded(slab, stop, admit, new_data, new_c, new_x0,
+                           new_ids, new_active)
+    else:
+        @partial(jax.jit, donate_argnums=(0, 1, 8, 9))
+        def chunk(slab: SlabState, stop, admit, new_data, new_c, new_x0,
+                  new_ids, new_active, prev_stat, stall):
+            if new_active is None:
+                new_active = jnp.ones_like(slab.active)
+            return sharded(slab, stop, admit, new_data, new_c, new_x0,
+                           new_ids, new_active, prev_stat, stall)
 
     return chunk
 

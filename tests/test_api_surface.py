@@ -61,9 +61,11 @@ SURFACE = {
         "register_backend", "solve_request_of",
     ],
     "repro.obs": [
-        "CostLedger", "LEDGER_KEYS", "Span", "Tracer", "get_tracer",
-        "instant", "render_requests", "render_snapshot", "set_tracer",
-        "span", "sparkline", "tracing",
+        "CostLedger", "HealthConfig", "LEDGER_KEYS", "MetricWindows",
+        "SlidingWindow", "SolveFailure", "Span", "Tracer",
+        "allclose_or_both_nonfinite", "assert_finite_close",
+        "bitwise_equal", "get_tracer", "instant", "render_requests",
+        "render_snapshot", "set_tracer", "span", "sparkline", "tracing",
     ],
 }
 

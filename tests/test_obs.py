@@ -386,12 +386,14 @@ def test_client_diagnostics_continuous_with_sampling():
             c.diagnostics(999)
 
 
-def test_client_diagnostics_inline_reports_empty():
+def test_client_diagnostics_inline_reports_requests():
     from repro.client import FlexaClient, SoloSpec
     with FlexaClient() as c:
         t = c.submit(SoloSpec(_lasso(0)))
         d = c.diagnostics(t)
-        assert d.done and d.requests == []
+        assert d.done and len(d.requests) == 1
+        assert d.requests[0]["family"] == "lasso"
+        assert d.requests[0]["completed"] is not None
         assert d.as_dict()["backend"] == "inline"
 
 
