@@ -70,8 +70,10 @@ def main() -> dict:
     refs = {}
     ok = True
     # Inline first: it is the reference the serve backends diff against.
+    # "remote" needs a live server process — benchmarks/remote_smoke.py
+    # owns that matrix.
     backends = ["inline"] + [b for b in available_backends()
-                             if b != "inline"]
+                             if b not in ("inline", "remote")]
     for backend in backends:
         client = FlexaClient(backend=backend, solver=CFG, serve=SERVE)
         for kind, spec in specs.items():

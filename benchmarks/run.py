@@ -47,6 +47,7 @@ def main() -> None:
     ap.add_argument("--skip-lm", action="store_true")
     ap.add_argument("--skip-serve", action="store_true")
     ap.add_argument("--skip-path", action="store_true")
+    ap.add_argument("--skip-remote", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="run every section at its seconds-scale CI "
                          "configuration (fig1 shrinks to one group, "
@@ -179,6 +180,20 @@ def main() -> None:
           f"tick={art['nan']['quarantine_tick']}")
     print(f"health/stall,0,tick={art['stall']['quarantine_tick']} "
           f"patience={art['stall_patience']}")
+
+    if not args.skip_remote:
+        # Solver-service smoke: server subprocess on a loopback port,
+        # remote-backend equivalence vs inline + graceful-drain gate
+        # (writes BENCH_remote.json; deterministic criteria only).
+        from benchmarks import remote_smoke
+        art = remote_smoke.main()
+        if not art["ok"]:
+            failures.append("remote:ok")
+        acc = art["accept"]
+        print(f"remote/equivalence,0,max_dev={acc['max_dev']:.1e} "
+              f"cells={acc['cells_ok']}/{acc['cells']}")
+        print(f"remote/drain,0,completed={art['drain']['completed']} "
+              f"ok={art['drain']['ok']}")
 
     if not args.skip_lm:
         from benchmarks import lm_step

@@ -17,15 +17,17 @@ scheduling.  This package is the single API over all of it:
   :class:`PathSpec`, :class:`CVSpec` — normalizing onto one internal
   :class:`WorkItem`;
 * the :class:`Backend` protocol + registry (``inline`` / ``wave`` /
-  ``continuous`` / ``mesh``; :func:`register_backend` to extend);
+  ``continuous`` / ``mesh`` / ``remote``; :func:`register_backend` to
+  extend — ``remote`` runs against a ``repro.remote.server`` process,
+  see ``docs/remote.md``);
 * result contracts: :class:`SoloResult`, :class:`BatchResult`, the
   shared :class:`~repro.path.driver.PathResult`, :class:`CVResult`;
 * the error taxonomy (:mod:`repro.client.errors`).
 
 The legacy entry points (``repro.solvers.solve`` / ``solve_batched``,
-``repro.path.solve_path`` / ``solve_path_batched``, direct engine
-construction) remain as one-shot-``FutureWarning`` shims that delegate
-here — see ``docs/client.md`` for the migration table.
+``repro.path.solve_path`` / ``solve_path_batched``) completed their
+deprecation cycle and are **removed**; direct engine construction still
+warns once per process — see ``docs/client.md`` for the migration table.
 """
 from repro.client.backends import (Backend, ContinuousBackend,
                                    InlineBackend, MeshBackend, WaveBackend,

@@ -276,10 +276,14 @@ class Backend:
                 else dataclasses.replace(self.config.solver, tol=tc))
 
     @staticmethod
-    def _path_request(spec, problem, grid):
+    def _path_request(spec, problem, grid, tol=None, priority=0,
+                      deadline=None):
         """The serve path protocol's request for one instance — the one
         construction both serve backends share, so a new PathSpec field
-        can never be threaded through only one of them."""
+        can never be threaded through only one of them.  ``tol`` is the
+        per-request stopping tolerance (the CV coarse sweep) — only the
+        continuous/mesh engines honor it; the wave backend reaches
+        coarse tolerance through a per-config engine instead."""
         from repro.serve.pathstate import PathRequest
         return PathRequest(
             A=np.asarray(problem.data["A"], np.float32),
@@ -287,7 +291,8 @@ class Backend:
             lambdas=grid, n_points=spec.n_points,
             lam_min_ratio=spec.lam_min_ratio,
             block_size=int(problem.block_size), warm=spec.warm,
-            screen=spec.screen, kkt_slack=spec.kkt_slack)
+            screen=spec.screen, kkt_slack=spec.kkt_slack, tol=tol,
+            priority=priority, deadline=deadline)
 
     # -- shared validation helpers --------------------------------- #
     def _require_registry_family(self, item: WorkItem) -> None:
@@ -347,6 +352,11 @@ def available_backends() -> tuple[str, ...]:
 
 def make_backend(config: ClientConfig,
                  telemetry: ServeTelemetry) -> Backend:
+    if config.backend == "remote" and "remote" not in _BACKENDS:
+        # The remote backend lives in its own package (repro.remote) so
+        # the client core never imports networking code; load it on
+        # first use — the import registers the backend.
+        import repro.remote.backend  # noqa: F401
     try:
         cls = _BACKENDS[config.backend]
     except KeyError:
@@ -737,49 +747,64 @@ class _ContTicket:
 class ContinuousBackend(Backend):
     """Slot-slab continuous batching over
     :class:`ContinuousSolverEngine` — admit on submit, advance on
-    ``step``, results as slots converge and are evicted."""
+    ``step``, results as slots converge and are evicted.
+
+    ONE engine serves everything this backend runs.  The CV coarse
+    sweep used to demand a second engine at the coarse tolerance; slabs
+    now carry a per-slot tolerance vector, so the sweep simply submits
+    its path requests with ``tol=tol_coarse`` and shares slots (and the
+    compiled chunk program) with full-accuracy traffic — which is also
+    what lets a remote server multiplex tenants with different
+    tolerances onto one engine."""
 
     name = "continuous"
 
     def __init__(self, config, telemetry):
         super().__init__(config, telemetry)
-        self._engines: dict[SolverConfig, object] = {}
+        self._eng = None
         self._live: dict[int, _ContTicket] = {}
         self._done: dict[int, _ContTicket] = {}     # diagnostics feed
 
-    def _engine(self, cfg: SolverConfig):
-        eng = self._engines.get(cfg)
-        if eng is None:
-            from repro.serve.continuous import ContinuousSolverEngine
+    def _make_engine(self):
+        from repro.serve.continuous import ContinuousSolverEngine
+        return ContinuousSolverEngine(self.config.solver,
+                                      self.config.serve,
+                                      telemetry=self.telemetry)
+
+    def _engine(self):
+        if self._eng is None:
             with internal_use():
-                eng = ContinuousSolverEngine(cfg, self.config.serve,
-                                             telemetry=self.telemetry)
-            self._engines[cfg] = eng
-        return eng
+                self._eng = self._make_engine()
+        return self._eng
 
     validate = WaveBackend.validate
 
     def submit(self, item: WorkItem, arrival=None) -> list[int]:
         rec = _ContTicket(item)
-        eng = self._engine(self.config.solver)
+        eng = self._engine()
+        pr, dl = item.priority, item.deadline
         if item.kind == "solo":
             rec.req_ids = [eng.submit(
-                solve_request_of(item.problems[0], x0=item.spec.x0),
+                solve_request_of(item.problems[0], x0=item.spec.x0,
+                                 priority=pr, deadline=dl),
                 arrival=arrival)]
         elif item.kind == "batch":
             x0, act = item.spec.x0, item.spec.active
             rec.req_ids = [eng.submit(solve_request_of(
                 p, x0=None if x0 is None else x0[i],
-                active=None if act is None else act[i]),
+                active=None if act is None else act[i],
+                priority=pr, deadline=dl),
                 arrival=arrival) for i, p in enumerate(item.problems)]
         else:
             spec = item.spec
-            sweep = self._engine(self._sweep_cfg(item))
             grid = (_resolve_cv_grid(item) if item.kind == "cv"
                     else spec.lambdas)
             rec.grid = grid
-            rec.path_ids = [sweep.submit_path(
-                self._path_request(spec, p, grid), arrival=arrival)
+            tol = getattr(spec, "tol_coarse", None)
+            rec.path_ids = [eng.submit_path(
+                self._path_request(spec, p, grid, tol=tol,
+                                   priority=pr, deadline=dl),
+                arrival=arrival)
                 for p in item.problems]
         self._live[item.ticket] = rec
         return []
@@ -789,9 +814,8 @@ class ContinuousBackend(Backend):
         return len(self._live)
 
     def step(self) -> list[int]:
-        for eng in self._engines.values():
-            if eng.pending:
-                eng.step()
+        if self._eng is not None and self._eng.pending:
+            self._eng.step()
         done = []
         for ticket in list(self._live):
             rec = self._live[ticket]
@@ -802,21 +826,30 @@ class ContinuousBackend(Backend):
                 done.append(ticket)
         return done
 
+    def expire_overdue(self, now: float | None = None) -> list[int]:
+        """Deadline sweep passthrough (the remote server calls this
+        between ticks); returns the expired engine request ids.  Their
+        tickets complete — with ``status="timeout"`` entries — on the
+        next :meth:`step`."""
+        if self._eng is None:
+            return []
+        return self._eng.expire_overdue(now)
+
     def request_ids(self, ticket: int) -> list[int]:
         rec = self._live.get(ticket) or self._done.get(ticket)
         if rec is None:
             return []
         ids = list(rec.req_ids)
         if rec.path_ids:
-            sweep = self._engine(self._sweep_cfg(rec.item))
+            eng = self._engine()
             for pid in rec.path_ids:
-                ids.extend(sweep.path_result(pid)["req_ids"])
+                ids.extend(eng.path_result(pid)["req_ids"])
         ids.extend(rec.resolve_ids)
         return ids
 
     def _advance(self, rec: _ContTicket):
         item = rec.item
-        eng = self._engine(self.config.solver)
+        eng = self._engine()
         if item.kind in ("solo", "batch"):
             resps = [eng.responses.get(r) for r in rec.req_ids]
             if any(r is None for r in resps):
@@ -826,9 +859,8 @@ class ContinuousBackend(Backend):
                                     item.problems[0])
             return _batch_result(resps, self.name, item.problems)
 
-        sweep = self._engine(self._sweep_cfg(item))
         if rec.phase == "run":
-            results = [sweep.path_result(pid) for pid in rec.path_ids]
+            results = [eng.path_result(pid) for pid in rec.path_ids]
             if not all(r["done"] for r in results):
                 return None
             folds = [_path_result_from_serve(item.problems[i],
@@ -842,7 +874,8 @@ class ContinuousBackend(Backend):
                 return _finish_cv(item, folds, self.name, None, select,
                                   meta={"mode": "continuous"},
                                   ledger=_cv_ledger(folds, None))
-            # Phase 2: full-tol winner re-solve through the main engine.
+            # Phase 2: winner re-solve at the engine's default (full)
+            # tolerance — same engine, the requests just omit tol.
             rec.phase, rec.folds, rec.select = "resolve", folds, select
             best = select["best_index"]
             probs = _winner_problems(item, select["best_lambda"])
@@ -861,8 +894,8 @@ class ContinuousBackend(Backend):
     def stats(self) -> dict:
         return {"backend": self.name,
                 "pending": self.pending,
-                "queued": sum(getattr(eng, "queued", 0)
-                              for eng in self._engines.values())}
+                "queued": (0 if self._eng is None
+                           else getattr(self._eng, "queued", 0))}
 
 
 # ------------------------------------------------------------------ #
@@ -884,12 +917,7 @@ class MeshBackend(ContinuousBackend):
 
     name = "mesh"
 
-    def _engine(self, cfg: SolverConfig):
-        eng = self._engines.get(cfg)
-        if eng is None:
-            from repro.serve.mesh import MeshServeEngine
-            with internal_use():
-                eng = MeshServeEngine(cfg, self.config.serve,
-                                      telemetry=self.telemetry)
-            self._engines[cfg] = eng
-        return eng
+    def _make_engine(self):
+        from repro.serve.mesh import MeshServeEngine
+        return MeshServeEngine(self.config.solver, self.config.serve,
+                               telemetry=self.telemetry)

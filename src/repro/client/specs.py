@@ -203,12 +203,21 @@ class TicketDiagnostics:
 # ------------------------------------------------------------------ #
 @dataclass
 class WorkItem:
-    """What a backend executes: kind + validated spec + derived facts."""
+    """What a backend executes: kind + validated spec + derived facts.
+
+    ``priority``/``deadline`` are service-policy annotations (SLO class
+    mapped by the remote server, defaults for direct use): the serve
+    backends thread them into every engine request the item spawns, so
+    the admission heaps and the timeout sweep see them; the inline and
+    wave backends ignore them.
+    """
     ticket: int
     kind: str                       # one of KINDS
     spec: object
     problems: list                  # the instances (1 / B / 1 / K)
     family: str | None              # registry family, None for ad-hoc F
+    priority: int = 0
+    deadline: float | None = None   # absolute telemetry-clock time
 
 
 def _family_of(problem: Problem) -> str | None:
@@ -221,8 +230,9 @@ def _family_of(problem: Problem) -> str | None:
     return None if missing else family
 
 
-def solve_request_of(problem: Problem, *, x0=None,
-                     active=None) -> SolveRequest:
+def solve_request_of(problem: Problem, *, x0=None, active=None,
+                     priority: int = 0,
+                     deadline: float | None = None) -> SolveRequest:
     """The serve-engine payload of a registry-family :class:`Problem`.
 
     The leading family data array rides in ``SolveRequest.A`` whatever
@@ -238,7 +248,8 @@ def solve_request_of(problem: Problem, *, x0=None,
         family=family,
         x0=None if x0 is None else np.asarray(x0, np.float32),
         active_mask=None if active is None
-        else np.asarray(active, np.float32))
+        else np.asarray(active, np.float32),
+        priority=priority, deadline=deadline)
 
 
 def mse_score(validation: Sequence) -> Callable:

@@ -328,9 +328,20 @@ class ClientConfig:
     serve: ServeConfig = field(default_factory=ServeConfig)
     # Execution backend: "inline" (facade / solve_batched in-process) |
     # "wave" (SolverServeEngine buckets) | "continuous"
-    # (ContinuousSolverEngine slot slabs).  repro.client.available_backends()
-    # lists the registry.
+    # (ContinuousSolverEngine slot slabs) | "mesh" (device-mesh slabs) |
+    # "remote" (a repro.remote solver-service process over HTTP).
+    # repro.client.available_backends() lists the registry.
     backend: str = "inline"
+    # Base URL of the solver service the "remote" backend talks to,
+    # e.g. "http://127.0.0.1:8781" — required when backend="remote",
+    # ignored otherwise.
+    remote_url: str = ""
+    # Tenant identity the remote server applies quotas/SLO policy to
+    # ("" = the server's default tenant).
+    remote_tenant: str = ""
+    # SLO class requested from the remote server ("" = the server's
+    # default class; see repro.remote.policy.SLO_CLASSES).
+    remote_slo: str = ""
 
     def replace(self, **kw: Any) -> "ClientConfig":
         return dataclasses.replace(self, **kw)

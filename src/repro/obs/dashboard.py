@@ -10,8 +10,14 @@ never pay a JAX import).  The module entry point drives them::
 ``--snapshot`` renders a saved ``ServeTelemetry.snapshot()`` JSON once;
 ``--demo`` runs a small continuous-backend workload through
 ``FlexaClient`` with progress sampling on and redraws the view every
-tick — the same loop a remote-service monitor would run against
-periodic snapshot polls.
+tick; ``--follow URL`` polls a live ``repro.remote`` solver service's
+``/snapshot`` endpoint and redraws the same panel per poll — the ops
+view for a server you did not start.
+
+Snapshots are schema-versioned (``ServeTelemetry.SNAPSHOT_SCHEMA``):
+both file and follow modes reject a snapshot whose declared schema this
+dashboard does not understand, instead of mis-rendering it.  Snapshots
+with no ``"schema"`` key (pre-versioning captures) still render.
 
 Sections rendered (each skipped when its source keys are absent):
 queue depth + slab occupancy, request/latency percentiles, watchdog
@@ -27,9 +33,32 @@ from __future__ import annotations
 import argparse
 import json
 
-__all__ = ["render_requests", "render_snapshot", "sparkline"]
+__all__ = ["SNAPSHOT_SCHEMA", "check_snapshot_schema", "render_requests",
+           "render_snapshot", "sparkline"]
+
+#: Highest snapshot schema this renderer understands.  Mirrors
+#: ``repro.serve.metrics.SNAPSHOT_SCHEMA`` (pinned equal by test) —
+#: duplicated here so the dashboard never imports the serve stack.
+SNAPSHOT_SCHEMA = 1
 
 _BLOCKS = "▁▂▃▄▅▆▇█"
+
+
+def check_snapshot_schema(snap: dict, *, where: str = "snapshot") -> dict:
+    """Validate ``snap``'s declared schema; returns ``snap``.
+
+    Missing ``"schema"`` is accepted (pre-versioning captures render
+    fine); a present-but-unknown value raises ``ValueError`` with the
+    supported version, so a newer server fails loudly instead of
+    rendering garbage.
+    """
+    v = snap.get("schema")
+    if v is not None and int(v) != SNAPSHOT_SCHEMA:
+        raise ValueError(
+            f"{where} declares schema {v}, but this dashboard only "
+            f"understands schema {SNAPSHOT_SCHEMA}; upgrade the "
+            "dashboard (or re-capture with a matching server)")
+    return snap
 
 
 def sparkline(values, width: int = 32) -> str:
@@ -92,7 +121,8 @@ def render_snapshot(snap: dict, *, queue_depth=None, title: str = "repro.obs",
         lines.append(
             f"health    quarantined {health.get('quarantined', 0)}   "
             f"diverged {health.get('diverged', 0)}   "
-            f"stalled {health.get('stalled', 0)}")
+            f"stalled {health.get('stalled', 0)}   "
+            f"timeouts {health.get('timeouts', 0)}")
 
     win = snap.get("windows")
     if win:
@@ -198,6 +228,36 @@ def render_requests(diags, *, width: int = 72, spark_width: int = 28) -> str:
 
 # -- entry point -----------------------------------------------------------
 
+def _follow(url: str, *, interval: float, ticks: int) -> int:
+    """Poll a solver service's ``/snapshot`` endpoint and redraw.
+
+    ``ticks <= 0`` follows until interrupted or the server goes away
+    (a draining server closing its listener ends the loop cleanly).
+    """
+    import time
+    import urllib.error
+    import urllib.request
+
+    base = url.rstrip("/")
+    tick = 0
+    while ticks <= 0 or tick < ticks:
+        try:
+            with urllib.request.urlopen(f"{base}/snapshot",
+                                        timeout=10.0) as resp:
+                snap = json.loads(resp.read())
+        except (urllib.error.URLError, OSError) as e:
+            print(f"server at {base} gone ({e}); stopping")
+            return 0 if tick else 1
+        check_snapshot_schema(snap, where=f"{base}/snapshot")
+        tele = snap.get("telemetry", snap)
+        check_snapshot_schema(tele, where=f"{base}/snapshot telemetry")
+        print(render_snapshot(tele, title=f"{base} · poll {tick}"))
+        tick += 1
+        if ticks <= 0 or tick < ticks:
+            time.sleep(interval)
+    return 0
+
+
 def _run_demo(ticks: int, n_requests: int, seed: int) -> str:
     """Small continuous-backend workload, redrawing the view per tick."""
     from repro.client import BatchSpec, FlexaClient
@@ -250,6 +310,11 @@ def main(argv=None) -> int:
     ap.add_argument("--demo", action="store_true",
                     help="run a small continuous workload and redraw "
                          "the view every tick")
+    ap.add_argument("--follow", metavar="URL",
+                    help="poll a live repro.remote server's /snapshot "
+                         "endpoint and redraw per poll")
+    ap.add_argument("--interval", type=float, default=1.0,
+                    help="seconds between --follow polls")
     ap.add_argument("--ticks", type=int, default=40)
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--seed", type=int, default=0)
@@ -258,10 +323,26 @@ def main(argv=None) -> int:
     if args.snapshot:
         with open(args.snapshot) as f:
             snap = json.load(f)
-        # Accept either a bare snapshot or a client stats() payload.
+        # Accept either a bare snapshot or a client stats() /
+        # server /snapshot payload (telemetry nested one level down).
         tele = snap.get("telemetry", snap)
+        try:
+            check_snapshot_schema(snap, where=args.snapshot)
+            check_snapshot_schema(tele, where=args.snapshot)
+        except ValueError as e:
+            print(f"error: {e}")
+            return 2
         print(render_snapshot(tele))
         return 0
+    if args.follow:
+        try:
+            return _follow(args.follow, interval=args.interval,
+                           ticks=args.ticks)
+        except ValueError as e:
+            print(f"error: {e}")
+            return 2
+        except KeyboardInterrupt:
+            return 0
     if args.demo:
         _run_demo(args.ticks, args.requests, args.seed)
         return 0

@@ -83,6 +83,10 @@ METRICS: tuple[MetricSpec, ...] = (
                "nan.quarantine_tick", "lower", 0.0),
     MetricSpec("health.quarantine_ticks_stall", "BENCH_health.json",
                "stall.quarantine_tick", "lower", 0.0),
+    MetricSpec("remote.cells_ok", "BENCH_remote.json",
+               "accept.cells_ok", "exact", 0.0),
+    MetricSpec("remote.drain_completed", "BENCH_remote.json",
+               "drain.completed", "exact", 0.0),
     # Wall-clock / machine-dependent — record-only (rtol None).
     MetricSpec("obs.overhead_frac", "BENCH_obs.json", "overhead_frac",
                "lower", None),
@@ -90,6 +94,8 @@ METRICS: tuple[MetricSpec, ...] = (
                "traces.poisson.speedup.makespan", "higher", None),
     MetricSpec("serve.heavy_tail.p99_x", "BENCH_serve.json",
                "traces.heavy_tail.speedup.p99_latency", "higher", None),
+    MetricSpec("remote.max_dev", "BENCH_remote.json",
+               "accept.max_dev", "lower", None),
 )
 
 # Cost-ledger totals copied verbatim into each record (BENCH_obs.json).

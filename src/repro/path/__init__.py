@@ -7,24 +7,29 @@ over the existing solvers:
 * :mod:`repro.path.grid`      — λ_max computation + geometric grids;
 * :mod:`repro.path.screening` — sequential strong rules with the KKT
   recheck that makes them safe (exact final solutions);
-* :mod:`repro.path.driver`    — :func:`solve_path` (one instance,
-  optionally λ-chunk-batched) and :func:`solve_path_batched` (B
-  same-signature instances in lockstep — the K-fold CV scenario),
-  returning :class:`PathResult`.
+* :mod:`repro.path.driver`    — the path drivers the client's inline
+  backend executes (``_solve_path`` for one instance, optionally
+  λ-chunk-batched, and ``_solve_path_batched`` for B same-signature
+  instances in lockstep — the K-fold CV scenario), returning
+  :class:`PathResult`.
+
+The user-facing spelling is ``FlexaClient().run(PathSpec(...))`` /
+``run(CVSpec(...))`` — the PR 5 legacy shims (``solve_path`` /
+``solve_path_batched``) completed their FutureWarning deprecation cycle
+and are gone.
 
 The serving counterpart — ``PathRequest`` admitted point-by-point into
 the continuous-batching runtime — lives in ``repro.serve.continuous``.
 See ``docs/paths.md``.
 """
-from repro.path.driver import (MAX_KKT_ROUNDS, PathResult, solve_path,
-                               solve_path_batched)
+from repro.path.driver import MAX_KKT_ROUNDS, PathResult
 from repro.path.grid import geometric_grid, lambda_max, validate_grid
 from repro.path.screening import (DEFAULT_KKT_SLACK, ScreenReport,
                                   block_scores, kkt_violations,
                                   strong_rule_active)
 
 __all__ = [
-    "PathResult", "solve_path", "solve_path_batched", "MAX_KKT_ROUNDS",
+    "PathResult", "MAX_KKT_ROUNDS",
     "geometric_grid", "lambda_max", "validate_grid",
     "ScreenReport", "block_scores", "kkt_violations",
     "strong_rule_active", "DEFAULT_KKT_SLACK",

@@ -44,7 +44,6 @@ from repro.obs.ledger import CostLedger
 from repro.problems.base import Problem
 from repro.problems.families import build_problem, get_family, infer_family
 from repro.path.grid import geometric_grid, lambda_max, validate_grid
-from repro.deprecation import warn_legacy
 from repro.solvers.cache import cache_stats
 from repro.path.screening import (DEFAULT_KKT_SLACK, ScreenReport,
                                   block_scores, expand_blocks,
@@ -636,45 +635,3 @@ def _solve_path_batched(problems, lambdas=None, *, n_points: int = 20,
                   "wall_s": wall},
             ledger=sweep_led.copy()))
     return results
-
-
-# ===================================================================== #
-# Legacy front doors (thin deprecation shims over the client)           #
-# ===================================================================== #
-def solve_path(problem: Problem, lambdas=None, *, n_points: int = 20,
-               lam_min_ratio: float = 0.01,
-               cfg: SolverConfig | None = None,
-               warm: bool = True, screen: bool = True,
-               kkt_slack: float = DEFAULT_KKT_SLACK,
-               lam_batch: int = 1, tol_schedule=None) -> PathResult:
-    """Legacy spelling of a path workload — delegates to the client
-    (``FlexaClient().run(PathSpec(...))``); see :func:`_solve_path` for
-    the parameter documentation.  Emits a one-shot :class:`FutureWarning`
-    per process."""
-    warn_legacy("repro.path.solve_path",
-                "FlexaClient().run(PathSpec(problem, ...))")
-    from repro.client import FlexaClient, PathSpec
-    return FlexaClient(solver=cfg).run(PathSpec(
-        problem=problem, lambdas=lambdas, n_points=n_points,
-        lam_min_ratio=lam_min_ratio, warm=warm, screen=screen,
-        kkt_slack=kkt_slack, lam_batch=lam_batch,
-        tol_schedule=tol_schedule))
-
-
-def solve_path_batched(problems, lambdas=None, *, n_points: int = 20,
-                       lam_min_ratio: float = 0.01,
-                       cfg: SolverConfig | None = None,
-                       warm: bool = True, screen: bool = True,
-                       kkt_slack: float = DEFAULT_KKT_SLACK,
-                       tol_schedule=None) -> list[PathResult]:
-    """Legacy spelling of a lockstep fold sweep — delegates to the client
-    (``FlexaClient().run(CVSpec(...))`` without a scoring stage); see
-    :func:`_solve_path_batched` for parameters.  Emits a one-shot
-    :class:`FutureWarning` per process."""
-    warn_legacy("repro.path.solve_path_batched",
-                "FlexaClient().run(CVSpec(problems, ...))")
-    from repro.client import CVSpec, FlexaClient
-    return FlexaClient(solver=cfg).run(CVSpec(
-        problems=list(problems), lambdas=lambdas, n_points=n_points,
-        lam_min_ratio=lam_min_ratio, warm=warm, screen=screen,
-        kkt_slack=kkt_slack, tol_schedule=tol_schedule)).folds

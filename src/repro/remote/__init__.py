@@ -1,0 +1,43 @@
+"""``repro.remote`` — the solver stack as a standalone network service.
+
+Three pieces, layered so each is testable alone:
+
+* :mod:`repro.remote.protocol` — the schema-versioned JSON wire format:
+  base64 ndarray payloads, codecs for the four client spec kinds
+  (solo/batch/path/cv) and their result contracts.  Pure
+  numpy + stdlib; no networking, no jax at import time.
+* :mod:`repro.remote.policy`   — service policy as pure functions/state
+  machines: per-tenant admission quotas (token-bucket rate + in-flight
+  slots, typed :class:`QuotaExceeded` rejection) and the SLO classes
+  that map onto the serve engines' ``(priority, deadline)`` admission
+  heaps.  Transport-independent — the policy tests drive it with a
+  fake clock.
+* :mod:`repro.remote.server`   — the asyncio front door
+  (``python -m repro.remote.server``): a minimal HTTP/JSON server
+  wrapping a :class:`~repro.client.backends.ContinuousBackend` (or
+  mesh), with per-tick deadline expiry, graceful SIGTERM drain and a
+  ``/snapshot`` endpoint ``repro.obs.dashboard --follow`` renders live.
+* :mod:`repro.remote.backend`  — :class:`RemoteBackend`, registered as
+  ``backend="remote"`` with :class:`~repro.client.FlexaClient`, so the
+  same typed specs run against a server with no client-code changes
+  (``ClientConfig.remote_url`` points at it).
+
+Import here stays light (no jax, no server): the backend registers
+itself lazily when ``ClientConfig.backend == "remote"`` is first used.
+See ``docs/remote.md``.
+"""
+from repro.remote.policy import (SLO_CLASSES, QuotaExceeded, QuotaPolicy,
+                                 SLOClass, TenantQuota, TokenBucket,
+                                 resolve_slo)
+from repro.remote.protocol import (SCHEMA, ProtocolError, decode_array,
+                                   decode_result, decode_spec,
+                                   encode_array, encode_item,
+                                   encode_result)
+
+__all__ = [
+    "SCHEMA", "ProtocolError",
+    "encode_array", "decode_array",
+    "encode_item", "decode_spec", "encode_result", "decode_result",
+    "QuotaExceeded", "QuotaPolicy", "TenantQuota", "TokenBucket",
+    "SLOClass", "SLO_CLASSES", "resolve_slo",
+]

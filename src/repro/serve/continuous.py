@@ -116,6 +116,20 @@ class AdmissionQueue:
     def pop(self) -> QueueEntry:
         return heapq.heappop(self._heap)[-1]
 
+    def remove_if(self, pred) -> list[QueueEntry]:
+        """Remove every queued entry for which ``pred(entry)`` is true;
+        returns them in heap (policy) order.  An O(len) heap rebuild —
+        used by policy sweeps (deadline expiry rejecting overdue entries
+        before they ever touch a slot), never on the per-tick hot path.
+        """
+        kept, removed = [], []
+        for item in self._heap:
+            (removed if pred(item[-1]) else kept).append(item)
+        if removed:
+            heapq.heapify(kept)
+            self._heap = kept
+        return [item[-1] for item in sorted(removed, key=lambda t: t[:2])]
+
     def __len__(self) -> int:
         return len(self._heap)
 
@@ -133,7 +147,7 @@ class _SlotSlab:
 
     def __init__(self, spec: BatchedProblemSpec, cfg: SolverConfig,
                  serve: ServeConfig, telemetry: ServeTelemetry,
-                 resolve_x0=None):
+                 resolve_x0=None, deadline_of=None):
         self.spec = spec
         self.cfg = cfg
         self.capacity = int(self._slab_capacity(serve))
@@ -152,10 +166,17 @@ class _SlotSlab:
         # warm_from resolver: req_id -> finished solution (None = still
         # in flight, defer admission).  Injected by the engine.
         self._resolve_x0 = resolve_x0 or (lambda req_id: None)
+        # Absolute-deadline resolver for the timeout sweep
+        # (:meth:`expire_overdue`): req_id -> deadline or None.
+        self._deadline_of = deadline_of or (lambda req_id: None)
         # Host mirrors: stop == "do not advance" (empty or finished slot).
         self.stop = np.ones(self.capacity, bool)
         self.active = np.zeros(self.capacity, bool)
         self.slot_req = np.full(self.capacity, -1, np.int64)
+        # Per-slot stopping tolerance mirror — the eviction loop's
+        # ``converged`` verdict must use the tolerance the slot was
+        # admitted with, not the engine default.
+        self.slot_tol = np.full(self.capacity, cfg.tol, np.float32)
         self._open_audit: dict = {}          # req_id -> its audit record
         self._alloc_staging()
 
@@ -174,6 +195,7 @@ class _SlotSlab:
         self._stage_c = np.zeros(S, np.float32)
         self._stage_x0 = np.zeros((S, spec.n), np.float32)
         self._stage_active = np.ones((S, spec.n), np.float32)
+        self._stage_tol = np.full(S, self.cfg.tol, np.float32)
         self._stage_ids = np.zeros(S, np.int32)
         self._admit = np.zeros(S, bool)
         # Device-resident copy of the last shipped stage, reused on
@@ -188,7 +210,8 @@ class _SlotSlab:
             jnp.asarray(self._stage_c.copy()),
             jnp.asarray(self._stage_x0.copy()),
             jnp.asarray(self._stage_ids.copy()),
-            jnp.asarray(self._stage_active.copy()))
+            jnp.asarray(self._stage_active.copy()),
+            jnp.asarray(self._stage_tol.copy()))
         self._no_admit = jnp.zeros(S, bool)
 
     def _fresh_health(self, capacity: int):
@@ -273,10 +296,12 @@ class _SlotSlab:
         stop = np.ones(self.capacity, bool)
         active = np.zeros(self.capacity, bool)
         slot_req = np.full(self.capacity, -1, np.int64)
+        slot_tol = np.full(self.capacity, self.cfg.tol, np.float32)
         for new_slot, old_slot in enumerate(live_slots):
             stop[new_slot] = self.stop[old_slot]
             active[new_slot] = True
             slot_req[new_slot] = self.slot_req[old_slot]
+            slot_tol[new_slot] = self.slot_tol[old_slot]
             rec = self._open_audit.get(int(self.slot_req[old_slot]))
             if rec is not None:
                 rec["slot"] = new_slot
@@ -285,6 +310,7 @@ class _SlotSlab:
                      "to_slot": new_slot, "from_capacity": old,
                      "to_capacity": self.capacity})
         self.stop, self.active, self.slot_req = stop, active, slot_req
+        self.slot_tol = slot_tol
         self._alloc_staging()
         self.telemetry.record_migration(from_capacity=old,
                                         to_capacity=self.capacity)
@@ -330,6 +356,12 @@ class _SlotSlab:
     def pending(self) -> int:
         return len(self.queue) + self.live
 
+    def _queues(self) -> list[AdmissionQueue]:
+        """Every queue a request of this slab can wait in — the timeout
+        sweep (:meth:`expire_overdue`) walks all of them.  The mesh slab
+        overrides this to include its per-device queues."""
+        return [self.queue]
+
     def _stage(self, slot: int, entry: QueueEntry, x0, audit: list,
                tick: int) -> None:
         r = entry.request
@@ -341,10 +373,13 @@ class _SlotSlab:
             else np.asarray(x0, np.float32)
         self._stage_active[slot] = 1.0 if r.active_mask is None \
             else np.asarray(r.active_mask, np.float32)
+        tol = self.cfg.tol if r.tol is None else float(r.tol)
+        self._stage_tol[slot] = tol
         self._stage_ids[slot] = entry.req_id
         self._admit[slot] = True
         self.active[slot] = True
         self.slot_req[slot] = entry.req_id
+        self.slot_tol[slot] = tol
         self.telemetry.record_admit(entry.req_id)
         obs.instant("serve.admit", cat="continuous", tick=tick,
                     req_id=entry.req_id, slot=slot)
@@ -403,19 +438,22 @@ class _SlotSlab:
                 jnp.asarray(self._stage_c.copy()),
                 jnp.asarray(self._stage_x0.copy()),
                 jnp.asarray(self._stage_ids.copy()),
-                jnp.asarray(self._stage_active.copy()))
+                jnp.asarray(self._stage_active.copy()),
+                jnp.asarray(self._stage_tol.copy()))
             admit = jnp.asarray(self._admit.copy())
             self._admit[:] = False
         else:
             admit = self._no_admit
-        new_data, new_c, new_x0, new_ids, new_active = self._payload
+        new_data, new_c, new_x0, new_ids, new_active, new_tol = \
+            self._payload
         with obs.span("serve.chunk", cat="continuous", tick=tick,
                       live=self.live, capacity=self.capacity,
                       chunk_iters=self.chunk_iters):
             if self._health_cfg is None:
                 self.slab, stop_dev = self._chunk(
                     self.slab, jnp.asarray(self.stop.copy()), admit,
-                    new_data, new_c, new_x0, new_ids, new_active)
+                    new_data, new_c, new_x0, new_ids, new_active,
+                    new_tol)
                 # The one per-chunk host sync (copy: host mirror is
                 # mutated).
                 stop = np.array(stop_dev)
@@ -428,7 +466,7 @@ class _SlotSlab:
                 self.slab, status_dev, prev_stat, stall = self._chunk(
                     self.slab, jnp.asarray(self.stop.copy()), admit,
                     new_data, new_c, new_x0, new_ids, new_active,
-                    *self._health_carry)
+                    new_tol, *self._health_carry)
                 self._health_carry = (prev_stat, stall)
                 status = np.array(status_dev)
                 stop = status != STATUS_RUNNING
@@ -466,7 +504,7 @@ class _SlotSlab:
                     STATUS_LABELS.get(int(status[slot]), "ok")
                 resp = SolveResponse(
                     x=xs[j], iters=int(ks[j]),
-                    converged=bool(stats[j] <= self.cfg.tol),
+                    converged=bool(stats[j] <= self.slot_tol[slot]),
                     stat=float(stats[j]), bucket=self.capacity,
                     status=verdict)
                 out.append((req_id, resp))
@@ -488,6 +526,86 @@ class _SlotSlab:
                 self.active[slot] = False
                 self.slot_req[slot] = -1
         self.stop = stop
+        return out
+
+    def expire_overdue(self, now: float,
+                       tick: int) -> list[tuple[int, SolveResponse]]:
+        """Evict every request whose absolute deadline has passed.
+
+        Opt-in: nothing fires unless the caller (the remote server's
+        tick loop, or a test) invokes it — inline ``drain()`` users see
+        identical behavior to before the sweep existed.  Two kinds of
+        victims, both surfaced as ``status="timeout"`` responses:
+
+        * **queued** entries (never admitted): removed from the
+          admission queue(s) and answered with their own ``x0`` (or
+          zeros) at ``iters=0`` — no audit record exists to close, by
+          the exactly-once-service invariant (audit rows are created at
+          admission).
+        * **live** slots: the slot's current iterate is read back and
+          returned (best effort so far), the open audit record is
+          closed with ``status="timeout"``, and the slot is freed
+          through the same host-mirror path as a normal eviction.
+        """
+        out: list[tuple[int, SolveResponse]] = []
+
+        def overdue(e: QueueEntry) -> bool:
+            return e.deadline is not None and float(e.deadline) <= now
+
+        for q in self._queues():
+            for entry in q.remove_if(overdue):
+                r = entry.request
+                x = np.zeros(self.spec.n, np.float32) if r.x0 is None \
+                    else np.asarray(r.x0, np.float32)
+                resp = SolveResponse(
+                    x=x, iters=0, converged=False, stat=float("inf"),
+                    bucket=self.capacity, status="timeout")
+                out.append((entry.req_id, resp))
+                self.telemetry.record_completion(
+                    entry.req_id, iters=0, converged=False,
+                    status="timeout")
+                self.telemetry.record_timeout()
+                obs.instant("serve.timeout", cat="continuous", tick=tick,
+                            req_id=entry.req_id, queued=True)
+
+        live_overdue = [int(s) for s in np.flatnonzero(self.active)
+                        if (d := self._deadline_of(int(self.slot_req[s])))
+                        is not None and float(d) <= now]
+        if live_overdue:
+            state = self.slab.state
+            xs = np.asarray(state.x)
+            ks = np.asarray(state.k)
+            stats = np.asarray(state.stat)
+            for slot in live_overdue:
+                req_id = int(self.slot_req[slot])
+                if self._admit[slot]:
+                    # Staged but not yet shipped to the device: the slab
+                    # row still holds a previous request's state, so
+                    # answer with the staged x0 and cancel the admit.
+                    self._admit[slot] = False
+                    resp = SolveResponse(
+                        x=self._stage_x0[slot].copy(), iters=0,
+                        converged=False, stat=float("inf"),
+                        bucket=self.capacity, status="timeout")
+                else:
+                    resp = SolveResponse(
+                        x=xs[slot], iters=int(ks[slot]), converged=False,
+                        stat=float(stats[slot]), bucket=self.capacity,
+                        status="timeout")
+                out.append((req_id, resp))
+                self.telemetry.record_completion(
+                    req_id, iters=resp.iters, converged=False,
+                    status="timeout")
+                self.telemetry.record_timeout()
+                obs.instant("serve.timeout", cat="continuous", tick=tick,
+                            req_id=req_id, slot=slot, queued=False,
+                            iters=resp.iters)
+                rec = self._open_audit.pop(req_id)
+                rec["evict_tick"] = tick
+                rec["status"] = "timeout"
+                self.active[slot] = False
+                self.slot_req[slot] = -1
+                self.stop[slot] = True
         return out
 
 
@@ -544,6 +662,9 @@ class ContinuousSolverEngine:
         self._tick = 0
         # Round-robin cursor over slabs (multi-signature fairness).
         self._rr = 0
+        # req_id -> absolute deadline, for the opt-in timeout sweep
+        # (:meth:`expire_overdue`); slabs resolve through .get.
+        self._deadlines: dict[int, float] = {}
         # In-flight regularization paths (PathRequest).
         self._paths: dict[int, PathState] = {}
         self._path_of_req: dict[int, int] = {}
@@ -584,6 +705,8 @@ class ContinuousSolverEngine:
         self.telemetry.record_arrival(req_id, spec.family, "continuous",
                                       t=t)
         self._spec_of[req_id] = spec
+        if request.deadline is not None:
+            self._deadlines[req_id] = float(request.deadline)
         slab = self._slabs.get(spec)
         if slab is None:
             slab = self._slabs[spec] = self._make_slab(spec)
@@ -596,7 +719,8 @@ class ContinuousSolverEngine:
         """Slab factory — the mesh engine overrides this to hand out
         sharded slabs with per-device queues."""
         return _SlotSlab(spec, self.cfg, self.serve, self.telemetry,
-                         resolve_x0=self._warm_solution)
+                         resolve_x0=self._warm_solution,
+                         deadline_of=self._deadlines.get)
 
     def _warm_solution(self, req_id: int):
         """x0 for a ``warm_from`` admission (None = still in flight)."""
@@ -675,6 +799,32 @@ class ContinuousSolverEngine:
                 st.req_ids.append(new_id)
                 self._path_of_req[new_id] = path_id
         return done
+
+    def expire_overdue(self, now: float | None = None) -> list[int]:
+        """Evict every request whose absolute ``deadline`` has passed
+        (``status="timeout"`` through the normal eviction path — audit
+        closed, telemetry counted, a :class:`SolveFailure` appended).
+
+        Opt-in: deadlines are inert until something calls this — the
+        remote server's tick loop does, between :meth:`step` calls.  A
+        timed-out request that belongs to a path terminates the whole
+        path (its remaining points would warm-start from a solution that
+        never arrived).  Returns the expired request ids.
+        """
+        now = self.telemetry.now() if now is None else float(now)
+        expired = []
+        for slab in list(self._slabs.values()):
+            for req_id, resp in slab.expire_overdue(now, self._tick):
+                self._responses[req_id] = resp
+                self._deadlines.pop(req_id, None)
+                expired.append(req_id)
+                self.failures.append(SolveFailure(
+                    req_id=req_id, status="timeout", iters=resp.iters,
+                    stat=resp.stat, tick=self._tick))
+                path_id = self._path_of_req.get(req_id)
+                if path_id is not None:
+                    self._paths[path_id].done = True
+        return expired
 
     def drain(self) -> dict[int, SolveResponse]:
         """Tick until every submitted request has completed."""

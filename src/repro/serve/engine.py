@@ -163,6 +163,13 @@ class SolveRequest:
     deadline: float | None = None  # absolute time ("deadline" policy)
     warm_from: int | None = None   # req_id whose solution becomes x0
     active_mask: np.ndarray | None = None  # (n,) freeze mask (1 = live)
+    #: Per-request stopping tolerance (None ⇒ the engine's
+    #: ``SolverConfig.tol``).  Consumed by the continuous/mesh slabs,
+    #: whose stop check reads a per-slot tolerance vector — one engine
+    #: can mix tenant tolerances (the multi-tenant serving scenario, and
+    #: what lets ``CVSpec(tol_coarse=)`` ride a shared engine).  The
+    #: wave engine compiles one tolerance per program and rejects it.
+    tol: float | None = None
 
     @property
     def spec(self) -> BatchedProblemSpec:
@@ -206,7 +213,9 @@ class SolveResponse:
     bucket: int                 # batch bucket / slab capacity served in
     #: Health verdict: "ok" for a normal completion (converged or
     #: max-iters), "diverged"/"stalled" when the numerical-health
-    #: watchdog (``ServeConfig.watchdog``) quarantined the solve.
+    #: watchdog (``ServeConfig.watchdog``) quarantined the solve,
+    #: "timeout" when the continuous engine evicted a past-deadline
+    #: request (``ContinuousSolverEngine.expire_overdue``).
     status: str = "ok"
 
 
@@ -236,6 +245,9 @@ def validate_request(i: "int | None", r: SolveRequest,
     if r.warm_from is not None and r.x0 is not None:
         raise ValueError(
             f"{where}: warm_from and x0 are mutually exclusive")
+    if r.tol is not None and not (float(r.tol) >= 0):
+        raise ValueError(
+            f"{where}: tol must be a non-negative float, got {r.tol!r}")
 
 
 class SolverServeEngine:
@@ -337,6 +349,11 @@ class SolverServeEngine:
                     f"request {i}: warm_from is a continuous-engine "
                     "feature (the wave engine keeps no per-id results "
                     "to warm from); pass x0 explicitly")
+            if r.tol is not None:
+                raise ValueError(
+                    f"request {i}: per-request tol is a continuous-"
+                    "engine feature (the wave program compiles one "
+                    "tolerance); configure SolverConfig.tol instead")
             by_spec.setdefault(spec, []).append(i)
         if arrivals is not None and len(arrivals) != len(requests):
             raise ValueError("arrivals must align with requests")

@@ -119,12 +119,13 @@ class _MeshSlab(_SlotSlab):
 
     def __init__(self, spec: BatchedProblemSpec, cfg: SolverConfig,
                  serve: ServeConfig, telemetry: MeshTelemetry,
-                 resolve_x0=None, *, n_devices: int, steal_log: list):
+                 resolve_x0=None, deadline_of=None, *,
+                 n_devices: int, steal_log: list):
         # The hooks below read these, and super().__init__ calls them.
         self.n_devices = int(n_devices)
         self.per_device_capacity = int(serve.slab_capacity)
         super().__init__(spec, cfg, serve, telemetry,
-                         resolve_x0=resolve_x0)
+                         resolve_x0=resolve_x0, deadline_of=deadline_of)
         self.routing = serve.mesh_routing
         self.steal_threshold = int(serve.steal_threshold)
         self.dev_queues = [AdmissionQueue(serve.policy)
@@ -179,6 +180,11 @@ class _MeshSlab(_SlotSlab):
     @property
     def pending(self) -> int:
         return super().pending + sum(len(q) for q in self.dev_queues)
+
+    def _queues(self) -> list[AdmissionQueue]:
+        # The timeout sweep must see requests already routed to a
+        # device queue, not just the shared front queue.
+        return [self.queue, *self.dev_queues]
 
     # -- two-level admission --------------------------------------- #
     def backfill(self, audit: list, tick: int) -> None:
@@ -332,5 +338,6 @@ class MeshServeEngine(ContinuousSolverEngine):
     def _make_slab(self, spec: BatchedProblemSpec) -> _MeshSlab:
         return _MeshSlab(spec, self.cfg, self.serve, self.telemetry,
                          resolve_x0=self._warm_solution,
+                         deadline_of=self._deadlines.get,
                          n_devices=self.n_devices,
                          steal_log=self.steal_log)

@@ -37,6 +37,14 @@ from repro.obs.ledger import CostLedger
 from repro.solvers.cache import cache_stats
 
 
+#: Wire-format version of :meth:`ServeTelemetry.snapshot`.  Bump it
+#: whenever a snapshot key changes meaning or disappears (additions are
+#: compatible); consumers (``repro.obs.dashboard --snapshot/--follow``,
+#: the remote server's ``/snapshot`` endpoint) reject snapshots whose
+#: schema they do not understand instead of mis-rendering them.
+SNAPSHOT_SCHEMA = 1
+
+
 def percentile(values, q: float):
     """Linear-interpolation percentile; ``None`` on an empty sample."""
     if not len(values):
@@ -55,8 +63,8 @@ class RequestTrace:
     iters: int = 0
     converged: bool = False
     engine: str = ""                # "wave" | "continuous"
-    #: "ok" | "diverged" | "stalled" — the watchdog quarantine verdict
-    #: (always "ok" with the watchdog off).
+    #: "ok" | "diverged" | "stalled" (watchdog quarantine verdicts) |
+    #: "timeout" (deadline eviction via ``expire_overdue``).
     status: str = "ok"
     samples: list = field(default_factory=list)  # (t, iters, stat) triples
 
@@ -133,6 +141,8 @@ class ServeTelemetry:
     # numerical-health watchdog quarantine counters (repro.obs.health)
     quarantined_diverged: int = 0
     quarantined_stalled: int = 0
+    # deadline evictions (ContinuousSolverEngine.expire_overdue)
+    timeouts: int = 0
     # sliding-window SLO metrics (repro.obs.windows): horizon in clock
     # seconds; 0 = disabled.  Opt-in because feeding windows costs
     # extra clock reads, which would perturb byte-reproducible traces
@@ -204,6 +214,15 @@ class ServeTelemetry:
         w = self.windows()
         if w is not None:
             w.add("health_events", self.now() if t is None else t, 1.0)
+
+    def record_timeout(self, t: float | None = None) -> None:
+        """One deadline eviction (``status="timeout"``).  Distinct from
+        :meth:`record_quarantine` — a timeout is a *policy* outcome, not
+        a numerical-health verdict, so it gets its own counter."""
+        self.timeouts += 1
+        w = self.windows()
+        if w is not None:
+            w.add("timeouts", self.now() if t is None else t, 1.0)
 
     def record_progress(self, req_id: int, *, iters: int, stat: float,
                         t: float | None = None) -> None:
@@ -311,6 +330,7 @@ class ServeTelemetry:
         completed = [r for r in self.requests.values()
                      if r.completed is not None]
         out = {
+            "schema": SNAPSHOT_SCHEMA,
             "requests": len(self.requests),
             "completed": len(completed),
             "in_flight": len(self.requests) - len(completed),
@@ -325,12 +345,14 @@ class ServeTelemetry:
             "ledger": self.ledger().as_dict(),
             "compile_cache": cache_stats(),
         }
-        if self.quarantined_diverged or self.quarantined_stalled:
+        if (self.quarantined_diverged or self.quarantined_stalled
+                or self.timeouts):
             out["health"] = {
                 "quarantined": (self.quarantined_diverged
                                 + self.quarantined_stalled),
                 "diverged": self.quarantined_diverged,
                 "stalled": self.quarantined_stalled,
+                "timeouts": self.timeouts,
             }
         w = self.windows()
         if w is not None:

@@ -68,6 +68,10 @@ class PathRequest:
     kkt_slack: float = DEFAULT_KKT_SLACK
     priority: int = 0
     deadline: float | None = None
+    #: Per-request stopping tolerance applied to every point of the
+    #: path (None = the engine's ``SolverConfig.tol``) — how the
+    #: client's coarse CV sweep shares one engine with exact solves.
+    tol: float | None = None
 
     @property
     def family(self) -> str:
@@ -143,7 +147,8 @@ class PathState:
             block_size=self.block_size,
             x0=(x_start * mask).astype(np.float32),
             active_mask=mask if self.preq.screen else None,
-            priority=self.preq.priority, deadline=self.preq.deadline)
+            priority=self.preq.priority, deadline=self.preq.deadline,
+            tol=self.preq.tol)
 
     def on_completion(self, resp: SolveResponse
                       ) -> SolveRequest | None:
@@ -173,7 +178,8 @@ class PathState:
                     x0=(x_hat * mask).astype(np.float32),
                     active_mask=mask,
                     priority=self.preq.priority,
-                    deadline=self.preq.deadline)
+                    deadline=self.preq.deadline,
+                    tol=self.preq.tol)
         # Point accepted.
         self.x[self.k] = x_hat
         self.iters[self.k] += int(resp.iters)

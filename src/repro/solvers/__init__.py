@@ -1,40 +1,34 @@
 """Solver substrate for the composite problem  min F(x) + G(x).
 
-The user-facing front door is now ``repro.client``
+The user-facing front door is ``repro.client``
 (:class:`~repro.client.FlexaClient` + typed specs — see
 ``docs/client.md``); this package holds the machinery the client's
-backends execute, plus the legacy entry points as one-shot-
-``FutureWarning`` shims that delegate to the client:
+backends execute.  The PR 5 legacy shims (``solve`` / ``solve_batched``)
+completed their FutureWarning deprecation cycle and are gone — the
+registry dispatch lives on as ``repro.solvers.api._solve`` and the
+batched driver as ``repro.solvers.batched._solve_batched``, both
+internal to the inline backend.
 
-    from repro.solvers import solve, solve_batched, SolverResult
-
-    r = solve(problem, method="flexa")        # shim → FlexaClient(...)
-    print(r.iters, r.history["V"][-1])        # contract unchanged
-
-* :func:`solve` — legacy facade shim (``api.py``; the registry dispatch
-  itself lives on as ``api._solve``); every method returns the same
-  :class:`SolverResult` / history contract.
-* :func:`solve_batched` — legacy shim over the batched multi-instance
-  FLEXA engine: B independent instances advance in lock-step inside one
-  compiled (vmap + while_loop) program (``batched.py``).
+* the batched multi-instance FLEXA engine: B independent instances
+  advance in lock-step inside one compiled (vmap + while_loop) program
+  (:func:`make_batched_solver`, ``batched.py``).
 * the resumable slab core (:func:`slab_alloc` / :func:`make_chunk_stepper`
   / :func:`make_slot_writer`) — what the continuous-batching runtime
-  (``repro.serve.continuous``) schedules over.
+  (``repro.serve.continuous``) schedules over; slabs carry a per-slot
+  stopping-tolerance vector so one engine can mix tenant tolerances.
 * :func:`register` / :func:`available_methods` — extend or inspect the
   method registry; :func:`cache_stats` — compile-cache counters.
 """
-from repro.solvers.api import solve
 from repro.solvers.batched import (BatchedProblemSpec, SlabState,
                                    make_batched_solver, make_chunk_stepper,
                                    make_sharded_chunk_stepper,
-                                   make_slot_writer, slab_alloc,
-                                   solve_batched)
+                                   make_slot_writer, slab_alloc)
 from repro.solvers.cache import cache_stats
 from repro.solvers.registry import available_methods, get_solver, register
 from repro.solvers.result import SolverResult
 
 __all__ = [
-    "solve", "solve_batched", "make_batched_solver", "BatchedProblemSpec",
+    "make_batched_solver", "BatchedProblemSpec",
     "SlabState", "slab_alloc", "make_chunk_stepper",
     "make_sharded_chunk_stepper", "make_slot_writer",
     "SolverResult", "register", "get_solver", "available_methods",

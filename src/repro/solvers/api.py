@@ -1,28 +1,25 @@
-"""``solve()`` — the single front door to every algorithm in the repo.
+"""Registry dispatch for every algorithm in the repo.
 
+The user-facing spelling is the client::
+
+    from repro.client import FlexaClient, SoloSpec
     from repro.problems.lasso import nesterov_instance
-    from repro.solvers import solve
 
     p = nesterov_instance(m=200, n=1000, nnz_frac=0.1, c=1.0, seed=0)
-    r = solve(p, method="flexa")              # the paper's Algorithm 1
-    r = solve(p, method="fista")              # same budget, same contract
-    r = solve(p, method="admm", rho=5.0)      # method-specific option
+    r = FlexaClient().run(SoloSpec(problem=p, method="fista")).raw
 
-All methods consume the shared budget knobs from
+:func:`_solve` here is the internal dispatch the inline backend executes
+(the old ``repro.solvers.solve`` facade, retired after its FutureWarning
+deprecation cycle).  All methods consume the shared budget knobs from
 :class:`~repro.config.base.SolverConfig` (``max_iters``, ``tol``; FLEXA
 additionally reads its ρ/γ/τ hyperparameters from it) and return a
 :class:`~repro.solvers.result.SolverResult` whose ``history`` follows one
 trajectory contract — which is what makes the Fig. 1 style solver races in
 ``benchmarks/fig1.py`` honest: one loop, one metric, any method.
-
-For many *concurrent* instances use :func:`repro.solvers.solve_batched`
-(one compiled program for B problems) instead of a Python loop over
-``solve`` calls.
 """
 from __future__ import annotations
 
 from repro.config.base import SolverConfig
-from repro.deprecation import warn_legacy
 from repro.problems.base import Problem
 from repro.solvers.registry import get_solver
 from repro.solvers.result import SolverResult
@@ -55,17 +52,3 @@ def _solve(problem: Problem, method: str = "flexa",
     result = get_solver(method)(problem, x0, cfg, **options)
     result.method = method
     return result
-
-
-def solve(problem: Problem, method: str = "flexa",
-          cfg: SolverConfig | None = None, x0=None,
-          **options) -> SolverResult:
-    """Legacy spelling of a solo workload — delegates to the client
-    (``FlexaClient().run(SoloSpec(...))``; same contract, see
-    :func:`_solve` for the parameter documentation).  Emits a one-shot
-    :class:`FutureWarning` per process."""
-    warn_legacy("repro.solvers.solve",
-                "FlexaClient().run(SoloSpec(problem, ...))")
-    from repro.client import FlexaClient, SoloSpec
-    return FlexaClient(solver=cfg).run(SoloSpec(
-        problem=problem, method=method, x0=x0, options=options)).raw

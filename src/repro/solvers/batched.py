@@ -64,7 +64,6 @@ import jax.numpy as jnp
 
 from repro.config.base import SolverConfig
 from repro.core import flexa as _flexa
-from repro.deprecation import warn_legacy
 from repro.core.flexa import FlexaState, flexa_iteration
 from repro.problems.base import Problem
 from repro.obs.health import (HealthConfig, STATUS_RUNNING,
@@ -229,6 +228,7 @@ class SlabState(NamedTuple):
     tau_base: jnp.ndarray       # (S, n)
     state: FlexaState           # stacked, leading dim S
     active: jnp.ndarray = None  # (S, n) per-slot freeze mask (1 = live)
+    tol: jnp.ndarray = None     # (S,) per-slot stopping tolerance
 
     @property
     def capacity(self) -> int:
@@ -259,7 +259,9 @@ def slab_alloc(spec: BatchedProblemSpec, cfg: SolverConfig,
     Empty slots hold benign placeholders (unit column norms / τ, zero
     data) so the chunk stepper can run them through the vmapped iteration
     and throw the result away without manufacturing NaNs; their ``stat``
-    starts at +inf, so they can never read as converged.
+    starts at +inf, so they can never read as converged.  Every slot's
+    stopping tolerance starts at ``cfg.tol``; admission may override it
+    per request (the multi-tenant mixed-tolerance path).
     """
     S = int(capacity)
     data = tuple(jnp.zeros((S,) + shp, jnp.float32)
@@ -271,7 +273,8 @@ def slab_alloc(spec: BatchedProblemSpec, cfg: SolverConfig,
         data, c, jnp.zeros((S, spec.n), jnp.float32), jnp.arange(S))
     return SlabState(data=data, c=c, col_sq=col_sq, tau_base=tau_base,
                      state=state,
-                     active=jnp.ones((S, spec.n), jnp.float32))
+                     active=jnp.ones((S, spec.n), jnp.float32),
+                     tol=jnp.full((S,), cfg.tol, jnp.float32))
 
 
 def _build_slot_writer(spec: BatchedProblemSpec, cfg: SolverConfig):
@@ -288,13 +291,15 @@ def _build_slot_writer(spec: BatchedProblemSpec, cfg: SolverConfig):
 
     @partial(jax.jit, donate_argnums=(0,))
     def write(slab: SlabState, slot, new_data, new_c, new_x0, key,
-              new_active=None):
+              new_active=None, new_tol=None):
         problem = family_problem(new_data, new_c, spec)
         inst = _flexa.init_state(problem, new_x0, cfg, key=key)
         csq = fam.col_sq(*new_data)
         tb = _tau_base(fam.half_curv(csq), cfg, spec.n)
         if new_active is None:
             new_active = jnp.ones((spec.n,), jnp.float32)
+        if new_tol is None:
+            new_tol = jnp.float32(cfg.tol)
         return SlabState(
             data=tuple(d.at[slot].set(nd.astype(d.dtype))
                        for d, nd in zip(slab.data, new_data)),
@@ -305,6 +310,7 @@ def _build_slot_writer(spec: BatchedProblemSpec, cfg: SolverConfig):
                 lambda s, v: s.at[slot].set(v.astype(s.dtype)),
                 slab.state, inst),
             active=slab.active.at[slot].set(new_active),
+            tol=slab.tol.at[slot].set(new_tol),
         )
 
     return write
@@ -370,7 +376,7 @@ def _chunk_core(spec: BatchedProblemSpec, cfg: SolverConfig,
     vtau = jax.vmap(lambda csq: _tau_base(fam.half_curv(csq), cfg, spec.n))
 
     def splice(slab: SlabState, admit, new_data, new_c, new_x0,
-               new_ids, new_active) -> SlabState:
+               new_ids, new_active, new_tol) -> SlabState:
         # Masked in-place splice of admitted rows.  The fresh per-row
         # quantities are computed for every row and selected by the
         # mask — cheaper than dynamic gathers at slab widths, and stale
@@ -392,10 +398,11 @@ def _chunk_core(spec: BatchedProblemSpec, cfg: SolverConfig,
             tau_base=jnp.where(admit[:, None], vtau(csq_new),
                                slab.tau_base),
             state=state,
-            active=jnp.where(admit[:, None], new_active, slab.active))
+            active=jnp.where(admit[:, None], new_active, slab.active),
+            tol=jnp.where(admit, new_tol, slab.tol))
 
     def core(slab: SlabState, stop, admit, new_data, new_c, new_x0,
-             new_ids, new_active):
+             new_ids, new_active, new_tol):
         # Phase 1 under a cond: the steady-state tick between evictions
         # admits nothing, and the splice's fresh-state/column-norm work
         # (~one iteration's worth of matvecs) should not be paid then.
@@ -404,18 +411,21 @@ def _chunk_core(spec: BatchedProblemSpec, cfg: SolverConfig,
         slab = jax.lax.cond(
             jnp.any(admit),
             lambda s: splice(s, admit, new_data, new_c, new_x0, new_ids,
-                             new_active),
+                             new_active, new_tol),
             lambda s: s,
             slab)
         stop = stop & ~admit
 
-        # Phase 2: K frozen-merge iterations.
+        # Phase 2: K frozen-merge iterations.  The stop check reads the
+        # slab's per-slot tolerance vector, so one slab can mix tenant
+        # tolerances; with every slot at cfg.tol the comparisons are
+        # value-identical to the scalar program.
         def body(_, carry):
             state, stop = carry
             new_state, _ = vstep(slab.data, slab.c, slab.col_sq,
                                  slab.tau_base, slab.active, state)
             merged = _freeze_done(stop, new_state, state)
-            stop = stop | (merged.stat <= cfg.tol) \
+            stop = stop | (merged.stat <= slab.tol) \
                 | (merged.k >= cfg.max_iters)
             return merged, stop
         state, stop = jax.lax.fori_loop(0, chunk_iters, body,
@@ -428,7 +438,8 @@ def _chunk_core(spec: BatchedProblemSpec, cfg: SolverConfig,
     H = int(health.stall_window)
 
     def core_health(slab: SlabState, stop, admit, new_data, new_c,
-                    new_x0, new_ids, new_active, prev_stat, stall):
+                    new_x0, new_ids, new_active, new_tol,
+                    prev_stat, stall):
         # Slots that iterate this chunk: not stopped at entry, or being
         # (re)admitted right now.  Empty slots arrive with stop=True and
         # hold +inf/NaN placeholders, so every verdict below is masked
@@ -438,7 +449,7 @@ def _chunk_core(spec: BatchedProblemSpec, cfg: SolverConfig,
         stall = jnp.where(admit, 0, stall)
 
         slab, stop_out = core(slab, stop, admit, new_data, new_c,
-                              new_x0, new_ids, new_active)
+                              new_x0, new_ids, new_active, new_tol)
 
         stat = slab.state.stat
         finite = (jnp.all(jnp.isfinite(slab.state.x), axis=-1)
@@ -492,19 +503,23 @@ def _build_chunk_stepper(spec: BatchedProblemSpec, cfg: SolverConfig,
     if health is None:
         @partial(jax.jit, donate_argnums=(0, 1))
         def chunk(slab: SlabState, stop, admit, new_data, new_c, new_x0,
-                  new_ids, new_active=None):
+                  new_ids, new_active=None, new_tol=None):
             if new_active is None:
                 new_active = jnp.ones_like(slab.active)
+            if new_tol is None:
+                new_tol = jnp.full_like(slab.c, cfg.tol)
             return core(slab, stop, admit, new_data, new_c, new_x0,
-                        new_ids, new_active)
+                        new_ids, new_active, new_tol)
     else:
-        @partial(jax.jit, donate_argnums=(0, 1, 8, 9))
+        @partial(jax.jit, donate_argnums=(0, 1, 9, 10))
         def chunk(slab: SlabState, stop, admit, new_data, new_c, new_x0,
-                  new_ids, new_active, prev_stat, stall):
+                  new_ids, new_active, new_tol, prev_stat, stall):
             if new_active is None:
                 new_active = jnp.ones_like(slab.active)
+            if new_tol is None:
+                new_tol = jnp.full_like(slab.c, cfg.tol)
             return core(slab, stop, admit, new_data, new_c, new_x0,
-                        new_ids, new_active, prev_stat, stall)
+                        new_ids, new_active, new_tol, prev_stat, stall)
 
     return chunk
 
@@ -544,9 +559,9 @@ def _build_sharded_chunk_stepper(spec: BatchedProblemSpec,
         data=tuple(row for _ in slab_data_shapes(spec)),
         c=row, col_sq=row, tau_base=row,
         state=FlexaState(*([row] * len(FlexaState._fields))),
-        active=row)
+        active=row, tol=row)
     payload_specs = (tuple(row for _ in slab_data_shapes(spec)),
-                     row, row, row, row)
+                     row, row, row, row, row)
     if health is None:
         in_specs = (slab_specs, row, row) + payload_specs
         out_specs = (slab_specs, row)
@@ -561,19 +576,23 @@ def _build_sharded_chunk_stepper(spec: BatchedProblemSpec,
     if health is None:
         @partial(jax.jit, donate_argnums=(0, 1))
         def chunk(slab: SlabState, stop, admit, new_data, new_c, new_x0,
-                  new_ids, new_active=None):
+                  new_ids, new_active=None, new_tol=None):
             if new_active is None:
                 new_active = jnp.ones_like(slab.active)
+            if new_tol is None:
+                new_tol = jnp.full_like(slab.c, cfg.tol)
             return sharded(slab, stop, admit, new_data, new_c, new_x0,
-                           new_ids, new_active)
+                           new_ids, new_active, new_tol)
     else:
-        @partial(jax.jit, donate_argnums=(0, 1, 8, 9))
+        @partial(jax.jit, donate_argnums=(0, 1, 9, 10))
         def chunk(slab: SlabState, stop, admit, new_data, new_c, new_x0,
-                  new_ids, new_active, prev_stat, stall):
+                  new_ids, new_active, new_tol, prev_stat, stall):
             if new_active is None:
                 new_active = jnp.ones_like(slab.active)
+            if new_tol is None:
+                new_tol = jnp.full_like(slab.c, cfg.tol)
             return sharded(slab, stop, admit, new_data, new_c, new_x0,
-                           new_ids, new_active, prev_stat, stall)
+                           new_ids, new_active, new_tol, prev_stat, stall)
 
     return chunk
 
@@ -625,6 +644,7 @@ def slab_migrate(slab: SlabState, slots, spec: BatchedProblemSpec,
         tau_base=move(fresh.tau_base, slab.tau_base),
         state=jax.tree_util.tree_map(move, fresh.state, slab.state),
         active=move(fresh.active, slab.active),
+        tol=move(fresh.tol, slab.tol),
     )
 
 
@@ -722,19 +742,3 @@ def _solve_batched(problems: Sequence[Problem], x0=None,
         history=hist, method="flexa_batched",
         meta={"batch": B, "family": spec.family,
               "wall_s": time.perf_counter() - t0})
-
-
-def solve_batched(problems: Sequence[Problem], x0=None,
-                  cfg: SolverConfig | None = None,
-                  record_history: bool = False,
-                  active=None) -> SolverResult:
-    """Legacy spelling of a batch workload — delegates to the client
-    (``FlexaClient().run(BatchSpec(...))``; same contract, see
-    :func:`_solve_batched` for the parameter documentation).  Emits a
-    one-shot :class:`FutureWarning` per process."""
-    warn_legacy("repro.solvers.solve_batched",
-                "FlexaClient().run(BatchSpec(problems, ...))")
-    from repro.client import BatchSpec, FlexaClient
-    return FlexaClient(solver=cfg).run(BatchSpec(
-        problems=list(problems), x0=x0, active=active,
-        record_history=record_history)).raw

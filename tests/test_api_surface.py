@@ -1,20 +1,21 @@
-"""Public-API surface snapshot + deprecation-shim contracts.
+"""Public-API surface snapshot + deprecation contracts.
 
 Three things are pinned here:
 
 1. the exact public exports of ``repro.solvers`` / ``repro.serve`` /
-   ``repro.path`` / ``repro.client`` (an intentional API change must
-   edit the snapshot — an accidental one fails loudly);
-2. every legacy entry point *delegates to the client path* (the shims
-   construct a FlexaClient and hand it the equivalent spec — verified
-   by interception, not by trusting the docstring);
-3. the one-shot FutureWarning contract: each legacy entry point warns
-   exactly once per process, and the client's own backends never
-   trigger the warnings (they run under ``deprecation.internal_use``).
+   ``repro.path`` / ``repro.client`` / ``repro.obs`` / ``repro.remote``
+   (an intentional API change must edit the snapshot — an accidental
+   one fails loudly);
+2. the legacy entry points (``solve``/``solve_batched``/``solve_path*``)
+   are **gone**: their FutureWarning deprecation cycle completed and the
+   shims were removed — ``FlexaClient`` is the front door, the
+   ``_solve*`` internals stay importable for the engine layer and tests;
+3. what remains of the warning contract: raw engine construction still
+   warns once per process, and the client's own backends never trigger
+   the warnings (they run under ``deprecation.internal_use``).
 """
 import warnings
 
-import numpy as np
 import pytest
 
 import repro.client
@@ -34,7 +35,7 @@ SURFACE = {
         "available_methods", "cache_stats", "get_solver",
         "make_batched_solver", "make_chunk_stepper",
         "make_sharded_chunk_stepper", "make_slot_writer",
-        "register", "slab_alloc", "solve", "solve_batched",
+        "register", "slab_alloc",
     ],
     "repro.serve": [
         "AdmissionQueue", "ContinuousSolverEngine", "GenerationResult",
@@ -46,8 +47,8 @@ SURFACE = {
     "repro.path": [
         "DEFAULT_KKT_SLACK", "MAX_KKT_ROUNDS", "PathResult",
         "ScreenReport", "block_scores", "geometric_grid",
-        "kkt_violations", "lambda_max", "solve_path",
-        "solve_path_batched", "strong_rule_active", "validate_grid",
+        "kkt_violations", "lambda_max", "strong_rule_active",
+        "validate_grid",
     ],
     "repro.client": [
         "Backend", "BatchResult", "BatchSpec", "CVResult", "CVSpec",
@@ -67,6 +68,12 @@ SURFACE = {
         "bitwise_equal", "get_tracer", "instant", "render_requests",
         "render_snapshot", "set_tracer", "span", "sparkline", "tracing",
     ],
+    "repro.remote": [
+        "ProtocolError", "QuotaExceeded", "QuotaPolicy", "SCHEMA",
+        "SLOClass", "SLO_CLASSES", "TenantQuota", "TokenBucket",
+        "decode_array", "decode_result", "decode_spec", "encode_array",
+        "encode_item", "encode_result", "resolve_slo",
+    ],
 }
 
 
@@ -81,93 +88,60 @@ def test_public_surface_snapshot(module):
         assert hasattr(mod, name), f"{module}.{name} exported but absent"
 
 
-# ------------------------------------------------------------------ #
-# 2. Shim delegation                                                 #
-# ------------------------------------------------------------------ #
-@pytest.fixture
-def mini():
-    return nesterov_instance(m=16, n=32, nnz_frac=0.2, c=1.0, seed=0)
+def test_remote_package_stays_lazy():
+    """``import repro.remote`` exposes only policy + protocol; the
+    server and the registered backend are imported on demand (the
+    client registry pulls ``repro.remote.backend`` the first time
+    ``backend="remote"`` is requested)."""
+    import sys
+    import repro.remote  # noqa: F401
+    assert "repro.remote.server" not in sys.modules
+    assert "repro.remote.backend" not in sys.modules
 
 
-LEGACY = [
-    (lambda p: repro.solvers.solve(p), "SoloSpec"),
-    (lambda p: repro.solvers.solve_batched([p]), "BatchSpec"),
-    (lambda p: repro.path.solve_path(p, n_points=3), "PathSpec"),
-    (lambda p: repro.path.solve_path_batched([p], n_points=3), "CVSpec"),
+# ------------------------------------------------------------------ #
+# 2. The legacy shims completed their deprecation cycle              #
+# ------------------------------------------------------------------ #
+REMOVED = [
+    ("repro.solvers", "solve"),
+    ("repro.solvers", "solve_batched"),
+    ("repro.path", "solve_path"),
+    ("repro.path", "solve_path_batched"),
 ]
 
 
-@pytest.mark.parametrize("call,spec_name",
-                         LEGACY, ids=[s for _, s in LEGACY])
-def test_legacy_entry_points_delegate_to_client(call, spec_name, mini,
-                                                monkeypatch):
-    """Intercept FlexaClient.run: each legacy call must route through
-    the client with the matching spec type."""
-    from types import SimpleNamespace
-
-    from repro.client.session import FlexaClient
-
-    seen = []
-
-    def fake_run(self, spec):
-        seen.append(type(spec).__name__)
-        return SimpleNamespace(raw="raw-sentinel",
-                               folds=["folds-sentinel"])
-
-    monkeypatch.setattr(FlexaClient, "run", fake_run)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", FutureWarning)
-        out = call(mini)
-    assert seen == [spec_name]
-    # solo/batch shims unwrap .raw, the fold sweep unwraps .folds, and
-    # the path shim returns the client's PathResult as-is.
-    assert out == "raw-sentinel" or out == ["folds-sentinel"] \
-        or getattr(out, "raw", None) == "raw-sentinel"
+@pytest.mark.parametrize("module,name", REMOVED,
+                         ids=[f"{m}.{n}" for m, n in REMOVED])
+def test_legacy_entry_points_removed(module, name):
+    """PR 5 wrapped these in one-shot FutureWarnings pointing at
+    FlexaClient; this PR removes them.  Anything still calling one
+    should fail with AttributeError, not silently bypass the client."""
+    import importlib
+    mod = importlib.import_module(module)
+    assert not hasattr(mod, name)
+    assert name not in mod.__all__
 
 
-def test_legacy_solve_returns_identical_result(mini):
-    """Delegation is transparent: the shim's answer is bitwise the
-    inline implementation's answer, full history contract included."""
+def test_internal_entry_points_still_importable():
+    """The underscore internals the shims delegated to remain — the
+    engine layer and the test suite build on them."""
+    from repro.path.driver import _solve_path, _solve_path_batched
     from repro.solvers.api import _solve
-
-    cfg = SolverConfig(max_iters=50, tol=0)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", FutureWarning)
-        shim = repro.solvers.solve(mini, cfg=cfg)
-    ref = _solve(mini, cfg=cfg)
-    np.testing.assert_array_equal(np.asarray(shim.x), np.asarray(ref.x))
-    assert shim.iters == ref.iters
-    assert len(shim.history["V"]) == len(ref.history["V"])
+    from repro.solvers.batched import _solve_batched
+    assert all(callable(f) for f in
+               (_solve, _solve_batched, _solve_path, _solve_path_batched))
 
 
 # ------------------------------------------------------------------ #
-# 3. One-shot FutureWarning                                          #
+# 3. The remaining warning contract                                  #
 # ------------------------------------------------------------------ #
 def _future_warnings(w):
     return [x for x in w if issubclass(x.category, FutureWarning)]
 
 
-def test_futurewarning_fires_exactly_once_per_entry_point(mini):
-    deprecation.reset_warnings()
-    try:
-        cfg = SolverConfig(max_iters=5, tol=0)
-        with warnings.catch_warnings(record=True) as w:
-            warnings.simplefilter("always")
-            repro.solvers.solve(mini, cfg=cfg)
-            repro.solvers.solve(mini, cfg=cfg)      # second call: silent
-        fw = _future_warnings(w)
-        assert len(fw) == 1
-        assert "repro.solvers.solve" in str(fw[0].message)
-        assert "FlexaClient" in str(fw[0].message)
-
-        # A *different* entry point still announces itself once.
-        with warnings.catch_warnings(record=True) as w:
-            warnings.simplefilter("always")
-            repro.solvers.solve_batched([mini], cfg=cfg)
-            repro.solvers.solve_batched([mini], cfg=cfg)
-        assert len(_future_warnings(w)) == 1
-    finally:
-        deprecation.reset_warnings()
+@pytest.fixture
+def mini():
+    return nesterov_instance(m=16, n=32, nnz_frac=0.2, c=1.0, seed=0)
 
 
 def test_engine_construction_warns_once(mini):

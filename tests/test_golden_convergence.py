@@ -27,7 +27,7 @@ import pytest
 
 from repro.config.base import SolverConfig
 from repro.problems.lasso import nesterov_instance
-from repro.solvers import solve
+from repro.solvers.api import _solve as solve
 
 GOLDEN_DIR = Path(__file__).resolve().parent / "golden"
 

@@ -132,7 +132,7 @@ def test_nan_injection_quarantined_first_chunk():
     assert isinstance(eng.failures[0], SolveFailure)
     snap = eng.telemetry.snapshot()
     assert snap["health"] == {"quarantined": 1, "diverged": 1,
-                              "stalled": 0}
+                              "stalled": 0, "timeouts": 0}
 
 
 def test_stall_injection_quarantined_within_patience():
@@ -273,7 +273,7 @@ def test_mesh_engine_routes_quarantines_to_device_children():
     assert resps[good].status == "ok"
     snap = eng.telemetry.snapshot()
     assert snap["health"] == {"quarantined": 1, "diverged": 1,
-                              "stalled": 0}
+                              "stalled": 0, "timeouts": 0}
     per_dev = sum(t.quarantined_diverged
                   for t in eng.telemetry.per_device)
     assert per_dev == 1                     # credited to a device child
@@ -290,7 +290,7 @@ def test_mesh_rollup_sums_quarantines():
     assert tele.quarantined_stalled == 2
     snap = tele.snapshot()
     assert snap["health"] == {"quarantined": 3, "diverged": 1,
-                              "stalled": 2}
+                              "stalled": 2, "timeouts": 0}
 
 
 # ------------------------------------------------------------------ #
@@ -382,7 +382,7 @@ GOLDEN_SNAP = {
 }
 
 GOLDEN_LINES = [
-    "health    quarantined 1   diverged 1   stalled 0",
+    "health    quarantined 1   diverged 1   stalled 0   timeouts 0",
     "windows   horizon 60s  (rate = events/s over window)",
     "  completions   n     4  rate 0.0667  p50 1  p99 1  max 1",
     "  latency       n     4  rate 0.0667  p50 1.5  p99 2.97  max 3",

@@ -240,6 +240,7 @@ def test_snapshot_schema_stability():
     tele.record_wave(bucket=2, n_real=1, iters=[5], wall_s=0.1)
     snap = tele.snapshot()
     assert set(snap) == {
+        "schema",
         "requests", "completed", "in_flight", "converged", "iters_total",
         "latency_p50", "latency_p99", "latency_mean", "latency_max",
         "queue_wait_p50", "queue_wait_p99", "ledger", "compile_cache",

@@ -24,11 +24,12 @@ import numpy as np
 import pytest
 
 from repro.config.base import SolverConfig
-from repro.path import (geometric_grid, lambda_max, solve_path,
-                        solve_path_batched, validate_grid)
+from repro.path import geometric_grid, lambda_max, validate_grid
+from repro.path.driver import (_solve_path as solve_path,
+                               _solve_path_batched as solve_path_batched)
 from repro.path.screening import kkt_violations, strong_rule_active
 from repro.problems.lasso import nesterov_instance
-from repro.solvers import solve
+from repro.solvers.api import _solve as solve
 
 GOLDEN_DIR = Path(__file__).resolve().parent / "golden"
 GOLDEN = GOLDEN_DIR / "path_lasso_V.json"

@@ -1,0 +1,224 @@
+"""Service policy as pure functions — no server, no transport, no clock.
+
+The quota/SLO layer of ``repro.remote`` is deliberately host-side pure
+state with injected time, so its behavioural contracts pin down here
+deterministically:
+
+* token-bucket refill arithmetic (monotone, capped, backwards-clock
+  safe);
+* quota admission taxonomy: ``in_flight`` vs ``rate`` rejections, their
+  counters, and atomicity (a rejection consumes nothing);
+* SLO-class resolution to the serve engines' native ``(priority,
+  absolute deadline)`` vocabulary;
+* deadline ordering: the pure EDF reference agrees with the admission
+  heap's "deadline" policy, so the classes drain in the order the docs
+  promise.
+
+Hypothesis is used when available (property: bucket never exceeds burst
+or goes negative under arbitrary take/advance sequences) and skipped
+cleanly when not.
+"""
+import pytest
+
+from repro.remote import (SLO_CLASSES, QuotaExceeded, QuotaPolicy,
+                          TenantQuota, TokenBucket, resolve_slo)
+from repro.remote.policy import deadline_order
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+# ------------------------------------------------------------------ #
+# TokenBucket                                                        #
+# ------------------------------------------------------------------ #
+class TestTokenBucket:
+    def test_starts_full(self):
+        b = TokenBucket(rate=10.0, burst=5.0)
+        assert b.tokens == 5.0
+
+    def test_burst_then_starve(self):
+        b = TokenBucket(rate=1.0, burst=3.0)
+        takes = [b.try_take(0.0) for _ in range(4)]
+        assert takes == [True, True, True, False]
+
+    def test_refill_is_rate_times_elapsed(self):
+        b = TokenBucket(rate=2.0, burst=10.0)
+        for _ in range(10):
+            assert b.try_take(0.0)
+        assert not b.try_take(0.0)
+        # 1.5 s at 2 tokens/s → 3 tokens.
+        assert b.try_take(1.5) and b.try_take(1.5) and b.try_take(1.5)
+        assert not b.try_take(1.5)
+
+    def test_refill_caps_at_burst(self):
+        b = TokenBucket(rate=100.0, burst=2.0)
+        b.try_take(0.0)
+        b.refill(1e9)
+        assert b.tokens == 2.0
+
+    def test_backwards_clock_neither_refills_nor_drains(self):
+        b = TokenBucket(rate=1.0, burst=2.0)
+        assert b.try_take(10.0) and b.try_take(10.0)
+        # Clock jumps back: no free tokens.
+        assert not b.try_take(5.0)
+        # Forward progress measured from the max timestamp seen.
+        assert b.try_take(11.0)
+
+    def test_rejects_nonpositive_config(self):
+        with pytest.raises(ValueError):
+            TokenBucket(rate=0.0, burst=1.0)
+        with pytest.raises(ValueError):
+            TokenBucket(rate=1.0, burst=-1.0)
+
+    if HAVE_HYPOTHESIS:
+        @settings(max_examples=200, deadline=None)
+        @given(st.lists(st.tuples(st.floats(0.0, 100.0),
+                                  st.booleans()), max_size=50))
+        def test_invariant_0_le_tokens_le_burst(self, events):
+            b = TokenBucket(rate=3.0, burst=7.0)
+            t = 0.0
+            for dt, take in events:
+                t += dt
+                if take:
+                    b.try_take(t)
+                else:
+                    b.refill(t)
+                assert 0.0 <= b.tokens <= b.burst
+
+
+# ------------------------------------------------------------------ #
+# QuotaPolicy                                                        #
+# ------------------------------------------------------------------ #
+class TestQuotaPolicy:
+    def test_in_flight_rejection_and_release(self):
+        pol = QuotaPolicy(TenantQuota(max_in_flight=2, rate=1e9,
+                                      burst=1e9))
+        pol.admit("t", 0.0)
+        pol.admit("t", 0.0)
+        with pytest.raises(QuotaExceeded) as ei:
+            pol.admit("t", 0.0)
+        assert ei.value.reason == "in_flight"
+        assert ei.value.tenant == "t"
+        pol.release("t")
+        pol.admit("t", 0.0)                  # slot freed → admits again
+
+    def test_rate_rejection(self):
+        pol = QuotaPolicy(TenantQuota(max_in_flight=100, rate=1.0,
+                                      burst=2.0))
+        pol.admit("t", 0.0)
+        pol.admit("t", 0.0)
+        with pytest.raises(QuotaExceeded) as ei:
+            pol.admit("t", 0.0)
+        assert ei.value.reason == "rate"
+        pol.release("t", 2)
+        pol.admit("t", 1.0)                  # 1 s at 1/s → one token back
+
+    def test_rejection_is_atomic(self):
+        """An in-flight rejection must not burn a rate token."""
+        pol = QuotaPolicy(TenantQuota(max_in_flight=1, rate=1.0,
+                                      burst=1.0))
+        pol.admit("t", 0.0)                  # burns the only token
+        for _ in range(5):
+            with pytest.raises(QuotaExceeded) as ei:
+                pol.admit("t", 1e9)          # bucket is full again...
+            assert ei.value.reason == "in_flight"
+        pol.release("t")
+        pol.admit("t", 1e9)                  # ...and still spendable
+
+    def test_tenants_are_isolated(self):
+        pol = QuotaPolicy(TenantQuota(max_in_flight=1, rate=1e9,
+                                      burst=1e9))
+        pol.admit("a", 0.0)
+        pol.admit("b", 0.0)                  # b unaffected by a's slot
+        with pytest.raises(QuotaExceeded):
+            pol.admit("a", 0.0)
+
+    def test_per_tenant_override(self):
+        pol = QuotaPolicy(TenantQuota(max_in_flight=1),
+                          per_tenant={"vip": TenantQuota(max_in_flight=3)})
+        for _ in range(3):
+            pol.admit("vip", 0.0)
+        with pytest.raises(QuotaExceeded):
+            pol.admit("anon", 0.0) or pol.admit("anon", 0.0)
+
+    def test_stats_counters(self):
+        pol = QuotaPolicy(TenantQuota(max_in_flight=1, rate=1.0,
+                                      burst=1.0))
+        pol.admit("t", 0.0)
+        with pytest.raises(QuotaExceeded):
+            pol.admit("t", 0.0)              # in_flight
+        pol.release("t")
+        with pytest.raises(QuotaExceeded):
+            pol.admit("t", 0.0)              # rate (bucket spent)
+        s = pol.stats()["t"]
+        assert s["admitted"] == 1
+        assert s["in_flight"] == 0
+        assert s["rejected"] == {"in_flight": 1, "rate": 1}
+
+    def test_release_clamps_at_zero(self):
+        pol = QuotaPolicy()
+        pol.release("t", 100)
+        assert pol.stats()["t"]["in_flight"] == 0
+
+
+# ------------------------------------------------------------------ #
+# SLO classes                                                        #
+# ------------------------------------------------------------------ #
+class TestSLO:
+    def test_classes_exist_with_documented_ordering(self):
+        assert set(SLO_CLASSES) == {"interactive", "standard", "batch"}
+        p = {n: c.priority for n, c in SLO_CLASSES.items()}
+        assert p["interactive"] > p["standard"] > p["batch"]
+        assert SLO_CLASSES["batch"].deadline_s is None
+        assert (SLO_CLASSES["interactive"].deadline_s
+                < SLO_CLASSES["standard"].deadline_s)
+
+    def test_resolve_absolute_deadline(self):
+        pr, dl = resolve_slo("interactive", now=100.0)
+        assert pr == SLO_CLASSES["interactive"].priority
+        assert dl == 100.0 + SLO_CLASSES["interactive"].deadline_s
+
+    def test_resolve_batch_has_no_deadline(self):
+        _, dl = resolve_slo("batch", now=100.0)
+        assert dl is None
+
+    def test_explicit_budget_overrides_class(self):
+        _, dl = resolve_slo("batch", now=10.0, deadline_s=0.5)
+        assert dl == 10.5
+        _, dl = resolve_slo("interactive", now=10.0, deadline_s=0.5)
+        assert dl == 10.5
+
+    def test_unknown_class_is_an_error(self):
+        with pytest.raises(ValueError, match="unknown SLO class"):
+            resolve_slo("platinum", now=0.0)
+
+    def test_deadline_order_reference(self):
+        entries = [("batch", None), ("standard", 120.0),
+                   ("interactive", 10.0), ("batch2", None),
+                   ("standard2", 120.0)]
+        ordered = [n for n, _ in deadline_order(entries)]
+        # EDF with None last; ties stable.
+        assert ordered == ["interactive", "standard", "standard2",
+                          "batch", "batch2"]
+
+    def test_admission_heap_agrees_with_reference(self):
+        """The engine's "deadline" queue policy must serve SLO classes
+        in the same order as the pure EDF reference."""
+        from repro.serve.continuous import AdmissionQueue, QueueEntry
+
+        now = 1000.0
+        names = ["batch", "interactive", "standard", "batch", "standard"]
+        resolved = [(f"{n}{i}", resolve_slo(n, now)[1])
+                    for i, n in enumerate(names)]
+
+        q = AdmissionQueue("deadline")
+        for i, (label, dl) in enumerate(resolved):
+            q.push(QueueEntry(req_id=i, request=None, arrival=float(i),
+                              deadline=dl))
+        served = [q.pop().req_id for _ in range(len(resolved))]
+        ref = [resolved.index(e) for e in deadline_order(resolved)]
+        assert served == ref

@@ -14,7 +14,7 @@ from repro.problems.svm import random_svm_instance
 from repro.serve import (AdmissionQueue, ContinuousSolverEngine,
                          QueueEntry, ServeTelemetry, SolveRequest,
                          SolverServeEngine)
-from repro.solvers import solve
+from repro.solvers.api import _solve as solve
 from repro.solvers.cache import cache_stats
 import repro.solvers.batched as B
 
@@ -548,3 +548,101 @@ def test_drain_tail_grows_back_on_new_arrivals():
     counts = Counter(rec["req_id"] for rec in eng.audit)
     assert sorted(counts) == sorted(ids)
     assert all(v == 1 for v in counts.values())
+
+
+# ------------------------------------------------------------------ #
+# Per-request tolerance (one slab, mixed tolerances)                 #
+# ------------------------------------------------------------------ #
+def test_per_request_tol_mixes_on_one_slab():
+    """Two copies of the same problem, one at a loose per-request tol,
+    share a slab: the loose one is evicted earlier (fewer iterations),
+    both stop under their own threshold — the slab-resident tol vector
+    the ROADMAP said was missing."""
+    p = nesterov_instance(m=30, n=64, nnz_frac=0.15, c=1.0, seed=0)
+    cfg = SolverConfig(max_iters=2000, tol=1e-7, tau_adapt=False)
+    eng = ContinuousSolverEngine(
+        cfg, ServeConfig(slab_capacity=2, chunk_iters=5))
+    loose = eng.submit(to_request(p, tol=1e-2))
+    tight = eng.submit(to_request(p))            # engine default 1e-7
+    resp = eng.drain()
+    assert resp[loose].converged and resp[tight].converged
+    assert resp[loose].iters < resp[tight].iters
+    assert resp[loose].stat <= 1e-2
+    assert resp[tight].stat <= 1e-7
+    # Same fixed point, up to the loose stopping accuracy.
+    np.testing.assert_allclose(np.asarray(resp[loose].x),
+                               np.asarray(resp[tight].x), atol=2e-1)
+
+
+def test_per_request_tol_default_matches_engine_tol():
+    """``tol=None`` requests behave exactly as before the refactor —
+    the per-request column defaults to the engine config's tol."""
+    p = nesterov_instance(m=24, n=64, nnz_frac=0.15, c=1.0, seed=1)
+    cfg = SolverConfig(max_iters=2000, tol=1e-6, tau_adapt=False)
+    eng = ContinuousSolverEngine(
+        cfg, ServeConfig(slab_capacity=2, chunk_iters=16))
+    rid_default = eng.submit(to_request(p))
+    rid_explicit = eng.submit(to_request(p, tol=1e-6))
+    resp = eng.drain()
+    assert resp[rid_default].iters == resp[rid_explicit].iters
+    np.testing.assert_array_equal(np.asarray(resp[rid_default].x),
+                                  np.asarray(resp[rid_explicit].x))
+
+
+# ------------------------------------------------------------------ #
+# Deadline expiry (the timeout path of the service policy)           #
+# ------------------------------------------------------------------ #
+def test_expire_overdue_queued_and_live():
+    """The deadline sweep evicts overdue work through the normal
+    eviction path: a queued victim never costs a chunk (iters=0, no
+    audit row — it was never admitted), a live victim's audit record is
+    closed with status="timeout", and the freed slot is reused."""
+    probs = [nesterov_instance(m=20, n=64, nnz_frac=0.15, c=1.0, seed=s)
+             for s in range(3)]
+    cfg = SolverConfig(max_iters=10_000, tol=-1.0, tau_adapt=False)
+    eng = ContinuousSolverEngine(
+        cfg, ServeConfig(slab_capacity=1, chunk_iters=4))
+
+    live = eng.submit(to_request(probs[0], deadline=1e5))
+    eng.step()                                   # admit into the slot
+    queued = eng.submit(to_request(probs[1], deadline=-1.0))
+
+    # Sweep at now=0: only the queued entry is overdue.
+    assert eng.expire_overdue(now=0.0) == [queued]
+    rq = eng.responses[queued]
+    assert rq.status == "timeout" and rq.iters == 0
+    assert not rq.converged and not np.isfinite(rq.stat)
+    assert queued not in {rec["req_id"] for rec in eng.audit}
+
+    # Sweep past the live request's deadline: evicted mid-flight.
+    assert eng.expire_overdue(now=2e5) == [live]
+    rl = eng.responses[live]
+    assert rl.status == "timeout" and not rl.converged
+    assert rl.iters > 0                          # it did run chunks
+    (rec,) = [r for r in eng.audit if r["req_id"] == live]
+    assert rec["status"] == "timeout"
+
+    assert [f.req_id for f in eng.failures
+            if f.status == "timeout"] == [queued, live]
+
+    # The freed slot serves new work; exactly-once audit holds.
+    ok = eng.submit(to_request(probs[2]))
+    resp = eng.drain()
+    assert resp[ok].iters == 10_000
+    counts = Counter(rec["req_id"] for rec in eng.audit)
+    assert all(v == 1 for v in counts.values())
+
+    snap = eng.telemetry.snapshot()
+    assert snap["schema"] == 1
+    assert snap["health"]["timeouts"] == 2
+
+
+def test_expire_overdue_without_deadlines_is_a_no_op():
+    probs = FAMILY_BATCHES["lasso"]()[:2]
+    cfg = SolverConfig(max_iters=50, tol=-1.0, tau_adapt=False)
+    eng = ContinuousSolverEngine(
+        cfg, ServeConfig(slab_capacity=2, chunk_iters=16))
+    ids = [eng.submit(to_request(p)) for p in probs]
+    assert eng.expire_overdue(now=1e18) == []
+    resp = eng.drain()
+    assert sorted(resp) == sorted(ids)

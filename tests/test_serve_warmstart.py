@@ -17,10 +17,10 @@ import numpy as np
 import pytest
 
 from repro.config.base import ServeConfig, SolverConfig
-from repro.path import solve_path
+from repro.path.driver import _solve_path as solve_path
 from repro.problems.lasso import nesterov_instance
 from repro.serve import ContinuousSolverEngine, PathRequest, SolveRequest
-from repro.solvers import solve
+from repro.solvers.api import _solve as solve
 
 CFG = SolverConfig(tol=1e-7, max_iters=3000, tau_adapt=False)
 

@@ -8,8 +8,9 @@ from repro.config.base import SolverConfig
 from repro.problems.lasso import nesterov_instance
 from repro.problems.logreg import random_logreg_instance
 from repro.problems.svm import random_svm_instance
-from repro.solvers import (available_methods, solve, solve_batched,
-                           SolverResult)
+from repro.solvers import available_methods, SolverResult
+from repro.solvers.api import _solve as solve
+from repro.solvers.batched import _solve_batched as solve_batched
 
 FIVE_METHODS = ("flexa", "fista", "admm", "grock", "gauss_seidel")
 
